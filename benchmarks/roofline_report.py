@@ -1,0 +1,76 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads experiments/dryrun/<mesh>/*.json and emits (a) CSV rows via the
+benchmark contract and (b) a markdown table at experiments/roofline.md that
+EXPERIMENTS.md embeds."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import record
+
+BASE = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "experiments")
+
+
+def load_cells(mesh: str) -> List[Dict]:
+    d = os.path.join(BASE, "dryrun", mesh)
+    if not os.path.isdir(d):
+        return []
+    cells = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                cells.append(json.load(fh))
+    return cells
+
+
+def bottleneck_hint(cell: Dict) -> str:
+    rl = cell["roofline"]
+    dom = rl["dominant"]
+    if dom == "collective":
+        return "reduce collective volume (sharding/compression/overlap)"
+    if dom == "memory":
+        if cell["shape"].startswith("decode"):
+            return "KV-cache traffic bound: quantize cache / batch heads"
+        return "activation+logit traffic: fuse loss, selective remat"
+    return "MXU-bound: raise arithmetic intensity / reduce padding waste"
+
+
+def run_all() -> None:
+    rows = []
+    for cell in load_cells("16x16"):
+        if cell.get("status") != "ok":
+            continue
+        rl = cell["roofline"]
+        name = f"roofline_{cell['arch']}_{cell['shape']}"
+        derived = (
+            f"c={rl['compute_s']:.3g}s;m={rl['memory_s']:.3g}s;"
+            f"x={rl['collective_s']:.3g}s;dom={rl['dominant']};"
+            f"mfu={rl['mfu']:.3f};useful={rl['useful_flops_fraction']:.2f}"
+        )
+        record(name, rl["step_time_s"] * 1e6, derived)
+        rows.append(cell)
+
+    # markdown table
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | MFU bound | GiB/device | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for cell in rows:
+        rl = cell["roofline"]
+        mem = cell["memory"]["peak_estimate_bytes"] / 2**30
+        lines.append(
+            f"| {cell['arch']} | {cell['shape']} | {rl['compute_s']:.4g} | "
+            f"{rl['memory_s']:.4g} | {rl['collective_s']:.4g} | {rl['dominant']} | "
+            f"{rl['useful_flops_fraction']:.2f} | {rl['mfu']:.3f} | {mem:.1f} | "
+            f"{bottleneck_hint(cell)} |"
+        )
+    os.makedirs(BASE, exist_ok=True)
+    with open(os.path.join(BASE, "roofline.md"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    n_multi = sum(1 for c in load_cells("2x16x16") if c.get("status") == "ok")
+    record("dryrun_multipod_cells_ok", 0.0, f"count={n_multi}")

@@ -1,0 +1,44 @@
+"""The paper's logistic-regression experiment (§7, Fig. 8 right) with dynamic
+load balancing: HIGGS-like data, 16 workers, DSAG vs DSAG-LB vs SAG.
+
+  PYTHONPATH=src python examples/logreg_higgs.py
+"""
+
+import numpy as np
+
+from repro.cluster.simulator import MethodConfig, TrainingSimulator
+from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+from repro.latency.model import clear_slowdowns, make_paper_artificial_cluster
+
+
+def main() -> None:
+    X, y = make_higgs_like(16384, seed=0)
+    problem = LogisticRegressionProblem(X=X, y=y)  # lambda = 1/n, as the paper
+    N, SP = 16, 10
+    c_task = problem.compute_cost(1, problem.num_samples // (N * SP))
+
+    def run(name, w, iters, eta, lb=False):
+        cluster = make_paper_artificial_cluster(num_workers=N, load_unit=c_task, seed=1)
+        events = [(1.0, lambda c: clear_slowdowns(c, range(N - 4, N)))]
+        cfg = MethodConfig(name=name, w=w, eta=eta, subpartitions=SP, load_balance=lb)
+        sim = TrainingSimulator(problem, cluster, cfg, eval_every=25,
+                                timed_events=events, seed=0)
+        h = sim.run(iters)
+        gap = h.suboptimality[np.isfinite(h.suboptimality)][-1]
+        tag = name + ("-lb" if lb else "")
+        print(f"  {tag:8s} w={w:3d}: gap {gap:.2e}  sim {h.times[-1]:.2f} s  "
+              f"repartitions={len(h.repartition_events)}")
+        return h
+
+    print(f"Logistic regression, n={problem.num_samples}, N={N} workers:")
+    h_sagN = run("sag", N, 1200, 0.25)
+    run("sag", 4, 1200, 0.25)
+    h = run("dsag", 4, 1200, 0.25)
+    h_lb = run("dsag", 4, 1200, 0.25, lb=True)
+    gap = 1e-4
+    print(f"\ntime to {gap:.0e} gap: SAG(w=N) {h_sagN.time_to_gap(gap):.2f} s, "
+          f"DSAG {h.time_to_gap(gap):.2f} s, DSAG-LB {h_lb.time_to_gap(gap):.2f} s")
+
+
+if __name__ == "__main__":
+    main()

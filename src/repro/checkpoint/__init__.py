@@ -1,0 +1,15 @@
+"""Fault-tolerant checkpointing."""
+
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_checkpoint",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

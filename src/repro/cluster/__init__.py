@@ -1,0 +1,11 @@
+"""Simulated distributed cluster (Tier 3): the paper's coordinator/worker
+protocol run in event time over the §3 latency model, with real JAX compute
+for every subgradient."""
+
+from repro.cluster.simulator import (
+    MethodConfig,
+    TrainingSimulator,
+    RunHistory,
+)
+
+__all__ = ["MethodConfig", "TrainingSimulator", "RunHistory"]

@@ -1,0 +1,348 @@
+"""Event-time simulation of the paper's distributed methods (§5, §7).
+
+Workers follow the two-state busy/idle model of §4.2 with a length-1 FILO
+task queue; the coordinator implements GD, ignoring-stragglers SGD, SAG
+(w <= N), DSAG (stale integration + 2% margin), and the idealized-MDS coded
+computing bound of §7.1.  Per-task *latency* is sampled from the §3 gamma
+model; per-task *values* are real subgradients computed with JAX.
+
+Load balancing (§6) plugs in as: profiler samples recorded at each task
+completion -> Algorithm-1 optimizer invoked periodically in the background
+(simulated as an interval + a startup delay matching the paper's 0.5-7 s
+first-solution time) -> new subpartition counts shipped with the next task ->
+Algorithm-2 alignment at the worker.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.gradient_cache import GradientCache
+from repro.core.problems import FiniteSumProblem
+from repro.latency.model import ClusterLatencyModel
+from repro.latency.profiler import LatencyProfiler, LatencySample
+from repro.lb.optimizer import LoadBalanceOptimizer, OptimizerInputs
+from repro.lb.partitioner import Subpartitioner, p_start, p_stop
+
+
+@dataclasses.dataclass
+class MethodConfig:
+    """One method/configuration of paper §7."""
+
+    name: str  # gd | sgd | sag | dsag | coded
+    w: int = 0  # wait-for-w (ignored by gd/coded)
+    eta: float = 0.9
+    margin: float = 0.02  # post-w extra wait (paper §5.1); dsag/lb methods
+    subpartitions: int = 1  # initial p_i (paper: 100 for PCA, 10 for logreg)
+    code_rate: float = 45.0 / 49.0  # coded only
+    load_balance: bool = False
+    lb_interval: float = 1.0  # how often the optimizer publishes (sim s)
+    lb_startup_delay: float = 0.5  # first-solution delay (paper: 0.5-7 s)
+
+    def __post_init__(self):
+        if self.name not in ("gd", "sgd", "sag", "dsag", "coded"):
+            raise ValueError(f"unknown method {self.name}")
+
+    @property
+    def uses_cache(self) -> bool:
+        return self.name in ("sag", "dsag")
+
+    @property
+    def accepts_stale(self) -> bool:
+        return self.name == "dsag"
+
+    @property
+    def uses_margin(self) -> bool:
+        return self.name == "dsag" or self.load_balance
+
+
+@dataclasses.dataclass
+class RunHistory:
+    times: np.ndarray  # [T] completion time of each iteration (sim s)
+    suboptimality: np.ndarray  # [T] gap after each iteration (subsampled = nan)
+    fresh_counts: np.ndarray  # [T]
+    per_worker_latency: np.ndarray  # [T, N] latency of last task completed (nan if none)
+    repartition_events: List[float]  # sim times at which a new p was published
+    evictions: int = 0
+    rejected_stale: int = 0
+
+    def time_to_gap(self, gap: float) -> float:
+        """First sim time at which suboptimality <= gap (inf if never)."""
+        ok = np.where(np.nan_to_num(self.suboptimality, nan=np.inf) <= gap)[0]
+        return float(self.times[ok[0]]) if len(ok) else float("inf")
+
+
+@dataclasses.dataclass
+class _Task:
+    iteration: int
+    iterate: np.ndarray
+    assigned_at: float
+
+
+class _SimWorker:
+    """Two-state worker with a length-1 FILO task queue (paper §4.2)."""
+
+    def __init__(self, idx: int, sub: Subpartitioner):
+        self.idx = idx
+        self.sub = sub
+        self.busy_until = 0.0
+        self.queued: Optional[_Task] = None
+        self.pending_p: Optional[int] = None  # LB update applied at next task
+
+    def start_task(
+        self,
+        task: _Task,
+        now: float,
+        problem: FiniteSumProblem,
+        cluster: ClusterLatencyModel,
+        process_full_block: bool,
+        comp_scale: float,
+    ) -> Tuple[float, Tuple]:
+        """Begin processing; returns (finish_time, result tuple)."""
+        if self.pending_p is not None:
+            self.sub.repartition(self.pending_p)  # Algorithm-2 alignment
+            self.pending_p = None
+        if process_full_block:
+            interval = (self.sub.base_start, self.sub.base_stop)
+        else:
+            interval = self.sub.next_interval_and_advance()
+        start, stop = interval
+        value = problem.subgradient(task.iterate, start, stop)
+        cost = problem.compute_cost(start, stop) * comp_scale
+        wk = cluster.workers[self.idx]
+        comp_lat = wk.sample_comp(cost, cluster.rng, now=now)
+        comm_lat = wk.sample_comm(cluster.rng)
+        finish = now + comp_lat + comm_lat
+        self.busy_until = finish
+        result = (self.idx, interval, task.iteration, value, comp_lat, comm_lat, task.assigned_at)
+        return finish, result
+
+
+class TrainingSimulator:
+    """Run one method to completion and record its convergence trace."""
+
+    def __init__(
+        self,
+        problem: FiniteSumProblem,
+        cluster: ClusterLatencyModel,
+        config: MethodConfig,
+        *,
+        cost_scale: float = 1.0,
+        eval_every: int = 1,
+        timed_events: Optional[List[Tuple[float, Callable]]] = None,
+        seed: int = 0,
+    ):
+        self.problem = problem
+        self.cluster = cluster
+        self.config = config
+        self.cost_scale = cost_scale
+        self.eval_every = eval_every
+        #: (sim_time, fn(cluster)) hooks, e.g. the §7.2 artificial
+        #: slowdown-removal at t=1 s
+        self.timed_events = sorted(timed_events or [], key=lambda e: e[0])
+        self.seed = seed
+        n = problem.num_samples
+        N = cluster.num_workers
+        self.workers = [
+            _SimWorker(
+                i,
+                Subpartitioner(
+                    base_start=p_start(n, N, i + 1),
+                    base_stop=p_stop(n, N, i + 1),
+                    p=config.subpartitions,
+                ),
+            )
+            for i in range(N)
+        ]
+        self.profiler = LatencyProfiler(N, window=10.0)
+        self.lb_optimizer = LoadBalanceOptimizer(seed=seed) if config.load_balance else None
+        self._next_lb_time = config.lb_startup_delay if config.load_balance else math.inf
+
+    # -- per-method gradient-estimate assembly -----------------------------
+    def _effective_w(self) -> int:
+        c = self.config
+        N = self.cluster.num_workers
+        if c.name == "gd":
+            return N
+        if c.name == "coded":
+            return int(math.ceil(c.code_rate * N))
+        return min(c.w if c.w > 0 else N, N)
+
+    def run(self, num_iterations: int) -> RunHistory:
+        cfg = self.config
+        problem = self.problem
+        N = self.cluster.num_workers
+        n = problem.num_samples
+        w_wait = self._effective_w()
+        comp_scale = self.cost_scale * (
+            1.0 / cfg.code_rate if cfg.name == "coded" else 1.0
+        )
+        process_full = cfg.name in ("gd", "coded")
+
+        V = problem.init(self.seed)
+        cache = (
+            GradientCache(n, np.zeros_like(V, dtype=np.float64))
+            if cfg.uses_cache
+            else None
+        )
+
+        now = 0.0
+        heap: List[Tuple[float, int, Tuple]] = []  # (finish, seq, result)
+        seq = 0
+        times = np.zeros(num_iterations)
+        subopt = np.full(num_iterations, np.nan)
+        fresh_counts = np.zeros(num_iterations, dtype=np.int64)
+        lat_matrix = np.full((num_iterations, N), np.nan)
+        repartition_events: List[float] = []
+        event_ptr = 0
+        current_p = np.full(N, cfg.subpartitions, dtype=np.int64)
+
+        for t in range(num_iterations):
+            # fire timed environment events (e.g. §7.2 slowdown removal)
+            while event_ptr < len(self.timed_events) and self.timed_events[event_ptr][0] <= now:
+                self.timed_events[event_ptr][1](self.cluster)
+                event_ptr += 1
+
+            task = _Task(iteration=t, iterate=V, assigned_at=now)
+            for wk in self.workers:
+                if wk.busy_until <= now:
+                    fin, result = wk.start_task(
+                        task, now, problem, self.cluster, process_full, comp_scale
+                    )
+                    heapq.heappush(heap, (fin, seq, result))
+                    seq += 1
+                else:
+                    wk.queued = task
+
+            fresh = 0
+            fresh_values: List[Tuple[Tuple[int, int], np.ndarray]] = []  # sgd
+            deadline = math.inf
+            iter_start = now
+            while heap and (fresh < w_wait or heap[0][0] <= deadline):
+                fin, _, result = heapq.heappop(heap)
+                if fin > deadline:
+                    heapq.heappush(heap, (fin, _, result))
+                    break
+                now = fin
+                (widx, interval, titer, value, comp_lat, comm_lat, assigned_at) = result
+                wk = self.workers[widx]
+                lat_matrix[t, widx] = comp_lat + comm_lat
+                self.profiler.record(
+                    LatencySample(
+                        worker=widx,
+                        t_recorded=now,
+                        round_trip=now - assigned_at,
+                        compute=comp_lat,
+                        load=problem.compute_cost(*interval) * comp_scale,
+                    )
+                )
+                # start queued task immediately (FILO queue of length 1)
+                if wk.queued is not None:
+                    qt = wk.queued
+                    wk.queued = None
+                    nfin, nresult = wk.start_task(
+                        qt, now, problem, self.cluster, process_full, comp_scale
+                    )
+                    heapq.heappush(heap, (nfin, seq, nresult))
+                    seq += 1
+                else:
+                    wk.busy_until = now
+
+                is_fresh = titer == t
+                if cfg.uses_cache:
+                    if is_fresh or cfg.accepts_stale:
+                        cache.insert(interval[0], interval[1], titer, value)
+                elif is_fresh:  # gd / sgd / coded take fresh results only
+                    fresh_values.append((interval, value))
+                if is_fresh:
+                    fresh += 1
+                    if fresh == w_wait:
+                        if cfg.uses_margin and cfg.margin > 0:
+                            # paper §5.1: wait 2% longer than the time it took
+                            # to collect the w-th fresh result this iteration
+                            deadline = now + cfg.margin * (now - iter_start)
+                        else:
+                            break
+
+            # ---- iterate update -------------------------------------------
+            if cfg.uses_cache:
+                xi = max(cache.coverage, 1e-12)
+                grad = cache.sum / xi + problem.regularizer_grad(V)
+            elif cfg.name == "coded":
+                # Idealized MDS bound (§7.1): the exact gradient is recovered
+                # from any ceil(rN) results with zero decoding cost — the
+                # arrival wait above only determines the *latency*.
+                grad = problem.subgradient(V, 1, n).astype(np.float64)
+                grad = grad + problem.regularizer_grad(V)
+            elif cfg.name == "gd":
+                grad = np.zeros_like(V, dtype=np.float64)
+                for _, val in fresh_values:
+                    grad += val
+                grad = grad + problem.regularizer_grad(V)
+            else:  # sgd: scale the partial sum by observed coverage
+                covered = sum(iv[1] - iv[0] + 1 for iv, _ in fresh_values)
+                xi = max(covered / n, 1e-12)
+                grad = np.zeros_like(V, dtype=np.float64)
+                for _, val in fresh_values:
+                    grad += val
+                grad = grad / xi + problem.regularizer_grad(V)
+            V = problem.project(
+                (V - cfg.eta * grad).astype(V.dtype, copy=False)
+            )
+
+            times[t] = now
+            fresh_counts[t] = fresh
+            if t % self.eval_every == 0 or t == num_iterations - 1:
+                subopt[t] = problem.suboptimality(V)
+
+            # ---- load balancing (background loop, simulated) ---------------
+            if cfg.load_balance and now >= self._next_lb_time:
+                published = self._run_load_balancer(now, current_p, w_wait)
+                if published is not None:
+                    current_p = published
+                    repartition_events.append(now)
+                self._next_lb_time = now + cfg.lb_interval
+
+        return RunHistory(
+            times=times,
+            suboptimality=subopt,
+            fresh_counts=fresh_counts,
+            per_worker_latency=lat_matrix,
+            repartition_events=repartition_events,
+            evictions=cache.evictions if cache else 0,
+            rejected_stale=cache.rejected_stale if cache else 0,
+        )
+
+    def _run_load_balancer(
+        self, now: float, current_p: np.ndarray, w_wait: int
+    ) -> Optional[np.ndarray]:
+        stats = self.profiler.all_stats(now)
+        N = self.cluster.num_workers
+        if len(stats) < N:
+            return None  # need at least one window sample per worker
+        e_comm = np.array([stats[i].e_comm for i in range(N)])
+        v_comm = np.array([max(stats[i].v_comm, 1e-18) for i in range(N)])
+        e_comp = np.array([stats[i].e_comp for i in range(N)])
+        v_comp = np.array([max(stats[i].v_comp, 1e-18) for i in range(N)])
+        n_i = np.array([w.sub.n_local for w in self.workers], dtype=np.float64)
+        inputs = OptimizerInputs(
+            e_comm=e_comm,
+            v_comm=v_comm,
+            e_comp=e_comp,
+            v_comp=v_comp,
+            samples_per_worker=n_i,
+            w=w_wait,
+            margin=self.config.margin,
+        )
+        p_new = self.lb_optimizer.optimize(current_p, inputs)
+        if not self.lb_optimizer.should_publish(current_p, p_new, inputs):
+            return None
+        for i, wk in enumerate(self.workers):
+            if p_new[i] != current_p[i]:
+                wk.pending_p = int(p_new[i])
+        return p_new

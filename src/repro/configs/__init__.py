@@ -1,0 +1,107 @@
+"""Config registry: ``get_config(arch)`` / ``get_smoke_config(arch)`` plus
+``input_specs`` building ShapeDtypeStruct stand-ins for every model input of
+an (arch x shape) cell — weak-type-correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, MeshConfig, ModelConfig, ShapeConfig, TrainConfig
+
+_MODULES: Dict[str, str] = {
+    "whisper-base": "repro.configs.whisper_base",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).smoke_config()
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k runs only for sub-quadratic (SSM/hybrid) archs."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False
+    return True
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Optional[Mesh] = None,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one cell (training batch or prefill batch).
+
+    Decode-cell *cache* stand-ins come from ``Model.cache_abstract``."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def sharded(shp, dtype, spec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=NamedSharding(mesh, spec)
+        )
+
+    dp = (
+        tuple(a for a in (mesh.axis_names if mesh else ()) if a in ("pod", "data"))
+        or None
+    )
+    dp = dp if dp is None or len(dp) > 1 else dp[0]
+
+    if shape.kind == "decode":
+        out = {"tokens": sharded((b, 1), jnp.int32, P(dp, None))}
+        return out
+
+    if cfg.family == "enc_dec":
+        return {
+            "tokens": sharded((b, s), jnp.int32, P(dp, None)),
+            "audio_embed": sharded(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16, P(dp, None, None)
+            ),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": sharded((b, s - cfg.num_image_tokens), jnp.int32, P(dp, None)),
+            "image_embed": sharded(
+                (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16, P(dp, None, None)
+            ),
+        }
+    return {"tokens": sharded((b, s), jnp.int32, P(dp, None))}
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "MeshConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "cell_is_runnable",
+    "get_config",
+    "get_smoke_config",
+    "input_specs",
+]

@@ -1,0 +1,26 @@
+"""The paper's primary contribution: DSAG and its supporting machinery.
+
+- :mod:`repro.core.gradient_cache` — the §5 interval-keyed subgradient cache.
+- :mod:`repro.core.problems` — the paper's finite-sum problems (PCA, logreg).
+- :mod:`repro.core.dsag_pjit` — Tier-1 distributed DSAG for pjit training
+  at pod scale (masked delta all-reduce form).
+"""
+
+from repro.core.gradient_cache import CacheEntry, GradientCache
+from repro.core.problems import (
+    FiniteSumProblem,
+    LogisticRegressionProblem,
+    PCAProblem,
+    make_genomics_like_matrix,
+    make_higgs_like,
+)
+
+__all__ = [
+    "CacheEntry",
+    "GradientCache",
+    "FiniteSumProblem",
+    "LogisticRegressionProblem",
+    "PCAProblem",
+    "make_genomics_like_matrix",
+    "make_higgs_like",
+]

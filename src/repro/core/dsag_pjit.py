@@ -1,0 +1,388 @@
+"""DSAG as a compiled multi-pod training step (Tier 1).
+
+Partitions ↔ groups of data-parallel replicas.  Per-group gradients are
+exposed by ``vmap``-ing the loss gradient over a leading group dim whose
+sharding maps onto the DP mesh axes.  The DSAG cache update is the SAG
+incremental form
+
+    H  <- H + Σ_i m_i (g_i - c_i)          (one masked delta all-reduce)
+    c_i <- m_i ? g_i : c_i
+    ξ   <- coverage(filled groups)
+
+and the iterate update uses  Ĥ = H / (ξ P)  in place of the exact mean
+gradient (paper Eq. 6).  Stale integration is step-granular: a group whose
+result missed the deadline (mask 0) parks its gradient in a *pending* slot;
+the Tier-2 coordinator later sets its *flush* bit and the pending gradient
+(computed from an older iterate) replaces the cache entry — exactly the
+paper's cache rule, with staleness dominance enforced by Tier-2 timestamps.
+
+The mask/flush bits are step INPUTS: on a real deployment Tier 2 derives them
+from per-group deadlines (w-of-P + the 2% margin, paper §5.1); in tests they
+are scripted.  Memory knobs for 100B+ models: int8 per-row-scaled cache
+(``optim/compression.py``) and pod-granularity groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.optim.compression import Quantized, dequantize, quantize
+from repro.optim.optimizers import (
+    Optimizer,
+    apply_updates,
+    clip_by_global_norm,
+    make_optimizer,
+)
+
+
+# ---------------------------------------------------------------------------
+# Group geometry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    num_groups: int
+    axes: Tuple[str, ...]  # mesh axes the group dim is sharded over ((),) = repl.
+
+    @property
+    def group_partition(self):
+        if not self.axes:
+            return None
+        return self.axes if len(self.axes) > 1 else self.axes[0]
+
+
+def make_group_spec(tc: TrainConfig, mesh: Optional[Mesh]) -> GroupSpec:
+    if mesh is None:  # single-device tests: any P, replicated
+        return GroupSpec(num_groups=1 if not tc.dsag else 4, axes=())
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if not tc.dsag or tc.dsag_groups == "none":
+        return GroupSpec(1, ())
+    if tc.dsag_groups == "pod" and "pod" in sizes:
+        return GroupSpec(sizes["pod"], ("pod",))
+    if tc.dsag_groups == "zero":
+        # group dim unsharded, cache/pending param dims ZeRO-sharded over all
+        # axes via param_specs; groups are time-sliced (see DESIGN.md §6)
+        return GroupSpec(tc.dsag_num_groups, ())
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    n = 1
+    for a in dp_axes:
+        n *= sizes[a]
+    return GroupSpec(n, dp_axes)
+
+
+# ---------------------------------------------------------------------------
+# DSAG state
+# ---------------------------------------------------------------------------
+
+
+def _cache_like(param_abstract, gs: GroupSpec, dtype: str):
+    """Abstract cache slot tree: leading group dim on every leaf."""
+
+    def leaf(a):
+        shape = (gs.num_groups,) + a.shape
+        if dtype == "int8":
+            block = a.shape[-1] if a.shape else 1  # per-row scales (DESIGN §6)
+            nblocks = max((shape[-1] + block - 1) // block, 1)
+            return Quantized(
+                q=jnp.zeros(shape, jnp.int8),
+                scale=jnp.zeros(shape[:-1] + (nblocks,), jnp.bfloat16),
+                block=block,
+            )
+        return jnp.zeros(shape, jnp.bfloat16)
+
+    return jax.tree.map(leaf, param_abstract)
+
+
+def init_dsag_state(params_like, gs: GroupSpec, tc: TrainConfig):
+    zeros_like = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    return {
+        "cache": _cache_like(params_like, gs, tc.dsag_cache_dtype),
+        "pending": _cache_like(params_like, gs, tc.dsag_cache_dtype),
+        "pending_valid": jnp.zeros((gs.num_groups,), jnp.bool_),
+        "filled": jnp.zeros((gs.num_groups,), jnp.bool_),
+        "h": zeros_like(params_like),
+    }
+
+
+def _store(x: jnp.ndarray, like) -> Any:
+    """Encode a [P, ...] fp32 tensor into the cache representation."""
+    if isinstance(like, Quantized):
+        return quantize(x, block=like.block)
+    return x.astype(jnp.bfloat16)
+
+
+def _load(c) -> jnp.ndarray:
+    if isinstance(c, Quantized):
+        return dequantize(c, jnp.float32)
+    return c.astype(jnp.float32)
+
+
+def _is_slot(x) -> bool:
+    return isinstance(x, (Quantized, jnp.ndarray)) or hasattr(x, "shape")
+
+
+def _bmask(m, x):
+    """Broadcast a [P] mask against [P, ...]."""
+    return m.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# The DSAG update (pure function over pytrees)
+# ---------------------------------------------------------------------------
+
+
+def dsag_update(dsag, group_grads, mask, flush, evict=None):
+    """Apply the DSAG cache rule.
+
+    group_grads: tree of [P, ...] per-group gradients (fp32)
+    mask, flush: [P] bool step inputs from Tier 2.
+    evict:       [P] bool — failed groups whose cache entry must leave H
+                 (the paper's §6.3 cache eviction; ξ shrinks, DSAG proceeds).
+    Returns (new_dsag, h_hat, xi)."""
+    p = mask.shape[0]
+    if evict is None:
+        evict = jnp.zeros_like(mask)
+    mask = jnp.logical_and(mask, ~evict)
+    mask_f = mask.astype(jnp.float32)
+    # a flush is only meaningful if the slot was pending and not fresh now
+    eff_flush = jnp.logical_and(flush, jnp.logical_and(~mask, dsag["pending_valid"]))
+    flush_f = eff_flush.astype(jnp.float32)
+
+    is_leaf = lambda x: isinstance(x, Quantized)
+
+    def leaf_update(g, c, pend):
+        c_f = _load(c)
+        p_f = _load(pend)
+        mf = _bmask(mask_f, g)
+        ff = _bmask(flush_f, g)
+        new_val = mf * g.astype(jnp.float32) + ff * p_f + (1.0 - mf - ff) * c_f
+        new_val = new_val * (1.0 - _bmask(evict.astype(jnp.float32), g))
+        # the delta entering H uses the *stored* (rounded/quantized) value so
+        # the SAG invariant H == Σ_i cache_i holds exactly under compression
+        stored = _store(new_val, c)
+        new_val = _load(stored)
+        delta_sum = ((new_val - c_f)).sum(axis=0)  # Σ_i applied deltas
+        # pending: keep oldest in-flight unless fresh/flushed this step
+        take_new = jnp.logical_or(
+            jnp.logical_or(mask, eff_flush), ~dsag["pending_valid"]
+        ).astype(jnp.float32)
+        tf = _bmask(take_new, g)
+        new_pend = tf * g.astype(jnp.float32) + (1.0 - tf) * p_f
+        return stored, _store(new_pend, pend), delta_sum
+
+    flat_g, tdef = jax.tree.flatten(group_grads)
+    flat_c = tdef.flatten_up_to(dsag["cache"])
+    flat_p = tdef.flatten_up_to(dsag["pending"])
+    outs = [leaf_update(g, c, pe) for g, c, pe in zip(flat_g, flat_c, flat_p)]
+    new_cache = tdef.unflatten([o[0] for o in outs])
+    new_pending = tdef.unflatten([o[1] for o in outs])
+    deltas = tdef.unflatten([o[2] for o in outs])
+
+    new_h = jax.tree.map(lambda h, d: h + d.astype(jnp.float32), dsag["h"], deltas)
+    arrived = jnp.logical_or(mask, eff_flush)
+    new_filled = jnp.logical_and(
+        jnp.logical_or(dsag["filled"], arrived), ~evict
+    )
+    new_pending_valid = jnp.where(
+        arrived, True, jnp.logical_or(dsag["pending_valid"], ~mask)
+    )
+    # after a fresh arrival nothing is in flight; after flush the current
+    # step's (masked-out) gradient is in flight again
+    new_pending_valid = jnp.where(mask, False, new_pending_valid)
+
+    xi = jnp.clip(new_filled.astype(jnp.float32).mean(), 1e-6, 1.0)
+    h_hat = jax.tree.map(lambda h: h / (xi * p), new_h)
+    new_dsag = {
+        "cache": new_cache,
+        "pending": new_pending,
+        "pending_valid": new_pending_valid,
+        "filled": new_filled,
+        "h": new_h,
+    }
+    return new_dsag, h_hat, xi
+
+
+# ---------------------------------------------------------------------------
+# Train step factory
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    tc: TrainConfig,
+    gs: GroupSpec,
+    mesh: Optional[Mesh] = None,
+    param_specs: Optional[Any] = None,
+):
+    """Build ``step(state, batch, mask, flush) -> (state, metrics)``.
+
+    ``loss_fn(params, batch)`` is the per-group mean loss; ``batch`` arrives
+    with a leading group dim [P, ...] on every leaf."""
+    opt = make_optimizer(tc)
+
+    def constrain_grads(grads):
+        """Per-group grads live on their group's devices, ZeRO-sharded over
+        the remaining axes (reduce-scatter happens inside the backward)."""
+        if mesh is None or param_specs is None:
+            return grads
+        gaxes = gs.group_partition
+
+        def leaf(g, spec):
+            from repro.models.sharding import strip_axis
+
+            tail = spec
+            for a in gs.axes:  # group axes cannot repeat in the param dims
+                tail = strip_axis(tail, a)
+            return jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, P(gaxes, *tuple(tail)))
+            )
+
+        return jax.tree.map(
+            leaf, grads, param_specs, is_leaf=lambda x: hasattr(x, "shape")
+        )
+
+    def step(state, batch, mask, flush, evict=None):
+        params = state["params"]
+        if mesh is not None and param_specs is not None:
+            from repro.models.sharding import degather
+
+            params = degather(
+                params, param_specs, mesh, quantized=tc.quantized_fsdp_allgather
+            )
+
+        def group_loss(p, b):
+            return loss_fn(p, b)
+
+        losses, grads = jax.vmap(
+            jax.value_and_grad(group_loss), in_axes=(None, 0), out_axes=0
+        )(params, batch)
+        # keep grads in bf16 through the cross-group delta collective (halves
+        # wire bytes); dsag_update / the mean accumulate in fp32 internally
+        grads = constrain_grads(grads)
+
+        if tc.dsag:
+            new_dsag, h_hat, xi = dsag_update(
+                state["dsag"], grads, mask, flush, evict
+            )
+        else:
+            new_dsag = state["dsag"]
+            xi = jnp.float32(1.0)
+            h_hat = jax.tree.map(
+                lambda g: g.astype(jnp.float32).mean(axis=0), grads
+            )
+
+        if tc.grad_clip > 0:
+            h_hat, gnorm = clip_by_global_norm(h_hat, tc.grad_clip)
+        else:
+            from repro.optim.optimizers import global_norm
+
+            gnorm = global_norm(h_hat)
+
+        updates, new_opt = opt.update(h_hat, state["opt"], params)
+        new_params = apply_updates(params, updates)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "dsag": new_dsag,
+            "step": state["step"] + 1,
+        }
+        metrics = {
+            "loss": losses.mean(),
+            "per_group_loss": losses,
+            "grad_norm": gnorm,
+            "xi": xi,
+            "mask_count": mask.sum(),
+        }
+        return new_state, metrics
+
+    return step
+
+
+def init_train_state(params, tc: TrainConfig, gs: GroupSpec):
+    opt = make_optimizer(tc)
+    return {
+        "params": params,
+        "opt": opt.init(params),
+        "dsag": init_dsag_state(params, gs, tc),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs for the full train state
+# ---------------------------------------------------------------------------
+
+
+def _spec_drop_last(spec: P) -> P:
+    return P(*tuple(spec)[:-1]) if len(tuple(spec)) else P()
+
+
+def opt_state_specs(tc: TrainConfig, param_specs) -> Any:
+    if tc.optimizer == "adamw":
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "step": P(),
+        }
+    if tc.optimizer == "sgd":
+        return {"mu": param_specs, "step": P()}
+    if tc.optimizer == "adafactor":
+
+        def leaf(spec):
+            t = tuple(spec)
+            if len(t) >= 2:
+                return {"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))}
+            return {"v": spec}
+
+        return {
+            "stats": jax.tree.map(leaf, param_specs, is_leaf=lambda s: isinstance(s, P)),
+            "step": P(),
+        }
+    raise ValueError(tc.optimizer)
+
+
+def dsag_state_specs(tc: TrainConfig, gs: GroupSpec, param_specs) -> Any:
+    from repro.models.sharding import strip_axis
+
+    gaxes = gs.group_partition
+
+    def slot(spec):
+        for a in gs.axes:  # group axes cannot repeat in the param dims
+            spec = strip_axis(spec, a)
+        t = tuple(spec)
+        if tc.dsag_cache_dtype == "int8":
+            scale_spec = P(gaxes, *t[:-1], None) if t else P(gaxes, None)
+            return Quantized(q=P(gaxes, *t), scale=scale_spec, block=0)
+        return P(gaxes, *t)
+
+    cache = jax.tree.map(slot, param_specs, is_leaf=lambda s: isinstance(s, P))
+    return {
+        "cache": cache,
+        "pending": cache,
+        "pending_valid": P(),
+        "filled": P(),
+        "h": param_specs,
+    }
+
+
+def train_state_specs(tc: TrainConfig, gs: GroupSpec, param_specs) -> Any:
+    return {
+        "params": param_specs,
+        "opt": opt_state_specs(tc, param_specs),
+        "dsag": dsag_state_specs(tc, gs, param_specs),
+        "step": P(),
+    }
+
+
+def batch_group_specs(gs: GroupSpec, inner_spec_tail=(None,)) -> P:
+    """Spec of a batch leaf [P, b/P, ...]: group dim over the group axes,
+    inner batch dim over remaining dp axes (none left when groups = dp)."""
+    return P(gs.group_partition, *inner_spec_tail)

@@ -1,0 +1,142 @@
+"""DSAG gradient cache (paper §5).
+
+The coordinator maintains a set 𝒴 of subgradients keyed by *sample intervals*
+``[i, j]`` (1-based, inclusive, matching the paper's notation), each tagged
+with the iteration index ``t`` of the iterate it was computed from.  On
+receiving ``Y_{i:j}^{(t)}``:
+
+  1. select overlapping cached entries 𝒴';
+  2. if any entry of 𝒴' is at least as recent (t' >= t), discard the received
+     subgradient (staleness dominance);
+  3. otherwise evict 𝒴' and insert the new entry, maintaining the running sum
+     ``H = Σ_{y∈𝒴} y`` incrementally:  H += Y - Σ_{y∈𝒴'} y.
+
+Entries are stored in a sorted list keyed by interval start — the ordered-map
+stand-in for the paper's tree structure; lookup/insert/delete are
+O(log|𝒴| + overlap) via bisect.  The cache also tracks the *coverage*
+ξ = (# samples covered)/n used to scale the gradient estimate (paper Eq. 6).
+
+Exact-match fast path: if an entry with identical [i, j] exists, it is
+updated in place (paper remark: the update then degrades to SAG's).
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    start: int  # i (inclusive, 1-based)
+    stop: int  # j (inclusive, 1-based)
+    iteration: int  # t
+    value: Any  # the subgradient (numpy/JAX array or pytree leaf container)
+
+    def overlaps(self, start: int, stop: int) -> bool:
+        return not (self.stop < start or stop < self.start)
+
+    @property
+    def width(self) -> int:
+        return self.stop - self.start + 1
+
+
+class GradientCache:
+    """Interval-keyed subgradient cache with incremental sum maintenance."""
+
+    def __init__(self, num_samples: int, zero_like: Any):
+        if num_samples <= 0:
+            raise ValueError("num_samples must be positive")
+        self.num_samples = num_samples
+        self._starts: List[int] = []  # sorted entry starts
+        self._entries: List[CacheEntry] = []  # parallel to _starts
+        self._covered: int = 0
+        self._sum = np.array(zero_like, dtype=np.float64, copy=True)
+        self.evictions: int = 0  # total entries evicted by overlap (telemetry)
+        self.rejected_stale: int = 0
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def sum(self) -> np.ndarray:
+        """H = Σ_{y∈𝒴} y (maintained incrementally)."""
+        return self._sum
+
+    @property
+    def coverage(self) -> float:
+        """ξ: fraction of the n samples covered by cached entries."""
+        return self._covered / self.num_samples
+
+    @property
+    def num_entries(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> List[CacheEntry]:
+        return list(self._entries)
+
+    def _overlapping(self, start: int, stop: int) -> Tuple[int, int]:
+        """Return [lo, hi) slice of entries overlapping [start, stop].
+
+        Entries are disjoint and sorted by start, so the overlap range is
+        contiguous."""
+        # first entry whose stop >= start:
+        lo = bisect.bisect_left(self._starts, start)
+        if lo > 0 and self._entries[lo - 1].stop >= start:
+            lo -= 1
+        hi = bisect.bisect_right(self._starts, stop)
+        return lo, hi
+
+    # -- the §5 update rule -----------------------------------------------
+    def insert(self, start: int, stop: int, iteration: int, value: Any) -> bool:
+        """Apply the DSAG cache update.  Returns True iff the subgradient was
+        accepted (False = discarded as stale-dominated)."""
+        if not (1 <= start <= stop <= self.num_samples):
+            raise ValueError(
+                f"interval [{start},{stop}] outside 1..{self.num_samples}"
+            )
+        lo, hi = self._overlapping(start, stop)
+        overlapping = self._entries[lo:hi]
+        # staleness dominance: any overlapping entry at least as recent wins
+        for e in overlapping:
+            if e.iteration >= iteration:
+                self.rejected_stale += 1
+                return False
+        # exact-match in-place fast path (degrades to the SAG update)
+        if len(overlapping) == 1 and overlapping[0].start == start and overlapping[0].stop == stop:
+            e = overlapping[0]
+            self._sum += np.asarray(value, dtype=np.float64) - np.asarray(
+                e.value, dtype=np.float64
+            )
+            e.value = value
+            e.iteration = iteration
+            return True
+        # evict overlaps, insert new
+        removed_width = 0
+        for e in overlapping:
+            self._sum -= np.asarray(e.value, dtype=np.float64)
+            removed_width += e.width
+        self.evictions += len(overlapping)
+        del self._entries[lo:hi]
+        del self._starts[lo:hi]
+        pos = bisect.bisect_left(self._starts, start)
+        self._starts.insert(pos, start)
+        self._entries.insert(pos, CacheEntry(start, stop, iteration, value))
+        self._sum += np.asarray(value, dtype=np.float64)
+        self._covered += (stop - start + 1) - removed_width
+        return True
+
+    # -- invariant checks (used by property tests) -------------------------
+    def check_invariants(self) -> None:
+        assert self._starts == [e.start for e in self._entries]
+        assert all(
+            self._entries[k].stop < self._entries[k + 1].start
+            for k in range(len(self._entries) - 1)
+        ), "entries must be disjoint and sorted"
+        width = sum(e.width for e in self._entries)
+        assert width == self._covered, f"coverage mismatch {width} != {self._covered}"
+        recomputed = np.zeros_like(self._sum)
+        for e in self._entries:
+            recomputed = recomputed + np.asarray(e.value, dtype=np.float64)
+        np.testing.assert_allclose(recomputed, self._sum, rtol=1e-9, atol=1e-9)

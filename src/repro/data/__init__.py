@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic corpora + group-sharded batch iterators."""
+
+from repro.data.pipeline import GroupBatchIterator, make_batch_iterator
+
+__all__ = ["GroupBatchIterator", "make_batch_iterator"]

@@ -1,0 +1,5 @@
+"""Fault tolerance: failure detection, deadline-mask selection, elastic rescale."""
+
+from repro.ft.runtime import DeadlineController, FailureDetector, elastic_remap_groups
+
+__all__ = ["DeadlineController", "FailureDetector", "elastic_remap_groups"]

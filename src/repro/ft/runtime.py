@@ -1,0 +1,126 @@
+"""Tier-2 runtime control: deadlines, failure handling, elastic rescale.
+
+This is the host-side loop that turns the paper's coordinator behavior into
+the mask/flush inputs of the compiled DSAG step:
+
+* :class:`DeadlineController` — per-step, per-group deadline selection.  It
+  profiles per-group step latencies (moving window, §6.1), predicts the
+  w-th order statistic with the §4 model, and sets the deadline to that
+  prediction times (1 + margin) (the paper's 2% rule).  Groups over deadline
+  get mask 0 now and flush 1 on the step their result lands.
+* :class:`FailureDetector` — heartbeat bookkeeping: a group missing
+  ``max_misses`` consecutive deadlines is declared failed; DSAG proceeds with
+  its mask permanently 0 (that is the paper's point — missing partitions only
+  freeze ξ, they do not block progress) until the group rejoins.
+* :func:`elastic_remap_groups` — on a DP-degree change (node loss / rescale),
+  re-map sample->group assignment with the paper's Algorithm-2 alignment so
+  surviving cache entries stay aligned to partition boundaries; unaligned
+  slots are invalidated (mirrors §6.3 cache evictions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.latency.model import GammaParams
+from repro.lb.partitioner import align_partitions, p_start
+
+
+@dataclasses.dataclass
+class DeadlineController:
+    num_groups: int
+    w: int  # wait for the w fastest groups
+    margin: float = 0.02  # paper §5.1
+    window: int = 50  # latency samples kept per group
+
+    def __post_init__(self):
+        self._lat: List[List[float]] = [[] for _ in range(self.num_groups)]
+        self._inflight: List[Optional[int]] = [None] * self.num_groups  # step id
+        if not (1 <= self.w <= self.num_groups):
+            raise ValueError(f"w={self.w} not in 1..{self.num_groups}")
+
+    def record(self, group: int, latency: float) -> None:
+        dq = self._lat[group]
+        dq.append(latency)
+        if len(dq) > self.window:
+            dq.pop(0)
+
+    def deadline(self) -> float:
+        """Predicted latency of the w-th fastest group, plus the margin."""
+        means = np.array(
+            [np.mean(l) if l else np.inf for l in self._lat], dtype=np.float64
+        )
+        if np.isinf(means).any():
+            return np.inf  # no profile yet: wait for everyone
+        stds = np.array(
+            [np.std(l) if len(l) > 1 else means[i] * 0.1 for i, l in enumerate(self._lat)]
+        )
+        # Monte-Carlo order statistic under per-group gammas (§4.1)
+        rng = np.random.default_rng(0)
+        draws = np.stack(
+            [
+                GammaParams.from_mean_var(m, max(s, 1e-9) ** 2).sample(rng, 256)
+                for m, s in zip(means, stds)
+            ],
+            axis=1,
+        )
+        kth = np.partition(draws, self.w - 1, axis=1)[:, self.w - 1]
+        return float(kth.mean()) * (1.0 + self.margin)
+
+    def step_masks(self, latencies: np.ndarray, step: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Given this step's per-group latencies, return (mask, flush).
+
+        mask_i: group i delivered within the deadline.
+        flush_i: group i's previously-late result has now landed (its last
+        in-flight step finished before this step started)."""
+        deadline = self.deadline()
+        mask = latencies <= deadline
+        flush = np.zeros(self.num_groups, dtype=bool)
+        for i in range(self.num_groups):
+            if self._inflight[i] is not None and self._inflight[i] < step:
+                flush[i] = True
+                self._inflight[i] = None
+            if not mask[i]:
+                self._inflight[i] = step
+            self.record(i, float(latencies[i]))
+        return mask, flush
+
+
+@dataclasses.dataclass
+class FailureDetector:
+    num_groups: int
+    max_misses: int = 5
+
+    def __post_init__(self):
+        self.misses = np.zeros(self.num_groups, dtype=np.int64)
+        self.failed = np.zeros(self.num_groups, dtype=bool)
+
+    def observe(self, mask: np.ndarray) -> np.ndarray:
+        """Update with this step's mask; returns the failed-group vector."""
+        self.misses = np.where(mask, 0, self.misses + 1)
+        self.failed = self.misses >= self.max_misses
+        return self.failed
+
+    def rejoin(self, group: int) -> None:
+        self.misses[group] = 0
+        self.failed[group] = False
+
+
+def elastic_remap_groups(
+    n_samples: int, p_old: int, p_new: int, k_old: int = 1
+) -> Tuple[int, np.ndarray]:
+    """Re-map sample->group assignment when the group count changes.
+
+    Returns (k_new, survivors) where survivors[i] (len p_new) marks new
+    groups whose sample range exactly matches an old group's range — their
+    cache slots can be carried over; the rest start unfilled (ξ drops, DSAG
+    refills them over the next steps, per §6.3)."""
+    k_al, k_new = align_partitions(n_samples, p_old, p_new, k_old)
+    old_starts = {p_start(n_samples, p_old, i) for i in range(1, p_old + 1)}
+    survivors = np.array(
+        [p_start(n_samples, p_new, i) in old_starts for i in range(1, p_new + 1)]
+    )
+    return k_new, survivors

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the fused DSAG cache update.
+
+The Tier-1 hot loop per parameter leaf is memory-bound:
+
+    h += Σ_i m_i (g_i - c_i)        c_i <- m_i ? g_i : c_i
+
+A naive composition reads c twice and writes c and h in separate passes; the
+fused kernel streams (g, c, h) through VMEM once: grid (n_blocks, P) with the
+P dim innermost so the h-block accumulator lives in VMEM scratch across the
+group sweep and is written exactly once per block.
+
+Masks live in SMEM (scalar prefetch); math is fp32; c storage is bf16 (the
+int8 variant dequantizes/requantizes in the same pass via ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dsag_kernel(mask_ref, g_ref, c_ref, h_ref, new_c_ref, new_h_ref, acc_ref):
+    j = pl.program_id(0)  # block index (outer)
+    i = pl.program_id(1)  # group index (inner)
+    del j
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = h_ref[...].astype(jnp.float32).reshape(acc_ref.shape)
+
+    m = mask_ref[i].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)  # (1, block)
+    c = c_ref[...].astype(jnp.float32)
+    new_val = m * g + (1.0 - m) * c
+    acc_ref[...] += new_val - c
+    new_c_ref[...] = new_val.astype(new_c_ref.dtype)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _flush():
+        new_h_ref[...] = acc_ref[...].reshape(new_h_ref.shape)
+
+
+def dsag_cache_update(
+    g: jnp.ndarray,  # [p, n]
+    c: jnp.ndarray,  # [p, n]
+    h: jnp.ndarray,  # [n]
+    mask: jnp.ndarray,  # [p] float32 (0/1)
+    *,
+    block: int = 2048,
+    interpret: bool = False,
+):
+    """Returns (new_c [p, n], new_h [n]) in one HBM pass over g and c."""
+    p, n = g.shape
+    assert c.shape == (p, n) and h.shape == (n,), (g.shape, c.shape, h.shape)
+    assert n % block == 0, (n, block)
+    grid = (n // block, p)
+    new_c, new_h = pl.pallas_call(
+        _dsag_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block), lambda j, i, *_: (i, j)),
+                pl.BlockSpec((1, block), lambda j, i, *_: (i, j)),
+                pl.BlockSpec((block,), lambda j, i, *_: (j,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block), lambda j, i, *_: (i, j)),
+                pl.BlockSpec((block,), lambda j, i, *_: (j,)),
+            ],
+            scratch_shapes=[pltpu.VMEM((1, block), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((p, n), c.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(mask.astype(jnp.float32), g, c, h)
+    return new_c, new_h

@@ -1,0 +1,104 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+Online-softmax attention: grid (batch*heads, q_blocks, kv_blocks) with the kv
+dim innermost; running max/denominator/accumulator live in VMEM scratch
+across the kv sweep, so the S x S score matrix never exists in HBM.  Causal
+blocks above the diagonal are skipped entirely (they contribute nothing).
+
+This is the TPU replacement for ``models.attention.chunked_attention`` on the
+long-context serving path; training backward uses XLA remat of the jnp path
+(writing the flash bwd kernel is tracked as future work in DESIGN.md).
+MXU alignment: block_q/block_k multiples of 128; head_dim padded by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, block_q, block_k
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # kv block strictly above the q block's diagonal contributes nothing
+        run = ki * block_k <= (qi + 1) * block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]  # [bq, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [bh, sq, d]
+    k: jnp.ndarray,  # [bh, sk, d]
+    v: jnp.ndarray,  # [bh, sk, d]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    grid = (bh, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q, block_k=block_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running denominator
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

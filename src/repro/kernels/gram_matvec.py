@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the paper's Eq. (3) hot spot:  G = X^T (X V).
+
+The two-einsum form reads X from HBM twice; this kernel streams X through
+VMEM once per iteration: for each row block  Xb [bm, d]  it computes
+P = Xb V on the MXU, immediately contracts  Xb^T P  and accumulates into a
+fp32 VMEM scratch of shape [d, k].  One HBM pass over X, fp32 accumulation,
+MXU-aligned tiles (bm and d multiples of 128 via wrapper padding; k padded
+to >= 128 lanes).
+
+Grid: (n // bm,)  — sequential on TPU, so the [d, k] accumulator scratch is
+carried across grid steps and flushed on the last one.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(x_ref, v_ref, out_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = x_ref[...].astype(jnp.float32)  # [bm, d]
+    vv = v_ref[...].astype(jnp.float32)  # [d, k]
+    p = jnp.dot(xb, vv, preferred_element_type=jnp.float32)  # [bm, k]
+    acc_ref[...] += jnp.dot(xb.T, p, preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def gram_matvec(
+    x: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """G = X^T (X V).  x: [n, d], v: [d, k] -> [d, k] (fp32)."""
+    n, d = x.shape
+    d2, k = v.shape
+    assert d == d2, (x.shape, v.shape)
+    assert n % block_rows == 0, (n, block_rows)
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, k), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, k), jnp.float32)],
+        interpret=interpret,
+    )(x, v)

@@ -1,0 +1,112 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode for
+correctness validation; on TPU they compile natively.  Wrappers handle
+padding to hardware-aligned tiles and expose the same signatures as the
+``ref.py`` oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dsag_update import dsag_cache_update
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gram_matvec import gram_matvec
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gram_matvec_op(
+    x: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """G = X^T (X V), MXU-tiled; pads n to the row block and k to 128."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n, d = x.shape
+    _, k = v.shape
+    n_pad = _round_up(n, block_rows)
+    k_pad = _round_up(k, 128)
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, k_pad - k)))
+    out = gram_matvec(xp, vp, block_rows=block_rows, interpret=interpret)
+    return out[:, :k]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dsag_cache_update_op(
+    g: jnp.ndarray,
+    c: jnp.ndarray,
+    h: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    block: int = 2048,
+    interpret: bool | None = None,
+):
+    """Fused masked DSAG cache update over flattened [p, n] slots."""
+    interpret = _interpret_default() if interpret is None else interpret
+    p, n = g.shape
+    n_pad = _round_up(n, block)
+    gp = jnp.pad(g, ((0, 0), (0, n_pad - n)))
+    cp = jnp.pad(c, ((0, 0), (0, n_pad - n)))
+    hp = jnp.pad(h, ((0, n_pad - n),))
+    new_c, new_h = dsag_cache_update(gp, cp, hp, mask, block=block, interpret=interpret)
+    return new_c[:, :n], new_h[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_op(
+    q: jnp.ndarray,  # [b, h, sq, d]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Flash attention over [b, h, s, d]; pads head_dim to 128 lanes."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    d_pad = _round_up(d, 128)
+    sq_pad = _round_up(sq, block_q)
+    sk_pad = _round_up(sk, block_k)
+
+    def pad(t, s_pad):
+        return jnp.pad(
+            t, ((0, 0), (0, 0), (0, s_pad - t.shape[2]), (0, d_pad - d))
+        ).reshape(b * h, s_pad, d_pad)
+
+    if not causal and sk % block_k != 0:
+        # zero-padded keys would enter a non-causal softmax; callers must
+        # align sk (the causal mask already excludes tail pads when sq == sk)
+        raise ValueError(f"non-causal flash requires sk % block_k == 0, got {sk}")
+    qp, kp, vp = pad(q, sq_pad), pad(k, sk_pad), pad(v, sk_pad)
+    out = flash_attention(
+        qp, kp, vp, causal=causal, block_q=block_q, block_k=block_k,
+        scale=1.0 / (d ** 0.5),  # true head_dim, not the padded one
+        interpret=interpret,
+    )
+    return out.reshape(b, h, sq_pad, d_pad)[:, :, :sq, :d]
+
+# Re-exported oracles so tests/benchmarks import one module.
+gram_matvec_ref = ref.gram_matvec_ref
+dsag_update_ref = ref.dsag_update_ref
+flash_attention_ref = ref.flash_attention_ref

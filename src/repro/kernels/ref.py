@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_matvec_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """X^T (X V) in fp32 accumulation.  x: [n, d], v: [d, k] -> [d, k]."""
+    xv = jnp.einsum("nd,dk->nk", x.astype(jnp.float32), v.astype(jnp.float32))
+    return jnp.einsum("nd,nk->dk", x.astype(jnp.float32), xv)
+
+
+def dsag_update_ref(
+    g: jnp.ndarray,  # [p, n] fresh per-group gradients
+    c: jnp.ndarray,  # [p, n] cache slots
+    h: jnp.ndarray,  # [n] running sum
+    mask: jnp.ndarray,  # [p] float (0/1)
+):
+    """Fused DSAG cache update:  h += Σ_i m_i (g_i - c_i);  c_i <- m_i?g_i:c_i.
+    Returns (new_c, new_h)."""
+    gf = g.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    m = mask.astype(jnp.float32)[:, None]
+    new_c = m * gf + (1.0 - m) * cf
+    new_h = h.astype(jnp.float32) + (m * (gf - cf)).sum(axis=0)
+    return new_c.astype(c.dtype), new_h
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [b, h, sq, d]
+    k: jnp.ndarray,  # [b, h, sk, d]
+    v: jnp.ndarray,  # [b, h, sk, d]
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.arange(sk)[None, :] <= (jnp.arange(sq)[:, None] + (sk - sq))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Latency modeling (paper §3-§4): per-worker gamma comm/comp latency,
+bursts, Monte-Carlo order statistics, event-driven iterative simulation,
+and the moving-window profiler used by the load balancer."""
+
+from repro.latency.model import (
+    GammaParams,
+    WorkerLatencyModel,
+    ClusterLatencyModel,
+    fit_gamma,
+    make_heterogeneous_cluster,
+    make_paper_artificial_cluster,
+    clear_slowdowns,
+)
+from repro.latency.order_stats import (
+    predict_order_statistic,
+    predict_order_statistics_iid,
+    empirical_order_statistic,
+)
+from repro.latency.event_sim import EventDrivenSimulator, simulate_iteration_times
+from repro.latency.profiler import LatencyProfiler, LatencySample
+
+__all__ = [
+    "GammaParams",
+    "WorkerLatencyModel",
+    "ClusterLatencyModel",
+    "fit_gamma",
+    "make_heterogeneous_cluster",
+    "make_paper_artificial_cluster",
+    "predict_order_statistic",
+    "predict_order_statistics_iid",
+    "empirical_order_statistic",
+    "EventDrivenSimulator",
+    "simulate_iteration_times",
+    "LatencyProfiler",
+    "LatencySample",
+]

@@ -1,0 +1,252 @@
+"""Per-worker latency model (paper §3).
+
+The latency of worker ``i`` for an iteration with ``b`` bytes communicated and
+computational load ``c`` is modeled as
+
+    X_i^{(b,c)} = Y_i^{(b)} + Z_i^{(c)}
+
+where ``Y_i`` (communication) and ``Z_i`` (computation) are *independent but
+not identically distributed* gamma random variables — each worker has its own
+parameters (paper Fig. 3, footnote 7).  The mean computation latency scales
+linearly with the computational load ``c`` (paper Fig. 1), and workers
+additionally experience *bursts* of elevated latency (paper §3.2, Fig. 4):
+multiplicative slowdowns that arrive as a Poisson process and last an
+exponentially distributed duration.
+
+All sampling is numpy-based (host control plane — this is Tier-2/Tier-3 code;
+no JAX device state is touched here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Gamma parameterisation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GammaParams:
+    """Gamma distribution parameterised by (shape, scale).
+
+    Paper footnote 12: a gamma r.v. with mean ``e`` and variance ``v`` has
+    shape ``e^2/v`` and scale ``v/e``.
+    """
+
+    shape: float
+    scale: float
+
+    @property
+    def mean(self) -> float:
+        return self.shape * self.scale
+
+    @property
+    def var(self) -> float:
+        return self.shape * self.scale**2
+
+    @staticmethod
+    def from_mean_var(mean: float, var: float) -> "GammaParams":
+        if mean <= 0:
+            raise ValueError(f"gamma mean must be positive, got {mean}")
+        var = max(var, 1e-18)  # degenerate -> near-deterministic
+        return GammaParams(shape=mean * mean / var, scale=var / mean)
+
+    def sample(self, rng: np.random.Generator, size=None) -> np.ndarray:
+        return rng.gamma(self.shape, self.scale, size=size)
+
+
+def fit_gamma(samples: Sequence[float]) -> GammaParams:
+    """Method-of-moments gamma fit (what the profiler/optimizer use)."""
+    arr = np.asarray(samples, dtype=np.float64)
+    if arr.size == 0:
+        raise ValueError("cannot fit gamma to zero samples")
+    mean = float(arr.mean())
+    var = float(arr.var()) if arr.size > 1 else 1e-12
+    return GammaParams.from_mean_var(mean, max(var, 1e-18))
+
+
+# ---------------------------------------------------------------------------
+# Worker / cluster models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BurstState:
+    """Multiplicative latency burst (paper §3.2 / Fig. 4)."""
+
+    active: bool = False
+    factor: float = 1.0
+    ends_at: float = 0.0
+
+
+@dataclasses.dataclass
+class WorkerLatencyModel:
+    """Latency model for a single worker.
+
+    ``comm`` models Y_i for the reference byte count ``b_ref``;
+    ``comp_per_unit`` models Z_i *per unit of computational load*, so that the
+    expected computation latency for load ``c`` is ``c * comp_per_unit.mean``
+    (paper Fig. 1: mean and variance scale linearly/quadratically with load —
+    the per-unit gamma is scaled by ``c``, giving mean ∝ c and var ∝ c²,
+    matching the linearisation in paper §6.2).
+    """
+
+    comm: GammaParams
+    comp_per_unit: GammaParams
+    burst_rate: float = 0.0  # bursts per second (Poisson)
+    burst_factor_mean: float = 1.12  # paper Fig. 4: ~12% slowdown
+    burst_duration_mean: float = 60.0  # paper Fig. 4: ~1 minute
+    # artificial *persistent* slowdown (paper §7.2 artificial scenario)
+    slowdown: float = 1.0
+
+    _burst: BurstState = dataclasses.field(default_factory=BurstState)
+
+    # -- burst process --------------------------------------------------
+    def _burst_factor(self, now: float, rng: np.random.Generator) -> float:
+        if self._burst.active:
+            if now >= self._burst.ends_at:
+                self._burst = BurstState()
+            else:
+                return self._burst.factor
+        if self.burst_rate > 0.0:
+            # Probability a burst starts within one iteration-ish window; we
+            # sample burst arrivals lazily at query time using the gap since
+            # the last query (memorylessness of the Poisson process).
+            gap = getattr(self, "_last_query_gap", 1.0)
+            p_start = 1.0 - math.exp(-self.burst_rate * max(gap, 1e-9))
+            if rng.random() < p_start:
+                factor = 1.0 + rng.exponential(self.burst_factor_mean - 1.0)
+                self._burst = BurstState(
+                    active=True,
+                    factor=factor,
+                    ends_at=now + rng.exponential(self.burst_duration_mean),
+                )
+                return factor
+        return 1.0
+
+    # -- sampling --------------------------------------------------------
+    def sample_comm(self, rng: np.random.Generator) -> float:
+        return float(self.comm.sample(rng))
+
+    def sample_comp(self, c: float, rng: np.random.Generator, now: float = 0.0) -> float:
+        base = float(self.comp_per_unit.sample(rng)) * c
+        return base * self.slowdown * self._burst_factor(now, rng)
+
+    def sample_total(self, c: float, rng: np.random.Generator, now: float = 0.0) -> float:
+        return self.sample_comm(rng) + self.sample_comp(c, rng, now)
+
+    # -- analytic moments (for the optimizer's e'_{X,i}) -----------------
+    def mean_total(self, c: float) -> float:
+        return self.comm.mean + self.comp_per_unit.mean * c * self.slowdown
+
+
+@dataclasses.dataclass
+class ClusterLatencyModel:
+    """A set of per-worker latency models (non-i.i.d. across workers)."""
+
+    workers: list  # list[WorkerLatencyModel]
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.workers)
+
+    def sample_all(self, c: float, now: float = 0.0) -> np.ndarray:
+        """One latency draw per worker for a single iteration."""
+        return np.array(
+            [w.sample_total(c, self.rng, now) for w in self.workers], dtype=np.float64
+        )
+
+    def sample_matrix(self, c: float, iters: int) -> np.ndarray:
+        """[iters, N] latency draws (steady state, no cross-iteration state)."""
+        return np.stack([self.sample_all(c) for _ in range(iters)])
+
+
+# ---------------------------------------------------------------------------
+# Cluster factories (calibrated to the paper's measurements)
+# ---------------------------------------------------------------------------
+
+#: Approximate latency ranges from paper Table 1 (AWS logistic regression):
+#: comm 1e-4..6e-4 s, comp 1.1e-3..1.3e-3 s.
+AWS_LOGREG_COMM = (1e-4, 6e-4)
+AWS_LOGREG_COMP = (1.1e-3, 1.3e-3)
+#: eX3 logistic regression: comm 0.2e-5..3e-5 s, comp 1.8e-3..2.5e-3 s.
+EX3_LOGREG_COMM = (0.2e-5, 3e-5)
+EX3_LOGREG_COMP = (1.8e-3, 2.5e-3)
+
+
+def make_heterogeneous_cluster(
+    num_workers: int,
+    *,
+    comm_range=AWS_LOGREG_COMM,
+    comp_range=AWS_LOGREG_COMP,
+    load_unit: float = 1.0,
+    cv_comm: float = 0.35,
+    cv_comp: float = 0.15,
+    burst_rate: float = 1.0 / 90.0,
+    seed: int = 0,
+) -> ClusterLatencyModel:
+    """Cluster with per-worker means drawn uniformly from the paper's measured
+    ranges and fixed coefficients of variation — i.e. independent but NOT
+    identically distributed workers (the paper's central modeling point)."""
+    rng = np.random.default_rng(seed)
+    workers = []
+    for _ in range(num_workers):
+        e_y = rng.uniform(*comm_range)
+        e_z = rng.uniform(*comp_range) / load_unit  # per unit load
+        workers.append(
+            WorkerLatencyModel(
+                comm=GammaParams.from_mean_var(e_y, (cv_comm * e_y) ** 2),
+                comp_per_unit=GammaParams.from_mean_var(e_z, (cv_comp * e_z) ** 2),
+                burst_rate=burst_rate,
+            )
+        )
+    return ClusterLatencyModel(workers=workers, seed=seed + 1)
+
+
+def make_paper_artificial_cluster(
+    num_workers: int = 49,
+    *,
+    comp_mean: float = 2.0e-3,
+    comm_mean: float = 1.0e-5,
+    cv_comm: float = 0.3,
+    cv_comp: float = 0.1,
+    load_unit: float = 1.0,
+    seed: int = 0,
+) -> ClusterLatencyModel:
+    """The paper's §7.2 artificial scenario on eX3: worker ``i`` (1-based) is
+    slowed by a factor ``1 + (i/N)*0.4``; the benchmark driver removes the
+    slowdown of the last 10 workers after 1 s via a timed event.
+
+    ``load_unit`` calibrates the model: a task with computational load
+    ``c = load_unit`` has expected computation latency ``comp_mean`` (the
+    paper's Table-1 eX3 values) — pass the typical per-task ops count."""
+    rng = np.random.default_rng(seed)
+    del rng
+    e_z = comp_mean / load_unit
+    workers = []
+    for i in range(1, num_workers + 1):
+        w = WorkerLatencyModel(
+            comm=GammaParams.from_mean_var(comm_mean, (cv_comm * comm_mean) ** 2),
+            comp_per_unit=GammaParams.from_mean_var(e_z, (cv_comp * e_z) ** 2),
+            burst_rate=0.0,
+            slowdown=1.0 + (i / num_workers) * 0.4,
+        )
+        workers.append(w)
+    return ClusterLatencyModel(workers=workers, seed=seed + 1)
+
+
+def clear_slowdowns(cluster: ClusterLatencyModel, worker_indices) -> None:
+    """Remove the artificial slowdown of the given workers (paper §7.2:
+    'we remove this artificial latency for workers 40 through 49 after one
+    second')."""
+    for i in worker_indices:
+        cluster.workers[i].slowdown = 1.0

@@ -1,0 +1,101 @@
+"""Moving-window latency profiler (paper §6.1).
+
+For each worker, the coordinator records the round-trip time between sending
+an iterate and receiving a response; the worker records its own
+compute-only time and ships it back inside the response.  The profiler takes
+the worker-recorded time as a computation-latency sample and the difference
+as a communication-latency sample, computes mean/variance over a moving time
+window (samples older than ``window`` seconds are dropped), and hands the
+moments to the load-balancing optimizer, which fits gamma distributions
+(paper footnote 12).
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.latency.model import GammaParams
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencySample:
+    worker: int
+    t_recorded: float  # wall/sim time at which the sample was taken
+    round_trip: float  # coordinator-observed send->receive latency
+    compute: float  # worker-reported compute latency
+    load: float  # computational load (c) of the task that produced this
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    e_comm: float
+    v_comm: float
+    e_comp: float
+    v_comp: float
+    mean_load: float
+    num_samples: int
+
+    @property
+    def e_total(self) -> float:
+        return self.e_comm + self.e_comp
+
+    def comm_gamma(self) -> GammaParams:
+        return GammaParams.from_mean_var(max(self.e_comm, 1e-12), max(self.v_comm, 1e-18))
+
+    def comp_gamma_per_unit(self) -> GammaParams:
+        """Gamma of the *per-unit-load* computation latency (for what-if
+        re-scaling by the optimizer, paper §6.2 linearisation)."""
+        e = max(self.e_comp / max(self.mean_load, 1e-12), 1e-12)
+        v = max(self.v_comp / max(self.mean_load, 1e-12) ** 2, 1e-18)
+        return GammaParams.from_mean_var(e, v)
+
+
+class LatencyProfiler:
+    """Per-worker moving-window mean/variance of comm and comp latency."""
+
+    def __init__(self, num_workers: int, *, window: float = 10.0):
+        self.num_workers = num_workers
+        self.window = window
+        self._samples: list[deque] = [deque() for _ in range(num_workers)]
+
+    def record(self, sample: LatencySample) -> None:
+        if not (0 <= sample.worker < self.num_workers):
+            raise ValueError(f"worker {sample.worker} out of range")
+        comm = max(sample.round_trip - sample.compute, 0.0)
+        dq = self._samples[sample.worker]
+        dq.append((sample.t_recorded, comm, sample.compute, sample.load))
+
+    def _evict(self, worker: int, now: float) -> None:
+        dq = self._samples[worker]
+        cutoff = now - self.window
+        while dq and dq[0][0] < cutoff:
+            dq.popleft()
+
+    def stats(self, worker: int, now: float) -> Optional[WorkerStats]:
+        self._evict(worker, now)
+        dq = self._samples[worker]
+        if len(dq) == 0:
+            return None
+        arr = np.asarray(dq, dtype=np.float64)  # [k, 4]
+        comm, comp, load = arr[:, 1], arr[:, 2], arr[:, 3]
+        return WorkerStats(
+            e_comm=float(comm.mean()),
+            v_comm=float(comm.var()) if len(dq) > 1 else 1e-12,
+            e_comp=float(comp.mean()),
+            v_comp=float(comp.var()) if len(dq) > 1 else 1e-12,
+            mean_load=float(load.mean()),
+            num_samples=len(dq),
+        )
+
+    def all_stats(self, now: float) -> Dict[int, WorkerStats]:
+        out = {}
+        for i in range(self.num_workers):
+            s = self.stats(i, now)
+            if s is not None:
+                out[i] = s
+        return out

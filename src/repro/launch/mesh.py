@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; callers (dryrun/train)
+decide when devices are materialized.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(devices_per_axis=(2, 4)):
+    """Small mesh for subprocess tests (8 fake devices by default)."""
+    axes = ("data", "model") if len(devices_per_axis) == 2 else ("pod", "data", "model")
+    return jax.make_mesh(
+        devices_per_axis, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

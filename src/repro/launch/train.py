@@ -1,0 +1,221 @@
+"""End-to-end trainer: DSAG Tier-1 step + Tier-2 control loop.
+
+Runs anywhere: on CPU it trains reduced configs for real (examples/
+quickstart.py), on a pod slice it is the production entry point.  Wires
+together:
+
+  model zoo -> dsag_pjit step -> deadline controller (masks) ->
+  failure detector -> checkpoint manager -> (optional) straggler simulation
+
+Usage (CPU-scale):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 100 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import TrainConfig, get_config, get_smoke_config
+from repro.core.dsag_pjit import (
+    GroupSpec,
+    init_train_state,
+    make_group_spec,
+    make_train_step,
+    train_state_specs,
+)
+from repro.data import make_batch_iterator
+from repro.ft import DeadlineController, FailureDetector
+from repro.latency.model import make_heterogeneous_cluster
+from repro.models import build_model
+from repro.models.sharding import set_mesh
+
+
+@dataclasses.dataclass
+class TrainerOptions:
+    arch: str = "qwen1.5-0.5b"
+    smoke: bool = True
+    steps: int = 50
+    global_batch: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    restore: bool = False
+    mesh: Optional[Any] = None
+    train_config: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+    #: simulate straggling groups (CPU runs): per-step latency draws feed the
+    #: deadline controller exactly like real step timings would on a pod
+    simulate_stragglers: bool = True
+    dsag_w: Optional[int] = None  # wait-for-w groups (default: 3/4 of P)
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, opts: TrainerOptions):
+        self.opts = opts
+        tc = opts.train_config
+        cfg = get_smoke_config(opts.arch) if opts.smoke else get_config(opts.arch)
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        set_mesh(opts.mesh)
+        self.gs = make_group_spec(tc, opts.mesh)
+        if opts.global_batch % self.gs.num_groups:
+            raise ValueError(
+                f"global batch {opts.global_batch} not divisible by "
+                f"{self.gs.num_groups} DSAG groups"
+            )
+        self.data = make_batch_iterator(
+            cfg, self.gs.num_groups, opts.global_batch, opts.seq_len, seed=opts.seed
+        )
+
+        def loss_fn(params, batch):
+            return self.model.train_loss(params, batch, remat=tc.remat)
+
+        param_specs = self.model.param_specs(tc.fsdp) if opts.mesh is not None else None
+        step = make_train_step(loss_fn, tc, self.gs, opts.mesh, param_specs)
+        if opts.mesh is not None:
+            from jax.sharding import NamedSharding
+
+            specs = train_state_specs(tc, self.gs, self.model.param_specs(tc.fsdp))
+            self.state_shardings = jax.tree.map(
+                lambda s: NamedSharding(opts.mesh, s),
+                specs,
+                is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec),
+            )
+            self.step_fn = jax.jit(step, donate_argnums=(0,))
+        else:
+            self.state_shardings = None
+            self.step_fn = jax.jit(step, donate_argnums=(0,))
+
+        # Tier-2 control plane
+        w = opts.dsag_w or max(1, (3 * self.gs.num_groups) // 4)
+        self.deadlines = DeadlineController(self.gs.num_groups, w=w, margin=tc.dsag_margin)
+        self.failures = FailureDetector(self.gs.num_groups)
+        self.ckpt = (
+            CheckpointManager(opts.checkpoint_dir, keep=tc.keep_checkpoints)
+            if opts.checkpoint_dir
+            else None
+        )
+        self.straggler_sim = (
+            make_heterogeneous_cluster(
+                self.gs.num_groups,
+                comp_range=(0.9, 1.4),
+                comm_range=(0.01, 0.05),
+                cv_comp=0.08,
+                seed=opts.seed + 3,
+            )
+            if opts.simulate_stragglers
+            else None
+        )
+
+    # -- lifecycle ---------------------------------------------------------
+    def init_state(self):
+        params = self.model.init(jax.random.key(self.opts.seed))
+        state = init_train_state(params, self.opts.train_config, self.gs)
+        if self.state_shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, self.state_shardings
+            )
+        return state
+
+    def maybe_restore(self, state):
+        if self.ckpt is None or not self.opts.restore:
+            return state, 0
+        restored, step = self.ckpt.restore_latest(state, self.state_shardings)
+        if restored is None:
+            return state, 0
+        print(f"[train] restored checkpoint at step {step}")
+        return restored, step + 1
+
+    def _group_latencies(self, step: int) -> np.ndarray:
+        if self.straggler_sim is None:
+            return np.ones(self.gs.num_groups)
+        return self.straggler_sim.sample_all(c=1.0, now=float(step))
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> Dict[str, list]:
+        opts = self.opts
+        tc = opts.train_config
+        state = self.init_state()
+        state, start_step = self.maybe_restore(state)
+        history = {"loss": [], "xi": [], "mask_count": [], "step_time": []}
+        for step in range(start_step, opts.steps):
+            batch = next(self.data)
+            if tc.dsag:
+                lat = self._group_latencies(step)
+                mask_np, flush_np = self.deadlines.step_masks(lat, step)
+                was_failed = self.failures.failed.copy()
+                self.failures.observe(mask_np)
+                # failed groups cannot flush; newly-failed groups get their
+                # cache entry evicted (paper §6.3) so H stays unbiased
+                flush_np = np.logical_and(flush_np, ~self.failures.failed)
+                evict_np = np.logical_and(self.failures.failed, ~was_failed)
+            else:
+                mask_np = np.ones(self.gs.num_groups, bool)
+                flush_np = np.zeros(self.gs.num_groups, bool)
+                evict_np = flush_np
+            t0 = time.time()
+            state, metrics = self.step_fn(
+                state,
+                jax.tree.map(jnp.asarray, batch),
+                jnp.asarray(mask_np),
+                jnp.asarray(flush_np),
+                jnp.asarray(evict_np),
+            )
+            loss = float(metrics["loss"])
+            history["loss"].append(loss)
+            history["xi"].append(float(metrics["xi"]))
+            history["mask_count"].append(int(metrics["mask_count"]))
+            history["step_time"].append(time.time() - t0)
+            if step % opts.log_every == 0:
+                print(
+                    f"[train] step {step:5d} loss {loss:.4f} xi {float(metrics['xi']):.2f} "
+                    f"fresh {int(metrics['mask_count'])}/{self.gs.num_groups} "
+                    f"({history['step_time'][-1]*1e3:.0f} ms)"
+                )
+            if self.ckpt and (step + 1) % tc.checkpoint_every == 0:
+                self.ckpt.save(step, state)
+        if self.ckpt:
+            self.ckpt.save(opts.steps - 1, state, blocking=True)
+        return history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--no-dsag", action="store_true")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    tc = TrainConfig(dsag=not args.no_dsag, optimizer=args.optimizer, learning_rate=args.lr)
+    opts = TrainerOptions(
+        arch=args.arch,
+        smoke=args.smoke,
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        checkpoint_dir=args.checkpoint_dir,
+        restore=args.restore,
+        train_config=tc,
+    )
+    hist = Trainer(opts).run()
+    print(f"[train] done; final loss {hist['loss'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Dynamic load balancing (paper §6): profiler -> optimizer -> re-partition."""
+
+from repro.lb.partitioner import (
+    p_start,
+    p_stop,
+    p_trans,
+    align_partitions,
+    cyclic_increment,
+    Subpartitioner,
+)
+from repro.lb.optimizer import LoadBalanceOptimizer, OptimizerInputs
+
+__all__ = [
+    "p_start",
+    "p_stop",
+    "p_trans",
+    "align_partitions",
+    "cyclic_increment",
+    "Subpartitioner",
+    "LoadBalanceOptimizer",
+    "OptimizerInputs",
+]

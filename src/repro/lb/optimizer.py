@@ -1,0 +1,170 @@
+"""Load-balancing optimizer (paper §6.2, Algorithm 1).
+
+Given per-worker latency statistics from the profiler, produce an updated
+subpartition-count vector p' that (i) equalizes expected total per-iteration
+latency across workers and (ii) respects the contribution constraint
+h(p') >= h_min, where h is estimated with the event-driven simulator.
+
+The optimizer works on the §6.2 linearisation:
+
+    e'_{Z,i} = e_{Z,i} * p_i / p'_i        (computation mean)
+    v'_{Z,i} = v_{Z,i} * p_i^2 / p'_i^2    (computation variance)
+    e'_{X,i} = e_{Y,i} + e'_{Z,i}          (total)
+
+and evaluates h with a 1% tolerance (the paper's noise allowance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.latency.event_sim import EventDrivenSimulator
+from repro.latency.model import ClusterLatencyModel, GammaParams, WorkerLatencyModel
+
+
+@dataclasses.dataclass
+class OptimizerInputs:
+    """Latest profiler statistics, one entry per worker."""
+
+    e_comm: np.ndarray  # e_{Y,i}
+    v_comm: np.ndarray  # v_{Y,i}
+    e_comp: np.ndarray  # e_{Z,i}  (at the CURRENT p_i)
+    v_comp: np.ndarray  # v_{Z,i}
+    samples_per_worker: np.ndarray  # n_i
+    w: int  # wait-for-w setting of the running method
+    margin: float = 0.02
+
+
+class LoadBalanceOptimizer:
+    """Iterative small-step solver for paper Eq. (7) / Algorithm 1."""
+
+    def __init__(
+        self,
+        *,
+        h_tolerance: float = 0.01,
+        sim_iterations: int = 100,
+        max_rounds: int = 200,
+        improvement_threshold: float = 0.10,
+        seed: int = 0,
+    ):
+        self.h_tolerance = h_tolerance
+        self.sim_iterations = sim_iterations
+        self.max_rounds = max_rounds
+        #: only publish a new p if the objective improves by this much
+        #: (paper §6.3 first mitigation strategy, default 10%)
+        self.improvement_threshold = improvement_threshold
+        self.seed = seed
+        self.h_min: Optional[float] = None
+
+    # -- objective -------------------------------------------------------
+    @staticmethod
+    def _e_total(inputs: OptimizerInputs, p: np.ndarray, p_new: np.ndarray) -> np.ndarray:
+        e_z = inputs.e_comp * p / p_new
+        return inputs.e_comm + e_z
+
+    @staticmethod
+    def objective(e_x: np.ndarray) -> float:
+        """max/min ratio of expected per-worker total latency (Eq. 7)."""
+        lo = float(e_x.min())
+        return float(e_x.max()) / max(lo, 1e-12)
+
+    # -- h(p) via event-driven simulation ---------------------------------
+    def _estimate_h(
+        self, inputs: OptimizerInputs, p: np.ndarray, p_new: np.ndarray
+    ) -> float:
+        n = float(inputs.samples_per_worker.sum())
+        workers = []
+        for i in range(len(p_new)):
+            comm = GammaParams.from_mean_var(
+                max(inputs.e_comm[i], 1e-12), max(inputs.v_comm[i], 1e-18)
+            )
+            # linearised what-if computation latency at p'_i
+            e_z = max(inputs.e_comp[i] * p[i] / p_new[i], 1e-12)
+            v_z = max(inputs.v_comp[i] * (p[i] / p_new[i]) ** 2, 1e-18)
+            comp = GammaParams.from_mean_var(e_z, v_z)
+            workers.append(WorkerLatencyModel(comm=comm, comp_per_unit=comp))
+        cluster = ClusterLatencyModel(workers=workers, seed=self.seed)
+        sim = EventDrivenSimulator(cluster, loads=np.ones(len(p_new)))
+        u = sim.estimate_participation(
+            inputs.w, num_iterations=self.sim_iterations, margin=inputs.margin
+        )
+        return float(
+            np.sum(u * inputs.samples_per_worker / (p_new * n))
+        )
+
+    # -- Algorithm 1 -------------------------------------------------------
+    def optimize(self, p: Sequence[int], inputs: OptimizerInputs) -> np.ndarray:
+        p = np.asarray(p, dtype=np.int64)
+        if self.h_min is None:
+            # h_min = h(p_0): the contribution of the baseline partitioning
+            self.h_min = self._estimate_h(inputs, p, p)
+        p_new = p.astype(np.float64).copy()
+
+        # --- equalize total latency against the slowest worker ---
+        e_x = self._e_total(inputs, p, p_new)
+        slowest = int(np.argmax(e_x))
+        target = inputs.e_comm[slowest] + inputs.e_comp[slowest] * p[slowest] / p_new[slowest]
+        for j in range(len(p_new)):
+            denom = target - inputs.e_comm[j]
+            if denom <= 0:
+                p_new[j] = float(inputs.samples_per_worker[j])  # comm-bound: minimal work
+                continue
+            p_new[j] = max(np.floor(inputs.e_comp[j] * p[j] / denom), 1.0)
+
+        # --- restore contribution: give the fastest workers more work ---
+        rounds = 0
+        h = self._estimate_h(inputs, p, p_new)
+        while h < self.h_min * (1.0 - self.h_tolerance) and rounds < self.max_rounds:
+            e_x = self._e_total(inputs, p, p_new)
+            fastest = int(np.argmin(e_x))
+            reduced = np.floor(0.99 * p_new[fastest])
+            if reduced < 1.0 or reduced == p_new[fastest]:
+                # cannot increase this worker's load further; try next fastest
+                order = np.argsort(e_x)
+                moved = False
+                for idx in order[1:]:
+                    r2 = np.floor(0.99 * p_new[idx])
+                    if r2 >= 1.0 and r2 != p_new[idx]:
+                        p_new[idx] = r2
+                        moved = True
+                        break
+                if not moved:
+                    break
+            else:
+                p_new[fastest] = reduced
+            h = self._estimate_h(inputs, p, p_new)
+            rounds += 1
+
+        # --- spend slack: reduce the slowest workers' load while h holds ---
+        rounds = 0
+        while h >= 0.99 * self.h_min and rounds < self.max_rounds:
+            e_x = self._e_total(inputs, p, p_new)
+            slowest = int(np.argmax(e_x))
+            increased = np.ceil(1.01 * p_new[slowest])
+            if increased > inputs.samples_per_worker[slowest] or increased == p_new[slowest]:
+                increased = p_new[slowest] + 1
+                if increased > inputs.samples_per_worker[slowest]:
+                    break
+            p_prev = p_new[slowest]
+            p_new[slowest] = increased
+            h = self._estimate_h(inputs, p, p_new)
+            rounds += 1
+            if h < 0.99 * self.h_min:
+                p_new[slowest] = p_prev  # back out the violating step
+                break
+
+        return np.maximum(p_new, 1.0).astype(np.int64)
+
+    def should_publish(
+        self, p: Sequence[int], p_new: Sequence[int], inputs: OptimizerInputs
+    ) -> bool:
+        """Paper §6.3: only distribute p' if the Eq.-(7) objective improves by
+        more than ``improvement_threshold`` (cache evictions are costly)."""
+        p = np.asarray(p, dtype=np.float64)
+        p_new_arr = np.asarray(p_new, dtype=np.float64)
+        cur = self.objective(self._e_total(inputs, p, p))
+        new = self.objective(self._e_total(inputs, p, p_new_arr))
+        return new < cur * (1.0 - self.improvement_threshold)

@@ -1,0 +1,125 @@
+"""Partition arithmetic and alignment (paper §6.3).
+
+All indices are 1-based inclusive, matching the paper:
+
+    p_start(n, p, i) = floor((i-1)n/p) + 1
+    p_stop(n, p, i)  = floor(in/p)
+    p_trans(n, p, p', k) = ceil(p_start(n, p, k) * p' / n)
+
+``align_partitions`` is Algorithm 2: when a worker's subpartition count
+changes p -> p', find (k, k') such that the k'-th of p' partitions starts at
+the same sample as the k-th of p partitions, starting the search from the
+worker's next cyclic index so the first few subpartitions are not
+over-processed.  Termination is guaranteed because k = k' = 1 always aligns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+
+def p_start(n: int, p: int, i: int) -> int:
+    """First (1-based) sample of the i-th of p partitions of n samples."""
+    return (i - 1) * n // p + 1
+
+
+def p_stop(n: int, p: int, i: int) -> int:
+    """Last (1-based) sample of the i-th of p partitions of n samples."""
+    return i * n // p
+
+
+def p_trans(n: int, p: int, p_new: int, k: int) -> int:
+    """Index of the partition (out of p_new) containing sample
+    p_start(n, p, k)."""
+    return math.ceil(p_start(n, p, k) * p_new / n)
+
+
+def cyclic_increment(k: int, p: int) -> int:
+    """k <- mod(k, p) + 1 (paper Eq. 8)."""
+    return k % p + 1
+
+
+def _align(n: int, p: int, p_new: int, k: int) -> Tuple[int, int]:
+    """Algorithm 2 lines 2-6: walk down from k until boundaries align.
+
+    Termination: at k_new = 1 the recomputed k is p_trans(n, p_new, p, 1) = 1
+    and partition 1 always starts at sample 1 for any partition count, so the
+    pair (1, 1) aligns.  As *printed* in the paper the loop can decrement
+    k_new below 1 when the initial k_new = 1 is checked against the original
+    (unrelated) k — e.g. n=2, p=2 -> p_new=1 with k=2.  We guard that edge
+    case by falling back to the always-valid (1, 1) solution."""
+    k_new = p_trans(n, p, p_new, k)  # line 2
+    while p_start(n, p_new, k_new) != p_start(n, p, k):  # line 3
+        k_new -= 1  # line 4
+        if k_new < 1:
+            return 1, 1  # guaranteed-aligned fallback (see docstring)
+        k = p_trans(n, p_new, p, k_new)  # line 5
+    return k, k_new
+
+
+def align_partitions(n: int, p: int, p_new: int, k: int) -> Tuple[int, int]:
+    """Algorithm 2.  Returns (k_aligned_old, k_new) such that
+    ``p_start(n, p_new, k_new) == p_start(n, p, k_aligned_old)``.
+
+    ``k`` is the index of the partition the worker processed *last*; the
+    algorithm first advances it cyclically (line 1), then walks down until the
+    boundaries align."""
+    if not (1 <= p <= n and 1 <= p_new <= n):
+        raise ValueError(f"invalid partition counts p={p}, p_new={p_new} for n={n}")
+    if not (1 <= k <= p):
+        raise ValueError(f"k={k} out of range 1..{p}")
+    k = cyclic_increment(k, p)  # line 1
+    return _align(n, p, p_new, k)
+
+
+@dataclasses.dataclass
+class Subpartitioner:
+    """Per-worker subpartition bookkeeping (paper §6.3).
+
+    The worker owns global samples [base_start, base_stop] (1-based
+    inclusive); its n_i samples are split into p subpartitions processed in
+    cyclic order k = 1..p.  ``current_interval()`` maps the local subpartition
+    to *global* sample indices (what the gradient-cache keys on)."""
+
+    base_start: int
+    base_stop: int
+    p: int = 1
+    k: int = 1  # index of the NEXT subpartition to process
+
+    def __post_init__(self):
+        if self.base_stop < self.base_start:
+            raise ValueError("empty worker range")
+        self.p = min(self.p, self.n_local)
+
+    @property
+    def n_local(self) -> int:
+        return self.base_stop - self.base_start + 1
+
+    def current_interval(self) -> Tuple[int, int]:
+        lo = p_start(self.n_local, self.p, self.k)
+        hi = p_stop(self.n_local, self.p, self.k)
+        return self.base_start + lo - 1, self.base_start + hi - 1
+
+    def advance(self) -> None:
+        """Move to the next subpartition (paper Eq. 8)."""
+        self.k = cyclic_increment(self.k, self.p)
+
+    def repartition(self, p_new: int) -> None:
+        """Change the subpartition count using Algorithm-2 alignment so the
+        next processed subpartition starts where a cached one did."""
+        p_new = max(1, min(p_new, self.n_local))
+        if p_new == self.p:
+            return
+        # ``self.k`` already points at the NEXT subpartition (advance() ran
+        # after the last task), which is what Algorithm 2's line 1 produces —
+        # so enter the alignment loop directly at lines 2-6.
+        _, k_new = _align(self.n_local, self.p, p_new, self.k)
+        self.p = p_new
+        self.k = k_new
+
+    def next_interval_and_advance(self) -> Tuple[int, int]:
+        iv = self.current_interval()
+        self.advance()
+        return iv

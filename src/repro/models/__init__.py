@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures behind one API."""
+
+from repro.models.model import Model, build_model, cache_abstract, cache_specs
+
+__all__ = ["Model", "build_model", "cache_abstract", "cache_specs"]

@@ -1,0 +1,350 @@
+"""Attention blocks: GQA (+RoPE, optional QKV bias) and MLA (deepseek-v2),
+with train/prefill paths and KV-cached decode paths.
+
+TPU sharding layout:
+  * query heads sharded over 'model' (configs pad head counts to the TP
+    degree where needed — see configs/*.py);
+  * KV projection weights replicated (num_kv_heads is usually < TP degree);
+  * decode KV caches sharded over the *sequence* dim on 'model'
+    (flash-decode style: XLA partitions the softmax/contraction with
+    all-reduces of the per-shard partial stats);
+  * long prefills use a query-chunked online-softmax attention
+    (``chunked_attention``) so the S x S score matrix never materializes —
+    the pure-jnp analogue of the Pallas flash kernel in
+    ``repro/kernels/flash_attention.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDecl, apply_rope, tp_contract
+from repro.models.sharding import batch_spec, shard, shard_batch
+
+NEG_INF = -1e30
+# materialize full scores only below this many query positions
+CHUNKED_ATTENTION_THRESHOLD = 8_192
+QUERY_CHUNK = 1_024
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+
+def gqa_decls(cfg: ModelConfig, heads: Optional[int] = None) -> Dict[str, ParamDecl]:
+    from repro.models.transformer import padded_kv_heads
+
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h = heads or cfg.num_heads
+    kvh = padded_kv_heads(cfg)
+    out = {
+        "wq": ParamDecl((d, h, hd), ("embed", "heads", "head"), init="scaled"),
+        "wk": ParamDecl((d, kvh, hd), ("embed", "kv_heads", "head"), init="scaled"),
+        "wv": ParamDecl((d, kvh, hd), ("embed", "kv_heads", "head"), init="scaled"),
+        "wo": ParamDecl((h, hd, d), ("heads", "head", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDecl((h, hd), ("heads", "head"), init="zeros")
+        out["bk"] = ParamDecl((kvh, hd), ("kv_heads", "head"), init="zeros")
+        out["bv"] = ParamDecl((kvh, hd), ("kv_heads", "head"), init="zeros")
+    return out
+
+
+def mla_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope, vh, lora = (
+        cfg.qk_nope_dim,
+        cfg.qk_rope_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    return {
+        "wq": ParamDecl((d, h, nope + rope), ("embed", "heads", "head"), init="scaled"),
+        "w_dkv": ParamDecl((d, lora), ("embed", "lora"), init="scaled"),
+        "w_kr": ParamDecl((d, rope), ("embed", "head"), init="scaled"),
+        "kv_norm": ParamDecl((lora,), ("lora",), init="ones", dtype="float32"),
+        "w_uk": ParamDecl((lora, h, nope), ("lora", "heads", "head"), init="scaled"),
+        "w_uv": ParamDecl((lora, h, vh), ("lora", "heads", "head"), init="scaled"),
+        "wo": ParamDecl((h, vh, d), ("heads", "head", "embed"), init="scaled"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """[b, s, kvh, d] -> [b, s, kvh*n, d]."""
+    if n == 1:
+        return x
+    return jnp.repeat(x, n, axis=2)
+
+
+def full_attention(
+    q: jnp.ndarray,  # [b, sq, h, d]
+    k: jnp.ndarray,  # [b, sk, h, d]
+    v: jnp.ndarray,  # [b, sk, h, dv]
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    scale = scale or 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    probs = shard_batch(probs, "model", None, None)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    chunk: int = QUERY_CHUNK,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Query-chunked online-softmax attention (flash-style, pure jnp).
+
+    Scans over query chunks; per-chunk memory is [b, h, chunk, sk]."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale or 1.0 / math.sqrt(d)
+    if sq % chunk != 0:  # fall back (shapes here are powers of two anyway)
+        return full_attention(q, k, v, causal=causal, q_offset=q_offset, scale=scale)
+    nchunks = sq // chunk
+    qc = q.reshape(b, nchunks, chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    kpos = jnp.arange(sk)
+
+    def body(carry, args):
+        i, qblk = args  # qblk: [b, chunk, h, d]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qblk, k).astype(jnp.float32) * scale
+        if causal:
+            qpos = i * chunk + jnp.arange(chunk) + q_offset
+            mask = kpos[None, :] <= qpos[:, None]
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nchunks), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dv)
+
+
+def _attend(q, k, v, *, causal, q_offset=0, scale=None):
+    if q.shape[1] > CHUNKED_ATTENTION_THRESHOLD:
+        return chunked_attention(q, k, v, causal=causal, q_offset=q_offset, scale=scale)
+    return full_attention(q, k, v, causal=causal, q_offset=q_offset, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: ModelConfig, params, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def gqa_forward(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,  # [b, s, d]
+    positions: jnp.ndarray,  # [b, s]
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Training / prefill attention over a full sequence."""
+    q, k, v = _project_qkv(cfg, params, x)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_batch(q, None, "model", None)
+    groups = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    out = _attend(q, k, v, causal=causal)
+    out = shard_batch(out, None, "model", None)
+    return tp_contract("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def gqa_prefill_with_cache(
+    cfg: ModelConfig, params, x, positions, cache_len: int, *, use_rope: bool = True
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Prefill that also returns a KV cache padded to ``cache_len``,
+    sequence-sharded over 'model' for the decode phase."""
+    q, k, v = _project_qkv(cfg, params, x)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    pad = cache_len - s
+    k_cache = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v_cache = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_cache = shard_batch(k_cache, "model", None, None)
+    v_cache = shard_batch(v_cache, "model", None, None)
+    groups = q.shape[2] // k.shape[2]
+    out = _attend(q, _repeat_kv(k, groups), _repeat_kv(v, groups), causal=True)
+    out = shard_batch(out, None, "model", None)
+    y = tp_contract("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def gqa_decode_step(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,  # [b, 1, d]
+    cache: Dict[str, jnp.ndarray],  # k/v: [b, S, kvh, hd], seq-sharded
+    index: jnp.ndarray,  # [] int32: number of tokens already in cache
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    q, k_new, v_new = _project_qkv(cfg, params, x)
+    if use_rope:
+        pos = jnp.full((x.shape[0], 1), index, dtype=jnp.int32)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, index, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, index, 0, 0))
+    k = shard_batch(k, "model", None, None)
+    v = shard_batch(v, "model", None, None)
+    groups = q.shape[2] // k.shape[2]
+    kk = _repeat_kv(k, groups)
+    vv = _repeat_kv(v, groups)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    valid = jnp.arange(k.shape[1])[None, None, None, :] <= index
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    y = tp_contract("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2): low-rank compressed KV
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(cfg, params, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(cfg, params, x, positions):
+    c_kv = jnp.einsum("bsd,dl->bsl", x, params["w_dkv"].astype(x.dtype))
+    # RMSNorm on the compressed kv stream (deepseek-v2)
+    c32 = c_kv.astype(jnp.float32)
+    c32 = c32 * jax.lax.rsqrt(jnp.mean(jnp.square(c32), -1, keepdims=True) + cfg.norm_eps)
+    c_kv = (c32 * params["kv_norm"]).astype(x.dtype)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["w_kr"].astype(x.dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(cfg: ModelConfig, params, x, positions, *, causal: bool = True):
+    """Expanded-form MLA for training/prefill."""
+    q_nope, q_rope = _mla_q(cfg, params, x, positions)
+    c_kv, k_rope = _mla_ckv(cfg, params, x, positions)
+    k_nope = jnp.einsum("bsl,lhn->bshn", c_kv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsl,lhn->bshn", c_kv, params["w_uv"].astype(x.dtype))
+    h = k_nope.shape[2]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], k_rope.shape[:2] + (h, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    q = shard_batch(q, None, "model", None)
+    k = shard_batch(k, None, "model", None)
+    out = _attend(q, k, v, causal=causal, scale=1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim))
+    out = shard_batch(out, None, "model", None)
+    return tp_contract("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def mla_prefill_with_cache(cfg, params, x, positions, cache_len: int):
+    y = mla_forward(cfg, params, x, positions, causal=True)
+    c_kv, k_rope = _mla_ckv(cfg, params, x, positions)
+    pad = cache_len - x.shape[1]
+    cache = {
+        "c_kv": shard_batch(jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))), "model", None),
+        "k_rope": shard_batch(jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))), "model", None),
+    }
+    return y, cache
+
+
+def mla_decode_step(cfg: ModelConfig, params, x, cache, index):
+    """Absorbed-matmul MLA decode: attention runs in the compressed space —
+    the cache holds only c_kv [b, S, lora] and k_rope [b, S, rope]."""
+    b = x.shape[0]
+    pos = jnp.full((b, 1), index, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, params, x, pos)
+    c_new, kr_new = _mla_ckv(cfg, params, x, pos)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, index, 0))
+    c_kv = shard_batch(c_kv, "model", None)
+    k_rope = shard_batch(k_rope, "model", None)
+    # absorb W_uk into the query:  q~ = W_uk^T q_nope   [b, 1, h, lora]
+    q_t = jnp.einsum("bqhn,lhn->bqhl", q_nope, params["w_uk"].astype(x.dtype))
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_t, c_kv)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(c_kv.shape[1])[None, None, None, :] <= index
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", probs, c_kv)  # attend in compressed space
+    out = jnp.einsum("bqhl,lhn->bqhn", ctx, params["w_uv"].astype(x.dtype))
+    y = tp_contract("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_forward(
+    cfg: ModelConfig, params, x, enc_k, enc_v
+) -> jnp.ndarray:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+    groups = q.shape[2] // enc_k.shape[2]
+    out = _attend(q, _repeat_kv(enc_k, groups), _repeat_kv(enc_v, groups), causal=False)
+    return tp_contract("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def encoder_kv(cfg: ModelConfig, params, enc_out) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + params["bk"].astype(enc_out.dtype)
+        v = v + params["bv"].astype(enc_out.dtype)
+    return k, v

@@ -1,0 +1,460 @@
+"""Unified model API over all assigned architectures.
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+
+  * ``init(key)`` / ``abstract()`` / ``param_specs(fsdp)``
+  * ``train_loss(params, batch, remat)``   (next-token CE + MoE aux)
+  * ``prefill(params, batch, cache_len)`` -> (last_logits, cache)
+  * ``decode_step(params, tokens, cache, index)`` -> (logits, cache)
+  * ``cache_abstract(shape)`` / ``cache_specs()``  (dry-run serving inputs)
+
+Batch layouts:
+  LM:      {"tokens": [b, s] int32}
+  enc-dec: {"tokens": [b, s], "audio_embed": [b, enc_seq, d]}   (stub frontend)
+  VLM:     {"tokens": [b, s - n_img], "image_embed": [b, n_img, d]}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ParamDecl,
+    abstract_from_decls,
+    apply_norm,
+    embed_decls,
+    init_from_decls,
+    make_rules,
+    mlp_apply,
+    mlp_decls,
+    norm_decls,
+    specs_from_decls,
+)
+from repro.models.sharding import batch_spec, dp_axes, shard_batch
+from repro.models.transformer import (
+    AUX_LOSS_COEF,
+    fused_next_token_loss,
+    padded_kv_heads,
+    _apply_block,
+    _apply_shared_attn,
+    _remat,
+    backbone_forward,
+    embed_inputs,
+    lm_decls,
+    lm_logits,
+    next_token_loss,
+    padded_heads,
+    stack_decls,
+)
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder-decoder declarations
+# ---------------------------------------------------------------------------
+
+
+def encdec_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    enc_block = {
+        "ln1": norm_decls(cfg),
+        "attn": attn.gqa_decls(cfg, heads=padded_heads(cfg)),
+        "ln2": norm_decls(cfg),
+        "mlp": mlp_decls(cfg, swiglu=False),
+    }
+    dec_block = {
+        "ln1": norm_decls(cfg),
+        "attn": attn.gqa_decls(cfg, heads=padded_heads(cfg)),
+        "ln_x": norm_decls(cfg),
+        "cross": attn.gqa_decls(cfg, heads=padded_heads(cfg)),
+        "ln2": norm_decls(cfg),
+        "mlp": mlp_decls(cfg, swiglu=False),
+    }
+    return {
+        "embed": embed_decls(cfg),
+        "enc_pos": ParamDecl((cfg.encoder_seq, cfg.d_model), ("pos", "embed")),
+        "pos": ParamDecl((cfg.max_position_embeddings, cfg.d_model), ("pos", "embed")),
+        "enc_blocks": stack_decls(enc_block, cfg.encoder_layers),
+        "enc_ln_f": norm_decls(cfg),
+        "blocks": stack_decls(dec_block, cfg.num_layers),
+        "ln_f": norm_decls(cfg),
+    }
+
+
+def _encode(cfg: ModelConfig, params, audio_embed):
+    dtype = jnp.dtype(cfg.dtype)
+    x = audio_embed.astype(dtype) + params["enc_pos"][None].astype(dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(carry, lp):
+        h = apply_norm(cfg, lp["ln1"], carry)
+        carry = carry + attn.gqa_forward(cfg, lp["attn"], h, positions, causal=False, use_rope=False)
+        h = apply_norm(cfg, lp["ln2"], carry)
+        carry = carry + mlp_apply(lp["mlp"], h, swiglu=False)
+        return carry, None
+
+    x, _ = jax.lax.scan(_remat(body, "full"), x, params["enc_blocks"])
+    return apply_norm(cfg, params["enc_ln_f"], x)
+
+
+def _encdec_decoder(cfg, params, x, positions, enc_out, remat):
+    """Full-sequence decoder pass (train/prefill)."""
+
+    def body(carry, lp):
+        h = apply_norm(cfg, lp["ln1"], carry)
+        carry = carry + attn.gqa_forward(cfg, lp["attn"], h, positions, causal=True, use_rope=False)
+        h = apply_norm(cfg, lp["ln_x"], carry)
+        ek, ev = attn.encoder_kv(cfg, lp["cross"], enc_out)
+        carry = carry + attn.cross_attention_forward(cfg, lp["cross"], h, ek, ev)
+        h = apply_norm(cfg, lp["ln2"], carry)
+        carry = carry + mlp_apply(lp["mlp"], h, swiglu=False)
+        return carry, None
+
+    x, _ = jax.lax.scan(_remat(body, remat), x, params["blocks"])
+    return apply_norm(cfg, params["ln_f"], x)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache construction
+# ---------------------------------------------------------------------------
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """ShapeDtypeStructs of the decode cache for this architecture."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    L, b, S = cfg.num_layers, batch, cache_len
+    hd = cfg.resolved_head_dim
+    kvh = padded_kv_heads(cfg)
+
+    def sd(shape, d=dt):
+        return jax.ShapeDtypeStruct(shape, d)
+
+    if cfg.family == "enc_dec":
+        enc = cfg.encoder_seq
+        return {
+            "k": sd((L, b, S, kvh, hd)),
+            "v": sd((L, b, S, kvh, hd)),
+            "cross_k": sd((L, b, enc, kvh, hd)),
+            "cross_v": sd((L, b, enc, kvh, hd)),
+        }
+    if cfg.use_mla:
+        return {
+            "c_kv": sd((L, b, S, cfg.kv_lora_rank)),
+            "k_rope": sd((L, b, S, cfg.qk_rope_dim)),
+        }
+    if cfg.family == "ssm":
+        d_inner, h, n = ssm_mod.ssm_dims(cfg)
+        c = cfg.ssm_conv - 1
+        return {
+            "state": sd((L, b, h, cfg.ssm_head_dim, n), jnp.float32),
+            "conv": {
+                "x": sd((L, b, c, d_inner)),
+                "B": sd((L, b, c, ssm_mod.N_GROUPS * n)),
+                "C": sd((L, b, c, ssm_mod.N_GROUPS * n)),
+            },
+        }
+    if cfg.family == "hybrid":
+        d_inner, h, n = ssm_mod.ssm_dims(cfg)
+        c = cfg.ssm_conv - 1
+        groups = cfg.num_layers // cfg.attn_every
+        return {
+            "mamba": {
+                "state": sd((L, b, h, cfg.ssm_head_dim, n), jnp.float32),
+                "conv": {
+                    "x": sd((L, b, c, d_inner)),
+                    "B": sd((L, b, c, ssm_mod.N_GROUPS * n)),
+                    "C": sd((L, b, c, ssm_mod.N_GROUPS * n)),
+                },
+            },
+            "shared": {
+                "k": sd((groups, b, S, kvh, hd)),
+                "v": sd((groups, b, S, kvh, hd)),
+            },
+        }
+    return {"k": sd((L, b, S, kvh, hd)), "v": sd((L, b, S, kvh, hd))}
+
+
+def cache_specs(cfg: ModelConfig) -> Any:
+    """PartitionSpec tree matching :func:`cache_abstract`."""
+    dp = dp_axes()
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    kv = P(None, dp, "model", None, None)
+    if cfg.family == "enc_dec":
+        cross = P(None, dp, None, None, None)  # enc_seq (1500) not shardable
+        return {"k": kv, "v": kv, "cross_k": cross, "cross_v": cross}
+    if cfg.use_mla:
+        return {"c_kv": P(None, dp, "model", None), "k_rope": P(None, dp, "model", None)}
+    ssm_spec = {
+        "state": P(None, dp, "model", None, None),
+        "conv": {
+            "x": P(None, dp, None, "model"),
+            "B": P(None, dp, None, None),
+            "C": P(None, dp, None, None),
+        },
+    }
+    if cfg.family == "ssm":
+        return ssm_spec
+    if cfg.family == "hybrid":
+        return {"mamba": ssm_spec, "shared": {"k": kv, "v": kv}}
+    return {"k": kv, "v": kv}
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.decls = (
+            encdec_decls(self.cfg) if self.cfg.family == "enc_dec" else lm_decls(self.cfg)
+        )
+
+    # -- parameters -------------------------------------------------------
+    def init(self, key) -> Any:
+        return init_from_decls(self.decls, key, jnp.dtype(self.cfg.dtype))
+
+    def abstract(self) -> Any:
+        return abstract_from_decls(self.decls, jnp.dtype(self.cfg.dtype))
+
+    def param_specs(self, fsdp: bool = False) -> Any:
+        return specs_from_decls(self.decls, make_rules(self.cfg, fsdp))
+
+    def num_params(self) -> int:
+        import math
+
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(self.abstract()))
+
+    # -- training ----------------------------------------------------------
+    def train_loss(
+        self, params, batch, *, remat: str = "full", fused_loss: bool = False
+    ) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "enc_dec":
+            enc_out = _encode(cfg, params, batch["audio_embed"])
+            x = embed_inputs(cfg, params, tokens)
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+            x = _encdec_decoder(cfg, params, x, positions, enc_out, remat)
+            if fused_loss:
+                return fused_next_token_loss(cfg, params, x, tokens)
+            logits = lm_logits(cfg, params, x)
+            return next_token_loss(cfg, logits, tokens)
+        image = batch.get("image_embed") if isinstance(batch, dict) else None
+        x = embed_inputs(cfg, params, tokens, image_embed=image)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, aux = backbone_forward(cfg, params, x, positions, remat=remat)
+        x = apply_norm(cfg, params["ln_f"], x)
+        offset = cfg.num_image_tokens if image is not None else 0
+        if fused_loss:
+            ce = fused_next_token_loss(cfg, params, x, tokens, text_offset=offset)
+        else:
+            logits = lm_logits(cfg, params, x)
+            ce = next_token_loss(cfg, logits, tokens, text_offset=offset)
+        return ce + (AUX_LOSS_COEF * aux if cfg.num_experts else 0.0)
+
+    # -- serving: prefill ---------------------------------------------------
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        if cfg.family == "enc_dec":
+            return self._prefill_encdec(params, batch, cache_len)
+        image = batch.get("image_embed") if isinstance(batch, dict) else None
+        x = embed_inputs(cfg, params, tokens, image_embed=image)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x = shard_batch(x, None, None)
+
+        if cfg.family in ("ssm", "hybrid"):
+            x, cache = self._prefill_recurrent(params, x, positions, cache_len)
+        else:
+            def body(carry, lp):
+                h = apply_norm(cfg, lp["ln1"], carry)
+                if cfg.use_mla:
+                    y, c = attn.mla_prefill_with_cache(cfg, lp["attn"], h, positions, cache_len)
+                else:
+                    y, c = attn.gqa_prefill_with_cache(cfg, lp["attn"], h, positions, cache_len)
+                carry = carry + y
+                h = apply_norm(cfg, lp["ln2"], carry)
+                if cfg.num_experts:
+                    yy, _ = moe_mod.moe_apply(cfg, lp["moe"], h)
+                    carry = carry + yy
+                else:
+                    carry = carry + mlp_apply(lp["mlp"], h, swiglu=cfg.mlp_swiglu)
+                return carry, c
+
+            x, cache = jax.lax.scan(body, x, params["blocks"])
+        x = apply_norm(cfg, params["ln_f"], x)
+        logits = lm_logits(cfg, params, x[:, -1:])
+        return logits, cache
+
+    def _prefill_recurrent(self, params, x, positions, cache_len):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            def body(carry, lp):
+                h = apply_norm(cfg, lp["ln"], carry)
+                y, st = ssm_mod.mamba_forward(cfg, lp["mamba"], h, return_state=True)
+                return carry + y, st
+
+            return jax.lax.scan(body, x, params["blocks"])
+        # hybrid: groups of mamba layers + shared attention with its own cache
+        k = cfg.attn_every
+        groups = cfg.num_layers // k
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]), params["blocks"]
+        )
+
+        def group_body(carry, gp):
+            def layer_body(c, lp):
+                h = apply_norm(cfg, lp["ln"], c)
+                y, st = ssm_mod.mamba_forward(cfg, lp["mamba"], h, return_state=True)
+                return c + y, st
+
+            xx, mcache = jax.lax.scan(layer_body, carry, gp)
+            sp = params["shared_attn"]
+            h = apply_norm(cfg, sp["ln1"], xx)
+            y, kvc = attn.gqa_prefill_with_cache(cfg, sp["attn"], h, positions, cache_len)
+            xx = xx + y
+            h = apply_norm(cfg, sp["ln2"], xx)
+            xx = xx + mlp_apply(sp["mlp"], h, swiglu=True)
+            return xx, (mcache, kvc)
+
+        x, (mcache, kvc) = jax.lax.scan(group_body, x, stacked)
+        mcache = jax.tree.map(
+            lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), mcache
+        )
+        return x, {"mamba": mcache, "shared": kvc}
+
+    def _prefill_encdec(self, params, batch, cache_len):
+        cfg = self.cfg
+        enc_out = _encode(cfg, params, batch["audio_embed"])
+        tokens = batch["tokens"]
+        x = embed_inputs(cfg, params, tokens)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+        def body(carry, lp):
+            h = apply_norm(cfg, lp["ln1"], carry)
+            y, c = attn.gqa_prefill_with_cache(cfg, lp["attn"], h, positions, cache_len, use_rope=False)
+            carry = carry + y
+            h = apply_norm(cfg, lp["ln_x"], carry)
+            ek, ev = attn.encoder_kv(cfg, lp["cross"], enc_out)
+            carry = carry + attn.cross_attention_forward(cfg, lp["cross"], h, ek, ev)
+            h = apply_norm(cfg, lp["ln2"], carry)
+            carry = carry + mlp_apply(lp["mlp"], h, swiglu=False)
+            return carry, (c, ek, ev)
+
+        x, (c, ek, ev) = jax.lax.scan(body, x, params["blocks"])
+        x = apply_norm(cfg, params["ln_f"], x)
+        logits = lm_logits(cfg, params, x[:, -1:])
+        return logits, {"k": c["k"], "v": c["v"], "cross_k": ek, "cross_v": ev}
+
+    # -- serving: one decode step -------------------------------------------
+    def decode_step(self, params, tokens, cache, index):
+        """tokens: [b, 1]; index: [] int32 tokens already in the cache."""
+        cfg = self.cfg
+        x = embed_inputs(cfg, params, tokens, offset=index)
+        x = shard_batch(x, None, None)
+
+        if cfg.family == "enc_dec":
+            def body(carry, xs):
+                lp, c, ek, ev = xs
+                h = apply_norm(cfg, lp["ln1"], carry)
+                y, cc = attn.gqa_decode_step(cfg, lp["attn"], h, c, index, use_rope=False)
+                carry = carry + y
+                h = apply_norm(cfg, lp["ln_x"], carry)
+                carry = carry + attn.cross_attention_forward(cfg, lp["cross"], h, ek, ev)
+                h = apply_norm(cfg, lp["ln2"], carry)
+                carry = carry + mlp_apply(lp["mlp"], h, swiglu=False)
+                return carry, cc
+
+            kv = {"k": cache["k"], "v": cache["v"]}
+            x, new_kv = jax.lax.scan(
+                body, x, (params["blocks"], kv, cache["cross_k"], cache["cross_v"])
+            )
+            new_cache = dict(new_kv, cross_k=cache["cross_k"], cross_v=cache["cross_v"])
+        elif cfg.family == "ssm":
+            def body(carry, xs):
+                lp, c = xs
+                h = apply_norm(cfg, lp["ln"], carry)
+                y, cc = ssm_mod.mamba_decode_step(cfg, lp["mamba"], h, c)
+                return carry + y, cc
+
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        elif cfg.family == "hybrid":
+            k = cfg.attn_every
+            groups = cfg.num_layers // k
+            stacked = jax.tree.map(
+                lambda a: a.reshape((groups, k) + a.shape[1:]), params["blocks"]
+            )
+            mcache = jax.tree.map(
+                lambda a: a.reshape((groups, k) + a.shape[1:]), cache["mamba"]
+            )
+
+            def group_body(carry, xs):
+                gp, mc, sc = xs
+
+                def layer_body(c, l_xs):
+                    lp, lc = l_xs
+                    h = apply_norm(cfg, lp["ln"], c)
+                    y, cc = ssm_mod.mamba_decode_step(cfg, lp["mamba"], h, lc)
+                    return c + y, cc
+
+                xx, new_mc = jax.lax.scan(layer_body, carry, (gp, mc))
+                sp = params["shared_attn"]
+                h = apply_norm(cfg, sp["ln1"], xx)
+                y, new_sc = attn.gqa_decode_step(cfg, sp["attn"], h, sc, index)
+                xx = xx + y
+                h = apply_norm(cfg, sp["ln2"], xx)
+                xx = xx + mlp_apply(sp["mlp"], h, swiglu=True)
+                return xx, (new_mc, new_sc)
+
+            x, (new_mc, new_sc) = jax.lax.scan(group_body, x, (stacked, mcache, cache["shared"]))
+            new_cache = {
+                "mamba": jax.tree.map(
+                    lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), new_mc
+                ),
+                "shared": new_sc,
+            }
+        else:
+            def body(carry, xs):
+                lp, c = xs
+                h = apply_norm(cfg, lp["ln1"], carry)
+                if cfg.use_mla:
+                    y, cc = attn.mla_decode_step(cfg, lp["attn"], h, c, index)
+                else:
+                    y, cc = attn.gqa_decode_step(cfg, lp["attn"], h, c, index)
+                carry = carry + y
+                h = apply_norm(cfg, lp["ln2"], carry)
+                if cfg.num_experts:
+                    yy, _ = moe_mod.moe_apply(cfg, lp["moe"], h)
+                    carry = carry + yy
+                else:
+                    carry = carry + mlp_apply(lp["mlp"], h, swiglu=cfg.mlp_swiglu)
+                return carry, cc
+
+            x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+        x = apply_norm(cfg, params["ln_f"], x)
+        logits = lm_logits(cfg, params, x)
+        return logits, new_cache
+
+    # -- dry-run helpers -----------------------------------------------------
+    def cache_abstract(self, batch: int, cache_len: int):
+        return cache_abstract(self.cfg, batch, cache_len)
+
+    def cache_specs(self):
+        return cache_specs(self.cfg)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,116 @@
+"""Activation-sharding helpers.
+
+A process-global mesh is installed by the trainer / dry-run / server; layer
+code calls :func:`shard` to constrain intermediate activations.  With no mesh
+installed (single-device smoke tests) the constraints are no-ops, so the same
+model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def dp_axes() -> Tuple[str, ...]:
+    """Mesh axes that carry data parallelism (('pod','data') when present)."""
+    if _MESH is None:
+        return ()
+    return tuple(a for a in _MESH.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(*rest) -> P:
+    """PartitionSpec with the batch dim over all DP axes."""
+    axes = dp_axes()
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *rest)
+
+
+def shard(x, spec: P):
+    """with_sharding_constraint that no-ops without an installed mesh."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def shard_batch(x, *rest):
+    return shard(x, batch_spec(*rest))
+
+
+def strip_axis(spec: P, axis: str = "data") -> P:
+    """Remove one mesh axis from every dim of a PartitionSpec."""
+    out = []
+    for e in tuple(spec):
+        if e == axis:
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a != axis)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def degather(params, param_specs, mesh, quantized: bool = False):
+    """ZeRO-3 gather-at-use: constrain FSDP-sharded parameters to their
+    TP-only layout inside the step.  XLA materializes the all-gather here and
+    reduce-scatters gradients through the transpose; parameter *storage* at
+    the jit boundary stays fully sharded.
+
+    ``quantized=True`` compresses the weight all-gather to int8 (+bf16
+    per-row scales): quantize while sharded, gather the int8 payload, and
+    dequantize locally — halving the dominant FSDP collective volume.
+    Gradients flow through the straight-through dequant (the quantizer is
+    treated as identity for the backward, standard QAT practice)."""
+    if mesh is None:
+        return params
+
+    def gathered(spec):
+        return strip_axis(spec, "data")
+
+    def leaf(x, spec):
+        if not quantized or x.ndim < 2 or x.dtype == jnp.float32:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, gathered(spec))
+            )
+        from repro.optim.compression import dequantize, quantize
+
+        @jax.custom_vjp
+        def q_gather(w):
+            q = quantize(w, block=w.shape[-1])
+            qv = jax.lax.with_sharding_constraint(
+                q.q, NamedSharding(mesh, gathered(spec))
+            )
+            sc = jax.lax.with_sharding_constraint(
+                q.scale,
+                NamedSharding(mesh, P(*tuple(gathered(spec))[:-1], None)),
+            )
+            return dequantize(type(q)(qv, sc, q.block), w.dtype)
+
+        def fwd(w):
+            return q_gather(w), None
+
+        def bwd(_, g):  # straight-through: grads reshard via the transpose
+            return (jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, P(*tuple(spec)))
+            ),)
+
+        q_gather.defvjp(fwd, bwd)
+        return q_gather(x)
+
+    return jax.tree.map(leaf, params, param_specs,
+                        is_leaf=lambda x: hasattr(x, "shape"))

@@ -1,0 +1,225 @@
+"""Mamba2 (SSD — state-space duality) sequence mixing.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence is split into chunks of
+length L; within a chunk the recurrence is computed as a masked, decay-
+weighted attention-like quadratic form; chunk-final states are carried by a
+(sequential) scan and injected into the next chunk.  Decode maintains the
+recurrent state [b, h, p, n] plus a small causal-conv tail — O(1) per token,
+which is why the SSM/hybrid archs run the ``long_500k`` cell.
+
+Sharding: heads ('ssm_heads' / 'd_inner') over 'model'; the B/C streams
+(n_groups = 1) are replicated — they are tiny.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDecl, tp_contract
+from repro.models.sharding import shard_batch
+
+N_GROUPS = 1
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_state
+
+
+def mamba_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    d = cfg.d_model
+    d_inner, h, n = ssm_dims(cfg)
+    gn = N_GROUPS * n
+    conv = cfg.ssm_conv
+    return {
+        "wz": ParamDecl((d, d_inner), ("embed", "d_inner"), init="scaled"),
+        "wx": ParamDecl((d, d_inner), ("embed", "d_inner"), init="scaled"),
+        "wB": ParamDecl((d, gn), ("embed", "state"), init="scaled"),
+        "wC": ParamDecl((d, gn), ("embed", "state"), init="scaled"),
+        "w_dt": ParamDecl((d, h), ("embed", "ssm_heads"), init="scaled"),
+        "dt_bias": ParamDecl((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "A_log": ParamDecl((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "D": ParamDecl((h,), ("ssm_heads",), init="ones", dtype="float32"),
+        "conv_x": ParamDecl((conv, d_inner), ("conv", "d_inner"), init="scaled"),
+        "conv_B": ParamDecl((conv, gn), ("conv", "state"), init="scaled"),
+        "conv_C": ParamDecl((conv, gn), ("conv", "state"), init="scaled"),
+        "norm": ParamDecl((d_inner,), ("d_inner",), init="ones", dtype="float32"),
+        "out_proj": ParamDecl((d_inner, d), ("d_inner", "embed"), init="scaled"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over [b, s, ch] with kernel [k, ch].
+    ``tail`` [b, k-1, ch] prepends state from previous tokens (decode)."""
+    k = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD over a full sequence.
+
+    x: [b, s, h, p]; dt: [b, s, h] (post-softplus); A: [h] (negative);
+    B, C: [b, s, n] (single group).  Returns (y [b,s,h,p], state [b,h,p,n])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    if s % L:
+        pad = L - s % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    c = sp // L
+    xc = x.reshape(b, c, L, h, p)
+    dtc = dt.reshape(b, c, L, h).astype(jnp.float32)
+    Bc = B.reshape(b, c, L, n)
+    Cc = C.reshape(b, c, L, n)
+
+    dA = dtc * A  # [b,c,L,h], negative
+    dA_cs = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+    seg_sum = dA_cs[:, :, -1:, :]  # [b,c,1,h]
+
+    # intra-chunk: y[i] += sum_{j<=i} C_i.B_j exp(dAcs_i - dAcs_j) dt_j x_j
+    decay = jnp.exp(dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :])  # [b,c,i,j,h]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    attn = cb[..., None] * decay  # [b,c,i,j,h]
+    dtx = dtc[..., None] * xc.astype(jnp.float32)  # [b,c,L,h,p]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", attn, dtx)
+
+    # chunk-final states: S_c = sum_j B_j exp(seg - dAcs_j) dt_j x_j
+    state_decay = jnp.exp(seg_sum - dA_cs)  # [b,c,L,h]
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc.astype(jnp.float32),
+                        state_decay * dtc, xc.astype(jnp.float32))
+
+    # inter-chunk recurrence: h_c = exp(seg_c) h_{c-1} + S_c
+    seg = jnp.exp(seg_sum[:, :, 0, :])  # [b,c,h]
+
+    def scan_fn(carry, inp):
+        s_c, g_c = inp  # [b,h,p,n], [b,h]
+        new = carry * g_c[..., None, None] + s_c
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init, (states.transpose(1, 0, 2, 3, 4), seg.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,c,h,p,n]
+
+    # inter-chunk contribution: y[i] += C_i exp(dAcs_i) h_prev
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc.astype(jnp.float32),
+                       prev_states, jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y, final
+
+
+def mamba_forward(
+    cfg: ModelConfig, params, x: jnp.ndarray, *, return_state: bool = False
+):
+    """Full-sequence Mamba2 block (train / prefill).  x: [b, s, d]."""
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(x.dtype))
+    xin = jnp.einsum("bsd,de->bse", x, params["wx"].astype(x.dtype))
+    Braw = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(x.dtype))
+    Craw = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(x.dtype))
+
+    xc = _causal_conv(xin, params["conv_x"].astype(x.dtype))
+    Bc = _causal_conv(Braw, params["conv_B"].astype(x.dtype))
+    Cc = _causal_conv(Craw, params["conv_C"].astype(x.dtype))
+
+    d_inner, h, n = ssm_dims(cfg)
+    p = cfg.ssm_head_dim
+    xh = xc.reshape(*xc.shape[:2], h, p)
+    xh = shard_batch(xh, None, "model", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])  # [h]
+
+    y, state = _ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:2], d_inner)
+
+    # gated RMSNorm
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(jnp.square(g), -1, keepdims=True) + cfg.norm_eps)
+    g = (g * params["norm"]).astype(x.dtype)
+    out = tp_contract("bse,ed->bsd", g, params["out_proj"].astype(x.dtype))
+    if return_state:
+        conv_tail = {
+            "x": xin[:, -(cfg.ssm_conv - 1):, :],
+            "B": Braw[:, -(cfg.ssm_conv - 1):, :],
+            "C": Craw[:, -(cfg.ssm_conv - 1):, :],
+        }
+        return out, {"state": state, "conv": conv_tail}
+    return out
+
+
+def mamba_decode_step(cfg: ModelConfig, params, x: jnp.ndarray, cache):
+    """Single-token recurrent step.  x: [b, 1, d]; cache from prefill."""
+    d_inner, h, n = ssm_dims(cfg)
+    p = cfg.ssm_head_dim
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(x.dtype))
+    xin = jnp.einsum("bsd,de->bse", x, params["wx"].astype(x.dtype))
+    Braw = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(x.dtype))
+    Craw = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(x.dtype))
+
+    conv = cache["conv"]
+    xc = _causal_conv(xin, params["conv_x"].astype(x.dtype), tail=conv["x"])
+    Bc = _causal_conv(Braw, params["conv_B"].astype(x.dtype), tail=conv["B"])
+    Cc = _causal_conv(Craw, params["conv_C"].astype(x.dtype), tail=conv["C"])
+    new_conv = {
+        "x": jnp.concatenate([conv["x"].astype(x.dtype), xin], 1)[:, 1:],
+        "B": jnp.concatenate([conv["B"].astype(x.dtype), Braw], 1)[:, 1:],
+        "C": jnp.concatenate([conv["C"].astype(x.dtype), Craw], 1)[:, 1:],
+    }
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # [b,h]
+    A = -jnp.exp(params["A_log"])
+    g_decay = jnp.exp(dt * A)  # [b,h]
+    xh = xc[:, 0].reshape(-1, h, p).astype(jnp.float32)  # [b,h,p]
+    Bv = Bc[:, 0].astype(jnp.float32)  # [b,n]
+    Cv = Cc[:, 0].astype(jnp.float32)
+    state = cache["state"]  # [b,h,p,n]
+    state = state * g_decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bv
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, Cv) + params["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner)
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(jnp.square(g), -1, keepdims=True) + cfg.norm_eps)
+    g = (g * params["norm"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", g, params["out_proj"].astype(x.dtype))
+    return out, {"state": state, "conv": new_conv}
+
+
+def mamba_reference_recurrent(cfg: ModelConfig, params, x: jnp.ndarray):
+    """Token-by-token recurrence oracle (tests): must match mamba_forward."""
+    b, s, d = x.shape
+    d_inner, h, n = ssm_dims(cfg)
+    p = cfg.ssm_head_dim
+    cache = {
+        "state": jnp.zeros((b, h, p, n), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((b, cfg.ssm_conv - 1, d_inner), x.dtype),
+            "B": jnp.zeros((b, cfg.ssm_conv - 1, N_GROUPS * n), x.dtype),
+            "C": jnp.zeros((b, cfg.ssm_conv - 1, N_GROUPS * n), x.dtype),
+        },
+    }
+    outs = []
+    for i in range(s):
+        y, cache = mamba_decode_step(cfg, params, x[:, i : i + 1], cache)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), cache

@@ -1,0 +1,275 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid families.
+
+Layers are scanned (stacked parameters) so the HLO stays O(1) in depth, with
+configurable activation rematerialization.  The hybrid family (zamba2) scans
+groups of `attn_every` Mamba2 layers with a single *shared* attention block
+applied between groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ParamDecl,
+    embed_decls,
+    embed_lookup,
+    mlp_apply,
+    mlp_decls,
+    norm_decls,
+    apply_norm,
+    round_up,
+    unembed,
+)
+from repro.models.sharding import shard_batch
+
+AUX_LOSS_COEF = 0.01
+
+
+def stack_decls(decls, n: int):
+    return jax.tree.map(
+        lambda d: ParamDecl((n,) + d.shape, ("layers",) + d.logical, d.init, d.dtype),
+        decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def padded_kv_heads(cfg: ModelConfig) -> int:
+    return round_up(cfg.num_kv_heads, max(cfg.kv_pad_to, 1))
+
+
+def padded_heads(cfg: ModelConfig) -> int:
+    """Query-head count padded to the TP degree (cfg.head_pad_to; production
+    configs use 16, smoke configs 1).  See DESIGN.md §6."""
+    return round_up(cfg.num_heads, max(cfg.head_pad_to, 1))
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block
+# ---------------------------------------------------------------------------
+
+
+def _block_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    """One residual block of the *stacked* part of the model."""
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        return {"ln": norm_decls(cfg), "mamba": ssm_mod.mamba_decls(cfg)}
+    out: Dict[str, Any] = {"ln1": norm_decls(cfg), "ln2": norm_decls(cfg)}
+    if cfg.use_mla:
+        out["attn"] = attn.mla_decls(cfg)
+    else:
+        out["attn"] = attn.gqa_decls(cfg, heads=padded_heads(cfg))
+    if cfg.num_experts:
+        out["moe"] = moe_mod.moe_decls(cfg)
+    else:
+        out["mlp"] = mlp_decls(cfg, swiglu=cfg.mlp_swiglu)
+    return out
+
+
+def _shared_attn_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    """zamba2: one shared full attention+MLP block used every attn_every
+    layers (weights shared across its invocations)."""
+    return {
+        "ln1": norm_decls(cfg),
+        "attn": attn.gqa_decls(cfg, heads=padded_heads(cfg)),
+        "ln2": norm_decls(cfg),
+        "mlp": mlp_decls(cfg, swiglu=True),
+    }
+
+
+def lm_decls(cfg: ModelConfig) -> Dict[str, Any]:
+    decls: Dict[str, Any] = {
+        "embed": embed_decls(cfg),
+        "blocks": stack_decls(_block_decls(cfg), cfg.num_layers),
+        "ln_f": norm_decls(cfg),
+    }
+    if cfg.family == "hybrid":
+        decls["shared_attn"] = _shared_attn_decls(cfg)
+    if cfg.max_position_embeddings:
+        decls["pos"] = ParamDecl(
+            (cfg.max_position_embeddings, cfg.d_model), ("pos", "embed")
+        )
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Block application (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ModelConfig, bp, x, positions):
+    """Full-sequence residual block.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        h = apply_norm(cfg, bp["ln"], x)
+        x = x + ssm_mod.mamba_forward(cfg, bp["mamba"], h)
+        return x, aux
+    h = apply_norm(cfg, bp["ln1"], x)
+    if cfg.use_mla:
+        x = x + attn.mla_forward(cfg, bp["attn"], h, positions)
+    else:
+        x = x + attn.gqa_forward(cfg, bp["attn"], h, positions, use_rope=not cfg.max_position_embeddings)
+    h = apply_norm(cfg, bp["ln2"], x)
+    if cfg.num_experts:
+        y, aux = moe_mod.moe_apply(cfg, bp["moe"], h)
+        x = x + y
+    else:
+        x = x + mlp_apply(bp["mlp"], h, swiglu=cfg.mlp_swiglu)
+    return x, aux
+
+
+def _apply_shared_attn(cfg: ModelConfig, sp, x, positions):
+    h = apply_norm(cfg, sp["ln1"], x)
+    x = x + attn.gqa_forward(cfg, sp["attn"], h, positions)
+    h = apply_norm(cfg, sp["ln2"], x)
+    return x + mlp_apply(sp["mlp"], h, swiglu=True)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "selective":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def backbone_forward(
+    cfg: ModelConfig,
+    params,
+    x: jnp.ndarray,  # [b, s, d] embedded inputs
+    positions: jnp.ndarray,
+    *,
+    remat: str = "full",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run all blocks (scan over stacked layers).  Returns (x, aux_loss)."""
+    x = shard_batch(x, None, None)
+
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        groups = cfg.num_layers // k
+
+        def group_body(carry, gp):
+            xx, aux = carry
+            mamba_stack, shared = gp, params["shared_attn"]
+
+            def layer_body(c, lp):
+                y, a = _apply_block(cfg, lp, c[0], positions)
+                return (y, c[1] + a), None
+
+            (xx, aux), _ = jax.lax.scan(layer_body, (xx, aux), mamba_stack)
+            xx = _apply_shared_attn(cfg, shared, xx, positions)
+            return (xx, aux), None
+
+        stacked = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]), params["blocks"]
+        )
+        body = _remat(group_body, remat)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+        return x, aux
+
+    def body(carry, lp):
+        xx, aux = carry
+        y, a = _apply_block(cfg, lp, xx, positions)
+        return (y, aux + a), None
+
+    body = _remat(body, remat)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss heads
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg: ModelConfig, params, tokens, *, image_embed=None, offset=0):
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, cfg.d_model, dtype)
+    if image_embed is not None:  # pixtral: image patches prefix the text
+        x = jnp.concatenate([image_embed.astype(dtype), x], axis=1)
+    if cfg.max_position_embeddings:
+        s = x.shape[1]
+        pos_table = jax.lax.dynamic_slice_in_dim(params["pos"], offset, s, 0)
+        x = x + pos_table[None].astype(dtype)
+    return x
+
+
+def lm_logits(cfg: ModelConfig, params, x):
+    logits = unembed(cfg, params["embed"], x)
+    return shard_batch(logits, None, "model")
+
+
+def fused_next_token_loss(
+    cfg: ModelConfig, params, x, tokens, *, text_offset: int = 0, chunk: int = 8192
+):
+    """Cross-entropy fused with the unembedding matmul, chunked over vocab.
+
+    Never materializes [b, s, V] logits: a lax.scan over vocab chunks keeps a
+    running (max, sumexp) pair plus the target logit, so HBM traffic per step
+    is [b, s, chunk] instead of the full logit tensor (the dominant memory
+    term for 150k-vocab models — see EXPERIMENTS.md §Perf)."""
+    if text_offset:
+        x = x[:, text_offset:]
+    xs = x[:, :-1]
+    targets = tokens[:, 1:]
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].T  # [d, V]
+    else:
+        w = params["embed"]["unembed"]
+    v = w.shape[1]
+    if v % chunk:
+        chunk = v  # fallback: single chunk (smoke configs)
+    nc = v // chunk
+    wc = w.reshape(w.shape[0], nc, chunk).transpose(1, 0, 2)  # [nc, d, chunk]
+
+    def body(carry, args):
+        m, s, tl = carry
+        ci, w_blk = args
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xs, w_blk.astype(xs.dtype)
+        ).astype(jnp.float32)
+        m_new = jnp.maximum(m, logits.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[..., None]
+        ).sum(-1)
+        # target logit if it falls inside this chunk
+        local = targets - ci * chunk
+        hit = (local >= 0) & (local < chunk)
+        got = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, chunk - 1)[..., None], axis=-1
+        )[..., 0]
+        tl = jnp.where(hit, got, tl)
+        return (m_new, s, tl), None
+
+    b, sm1 = targets.shape
+    init = (
+        jnp.full((b, sm1), -1e30, jnp.float32),
+        jnp.zeros((b, sm1), jnp.float32),
+        jnp.zeros((b, sm1), jnp.float32),
+    )
+    (m, s, tl), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (jnp.arange(nc), wc)
+    )
+    return jnp.mean(jnp.log(s) + m - tl)
+
+
+def next_token_loss(cfg: ModelConfig, logits, tokens, *, text_offset: int = 0):
+    """Cross-entropy of logits[:, t] against tokens[:, t+1]."""
+    if text_offset:
+        logits = logits[:, text_offset:]
+    pred = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(pred, axis=-1)
+    true_logit = jnp.take_along_axis(pred, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true_logit)

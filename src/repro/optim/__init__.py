@@ -1,0 +1,19 @@
+"""Optimizers + compression."""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.compression import (
+    Quantized,
+    dequantize,
+    dequantize_tree,
+    quantize,
+    quantize_tree,
+)

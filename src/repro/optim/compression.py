@@ -1,0 +1,93 @@
+"""Block-wise int8 quantization for gradient caches and collectives.
+
+Used by the DSAG Tier-1 step to (i) store per-group cache/pending slots at
+1 byte/element and (ii) compress the FSDP weight all-gather.  Symmetric
+per-block scaling: each contiguous block of ``block`` elements along the last
+axis shares one bf16 scale (absmax / 127).
+
+The quantizer is exposed as a pair of pure functions over pytrees so it can
+sit inside a jitted step; property tests bound the round-trip error at
+``absmax / 127 / 2`` per element.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantized:
+    """int8 payload + bf16 per-block scales (a pytree node)."""
+
+    q: jnp.ndarray  # int8, shape [..., n]
+    scale: jnp.ndarray  # bfloat16, shape [..., n/block]
+    block: int
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.block
+
+    @classmethod
+    def tree_unflatten(cls, block, leaves):
+        return cls(leaves[0], leaves[1], block)
+
+
+jax.tree_util.register_pytree_node(
+    Quantized, Quantized.tree_flatten, Quantized.tree_unflatten
+)
+
+
+def _pad_to_block(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[-1]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, n
+
+
+def quantize(x: jnp.ndarray, block: int = DEFAULT_BLOCK) -> Quantized:
+    xp, n = _pad_to_block(x.astype(jnp.float32), block)
+    shaped = xp.reshape(*xp.shape[:-1], xp.shape[-1] // block, block)
+    absmax = jnp.max(jnp.abs(shaped), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(shaped / scale), -127, 127).astype(jnp.int8)
+    q = q.reshape(xp.shape)[..., :n]  # store at the original length
+    return Quantized(q=q, scale=scale[..., 0].astype(jnp.bfloat16), block=block)
+
+
+def dequantize(qx: Quantized, dtype=jnp.bfloat16) -> jnp.ndarray:
+    q = qx.q
+    n = q.shape[-1]
+    pad = (-n) % qx.block
+    if pad:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    shaped = q.astype(jnp.float32).reshape(
+        *q.shape[:-1], q.shape[-1] // qx.block, qx.block
+    )
+    out = shaped * qx.scale[..., None].astype(jnp.float32)
+    return out.reshape(q.shape)[..., :n].astype(dtype)
+
+
+def quantize_tree(tree: Any, block: int = DEFAULT_BLOCK) -> Any:
+    return jax.tree.map(lambda x: quantize(x, block), tree)
+
+
+def dequantize_tree(tree: Any, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda q: dequantize(q, dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, Quantized),
+    )
+
+
+def quantization_error_bound(x: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Per-element worst-case |x - deq(quant(x))| = blockwise absmax/254."""
+    xp, n = _pad_to_block(x.astype(jnp.float32), block)
+    shaped = xp.reshape(*xp.shape[:-1], xp.shape[-1] // block, block)
+    absmax = jnp.max(jnp.abs(shaped), axis=-1)
+    return absmax / 127.0 / 2.0 + 1e-7

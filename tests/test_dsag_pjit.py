@@ -1,0 +1,176 @@
+"""Semantics tests for the Tier-1 compiled DSAG step."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import TrainConfig
+from repro.core.dsag_pjit import (
+    GroupSpec,
+    dsag_update,
+    init_dsag_state,
+    init_train_state,
+    make_train_step,
+)
+
+
+def tc(**kw):
+    base = dict(optimizer="sgd", learning_rate=0.1, grad_clip=0.0, weight_decay=0.0)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def quad_loss(params, batch):
+    """Mean-squared loss of a linear model — analytic gradients available."""
+    x, y = batch["x"], batch["y"]
+    pred = x @ params["w"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def make_problem(p=4, bsz=8, dim=6, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(dim, 1)).astype(np.float32)
+    x = rng.normal(size=(p, bsz, dim)).astype(np.float32)
+    y = x @ w_true + 0.01 * rng.normal(size=(p, bsz, 1)).astype(np.float32)
+    params = {"w": jnp.zeros((dim, 1), jnp.float32)}
+    return params, {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+class TestDsagUpdateRule:
+    def test_full_mask_equals_mean_gradient_path(self):
+        """mask=1 everywhere: Ĥ == mean of per-group grads (SAG == sync DP)."""
+        params, batch = make_problem()
+        gs = GroupSpec(4, ())
+        cfg = tc(dsag=True)
+        step = make_train_step(quad_loss, cfg, gs)
+        state = init_train_state(params, cfg, gs)
+        ones = jnp.ones(4, bool)
+        zeros = jnp.zeros(4, bool)
+        new_state, m1 = jax.jit(step)(state, batch, ones, zeros)
+
+        cfg2 = tc(dsag=False)
+        step2 = make_train_step(quad_loss, cfg2, gs)
+        state2 = init_train_state(params, cfg2, gs)
+        new_state2, m2 = jax.jit(step2)(state2, batch, ones, zeros)
+        # bf16 cache storage rounds Ĥ (the price of the exact H == Σ cache
+        # invariant); agreement is to bf16 precision, not fp32
+        np.testing.assert_allclose(
+            np.asarray(new_state["params"]["w"]),
+            np.asarray(new_state2["params"]["w"]),
+            atol=2e-3,
+        )
+
+    def test_masked_group_keeps_stale_cache(self):
+        params, batch = make_problem()
+        gs = GroupSpec(4, ())
+        cfg = tc()
+        step = jax.jit(make_train_step(quad_loss, cfg, gs))
+        state = init_train_state(params, cfg, gs)
+        ones = jnp.ones(4, bool)
+        zeros = jnp.zeros(4, bool)
+        state, _ = step(state, batch, ones, zeros)
+        cache_before = np.asarray(state["dsag"]["cache"]["w"])
+        # group 2 masked out: its slot must be byte-identical afterwards
+        mask = jnp.array([True, True, False, True])
+        state, metrics = step(state, batch, mask, zeros)
+        cache_after = np.asarray(state["dsag"]["cache"]["w"])
+        np.testing.assert_array_equal(cache_before[2], cache_after[2])
+        assert float(metrics["xi"]) == 1.0  # filled earlier, coverage holds
+
+    def test_flush_integrates_stale_gradient(self):
+        """A straggler's pending gradient enters H on the flush step — and H
+        equals the sum of cache slots throughout (the paper's invariant)."""
+        params, batch = make_problem()
+        gs = GroupSpec(4, ())
+        cfg = tc()
+        step = jax.jit(make_train_step(quad_loss, cfg, gs))
+        state = init_train_state(params, cfg, gs)
+        ones = jnp.ones(4, bool)
+        zeros = jnp.zeros(4, bool)
+        mask_no2 = jnp.array([True, True, False, True])
+        flush_2 = jnp.array([False, False, True, False])
+        state, _ = step(state, batch, ones, zeros)
+        state, _ = step(state, batch, mask_no2, zeros)  # group 2 goes dark
+        assert bool(state["dsag"]["pending_valid"][2])
+        state, _ = step(state, batch, mask_no2, flush_2)  # stale result lands
+        h = np.asarray(state["dsag"]["h"]["w"])
+        cache_sum = np.asarray(state["dsag"]["cache"]["w"]).astype(np.float64).sum(0)
+        np.testing.assert_allclose(h[:, 0], cache_sum[:, 0], atol=1e-4)
+
+    def test_xi_scales_partial_coverage(self):
+        params, batch = make_problem()
+        gs = GroupSpec(4, ())
+        cfg = tc()
+        step = jax.jit(make_train_step(quad_loss, cfg, gs))
+        state = init_train_state(params, cfg, gs)
+        mask = jnp.array([True, True, False, False])
+        state, metrics = step(state, batch, mask, jnp.zeros(4, bool))
+        assert float(metrics["xi"]) == pytest.approx(0.5)
+
+    def test_training_converges_under_straggling(self):
+        """Random 1-of-4 dropout per step with flushes: loss must still fall
+        to near-zero (the paper's central convergence claim, compiled form)."""
+        params, batch_proto = make_problem(seed=3)
+        gs = GroupSpec(4, ())
+        cfg = tc(learning_rate=0.05)
+        step = jax.jit(make_train_step(quad_loss, cfg, gs))
+        state = init_train_state(params, cfg, gs)
+        rng = np.random.default_rng(0)
+        dark = -1
+        losses = []
+        for it in range(300):
+            mask = np.ones(4, bool)
+            flush = np.zeros(4, bool)
+            if dark >= 0:
+                flush[dark] = True
+                dark = -1
+            else:
+                dark = int(rng.integers(0, 4))
+                mask[dark] = False
+            state, metrics = step(
+                state, batch_proto, jnp.asarray(mask), jnp.asarray(flush)
+            )
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < 1e-2, losses[-5:]
+
+    def test_int8_cache_roundtrip_close(self):
+        params, batch = make_problem()
+        gs = GroupSpec(4, ())
+        cfg_bf = tc()
+        cfg_i8 = tc(dsag_cache_dtype="int8")
+        s_bf = init_train_state(params, cfg_bf, gs)
+        s_i8 = init_train_state(params, cfg_i8, gs)
+        step_bf = jax.jit(make_train_step(quad_loss, cfg_bf, gs))
+        step_i8 = jax.jit(make_train_step(quad_loss, cfg_i8, gs))
+        ones = jnp.ones(4, bool)
+        zeros = jnp.zeros(4, bool)
+        for _ in range(3):
+            s_bf, m_bf = step_bf(s_bf, batch, ones, zeros)
+            s_i8, m_i8 = step_i8(s_i8, batch, ones, zeros)
+        np.testing.assert_allclose(
+            np.asarray(s_bf["params"]["w"]), np.asarray(s_i8["params"]["w"]), atol=2e-2
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    masks=st.lists(
+        st.lists(st.booleans(), min_size=4, max_size=4), min_size=2, max_size=8
+    )
+)
+def test_h_always_equals_sum_of_cache(masks):
+    """Property: H ≡ Σ_i cache_i after any mask sequence (no flushes)."""
+    params, batch = make_problem(seed=7)
+    gs = GroupSpec(4, ())
+    cfg = tc()
+    step = jax.jit(make_train_step(quad_loss, cfg, gs))
+    state = init_train_state(params, cfg, gs)
+    for m in masks:
+        state, _ = step(state, batch, jnp.asarray(m), jnp.zeros(4, bool))
+    h = np.asarray(state["dsag"]["h"]["w"], np.float64)
+    cache_sum = np.asarray(state["dsag"]["cache"]["w"], np.float64).sum(0)
+    np.testing.assert_allclose(h, cache_sum, atol=1e-3)

@@ -1,0 +1,128 @@
+"""Unit + property tests for the §5 gradient cache."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gradient_cache import GradientCache
+
+
+def make_cache(n=100, dim=4):
+    return GradientCache(n, np.zeros(dim))
+
+
+class TestBasics:
+    def test_insert_and_sum(self):
+        c = make_cache()
+        v1 = np.ones(4)
+        assert c.insert(1, 50, 0, v1)
+        np.testing.assert_allclose(c.sum, v1)
+        assert c.coverage == 0.5
+        v2 = 2 * np.ones(4)
+        assert c.insert(51, 100, 0, v2)
+        np.testing.assert_allclose(c.sum, v1 + v2)
+        assert c.coverage == 1.0
+        c.check_invariants()
+
+    def test_exact_match_inplace_update(self):
+        """Paper remark: same-interval fresh result degrades to the SAG update."""
+        c = make_cache()
+        c.insert(1, 50, 0, np.ones(4))
+        assert c.insert(1, 50, 3, 5 * np.ones(4))
+        np.testing.assert_allclose(c.sum, 5 * np.ones(4))
+        assert c.num_entries == 1
+        assert c.evictions == 0  # in-place, not an eviction
+        c.check_invariants()
+
+    def test_staleness_dominance(self):
+        """A received subgradient older than any overlapping entry is dropped."""
+        c = make_cache()
+        c.insert(1, 50, 5, np.ones(4))
+        assert not c.insert(20, 60, 4, 7 * np.ones(4))  # t=4 < cached t=5
+        assert not c.insert(20, 60, 5, 7 * np.ones(4))  # ties lose too (t' >= t)
+        np.testing.assert_allclose(c.sum, np.ones(4))
+        assert c.rejected_stale == 2
+        c.check_invariants()
+
+    def test_overlap_eviction_example1(self):
+        """Paper Example 1: repartitioning 2->3 partitions on worker 1."""
+        c = GradientCache(20, np.zeros(2))
+        c.insert(1, 5, 0, np.array([1.0, 0.0]))
+        c.insert(6, 10, 0, np.array([2.0, 0.0]))
+        c.insert(11, 15, 0, np.array([3.0, 0.0]))
+        c.insert(16, 20, 0, np.array([4.0, 0.0]))
+        assert c.coverage == 1.0
+        # worker 1 re-partitioned to [1:3],[4:6],[7:10]; sends gradient on [4:6]
+        assert c.insert(4, 6, 1, np.array([10.0, 0.0]))
+        # both [1:5] and [6:10] must be evicted
+        assert c.evictions == 2
+        np.testing.assert_allclose(c.sum, np.array([10.0 + 3 + 4, 0.0]))
+        assert c.coverage == (3 + 5 + 5) / 20
+        c.check_invariants()
+
+    def test_newer_replaces_with_boundary_change(self):
+        c = make_cache()
+        c.insert(1, 50, 0, np.ones(4))
+        assert c.insert(40, 70, 2, 3 * np.ones(4))
+        np.testing.assert_allclose(c.sum, 3 * np.ones(4))
+        assert c.num_entries == 1
+        assert c.coverage == 31 / 100
+        c.check_invariants()
+
+    def test_bounds_validation(self):
+        c = make_cache()
+        with pytest.raises(ValueError):
+            c.insert(0, 10, 0, np.zeros(4))
+        with pytest.raises(ValueError):
+            c.insert(5, 101, 0, np.zeros(4))
+        with pytest.raises(ValueError):
+            c.insert(10, 5, 0, np.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# Property-based: arbitrary insert sequences keep all invariants
+# ---------------------------------------------------------------------------
+
+interval_strategy = st.tuples(
+    st.integers(min_value=1, max_value=64), st.integers(min_value=1, max_value=64)
+).map(lambda ab: (min(ab), max(ab)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(interval_strategy, st.integers(min_value=0, max_value=20)),
+        min_size=1,
+        max_size=60,
+    )
+)
+def test_cache_invariants_hold_under_arbitrary_inserts(ops):
+    c = GradientCache(64, np.zeros(3))
+    rng = np.random.default_rng(0)
+    for (start, stop), t in ops:
+        c.insert(start, stop, t, rng.normal(size=3))
+    c.check_invariants()
+    # intervals sorted & disjoint, coverage in [0, 1]
+    assert 0.0 <= c.coverage <= 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(interval_strategy, st.integers(min_value=0, max_value=20)),
+        min_size=1,
+        max_size=40,
+    )
+)
+def test_cache_accepts_only_strictly_fresher_overlaps(ops):
+    """After any insert sequence, every cached entry's iteration must not be
+    dominated by a later-rejected fresher insert (acceptance monotonicity)."""
+    c = GradientCache(64, np.zeros(1))
+    for (start, stop), t in ops:
+        before = {(e.start, e.stop): e.iteration for e in c.entries()}
+        accepted = c.insert(start, stop, t, np.ones(1))
+        if accepted:
+            # all overlapping entries must have been strictly older
+            for (s, e), it in before.items():
+                if not (e < start or stop < s):
+                    assert it < t

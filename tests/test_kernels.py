@@ -1,0 +1,114 @@
+"""Per-kernel correctness sweeps: Pallas (interpret mode on CPU) vs ref.py
+pure-jnp oracles across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (
+    dsag_cache_update_op,
+    dsag_update_ref,
+    flash_attention_op,
+    flash_attention_ref,
+    gram_matvec_op,
+    gram_matvec_ref,
+)
+
+
+class TestGramMatvec:
+    @pytest.mark.parametrize(
+        "n,d,k", [(256, 64, 3), (512, 128, 8), (1024, 96, 16), (300, 50, 3)]
+    )
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_reference(self, n, d, k, dtype):
+        kx, kv = jax.random.split(jax.random.key(0))
+        x = jax.random.normal(kx, (n, d), dtype)
+        v = jax.random.normal(kv, (d, k), dtype)
+        got = gram_matvec_op(x, v, block_rows=128, interpret=True)
+        want = gram_matvec_ref(x, v)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=tol, atol=tol * np.abs(want).max()
+        )
+
+    def test_single_hbm_pass_shape(self):
+        x = jnp.ones((512, 64))
+        v = jnp.ones((64, 4))
+        out = gram_matvec_op(x, v, interpret=True)
+        assert out.shape == (64, 4)
+        np.testing.assert_allclose(np.asarray(out), 512.0 * 64 * np.ones((64, 4)), rtol=1e-5)
+
+
+class TestDsagUpdate:
+    @pytest.mark.parametrize("p,n", [(4, 4096), (2, 2048), (8, 6000), (1, 2048)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_reference(self, p, n, dtype):
+        k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+        g = jax.random.normal(k1, (p, n), dtype)
+        c = jax.random.normal(k2, (p, n), dtype)
+        h = jax.random.normal(k3, (n,), jnp.float32)
+        mask = (jnp.arange(p) % 2 == 0).astype(jnp.float32)
+        new_c, new_h = dsag_cache_update_op(g, c, h, mask, interpret=True)
+        ref_c, ref_h = dsag_update_ref(g, c, h, mask)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(new_c, np.float32), np.asarray(ref_c, np.float32), atol=tol
+        )
+        np.testing.assert_allclose(np.asarray(new_h), np.asarray(ref_h), atol=tol * 4)
+
+    def test_invariant_h_equals_sum_of_cache_deltas(self):
+        """After updating from a zero cache with full mask, h == Σ_i g_i."""
+        p, n = 3, 2048
+        g = jax.random.normal(jax.random.key(2), (p, n))
+        c = jnp.zeros((p, n))
+        h = jnp.zeros((n,))
+        new_c, new_h = dsag_cache_update_op(g, c, h, jnp.ones(p), interpret=True)
+        np.testing.assert_allclose(np.asarray(new_h), np.asarray(g.sum(0)), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(new_c), np.asarray(g), atol=1e-6)
+
+    def test_masked_groups_untouched(self):
+        p, n = 4, 2048
+        g = jax.random.normal(jax.random.key(3), (p, n))
+        c = jax.random.normal(jax.random.key(4), (p, n))
+        h = jnp.zeros((n,))
+        new_c, new_h = dsag_cache_update_op(g, c, h, jnp.zeros(p), interpret=True)
+        np.testing.assert_allclose(np.asarray(new_c), np.asarray(c), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(new_h), 0.0, atol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "b,h,s,d", [(1, 2, 256, 64), (2, 1, 384, 128), (1, 4, 128, 80)]
+    )
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_reference(self, b, h, s, d, causal):
+        if not causal and s % 128 != 0:
+            pytest.skip("non-causal requires aligned sk")
+        k1, k2, k3 = jax.random.split(jax.random.key(5), 3)
+        q = jax.random.normal(k1, (b, h, s, d), jnp.float32)
+        k = jax.random.normal(k2, (b, h, s, d), jnp.float32)
+        v = jax.random.normal(k3, (b, h, s, d), jnp.float32)
+        got = flash_attention_op(q, k, v, causal=causal, interpret=True)
+        want = flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-4)
+
+    def test_bf16_io(self):
+        q = jax.random.normal(jax.random.key(6), (1, 2, 256, 64), jnp.bfloat16)
+        k = jax.random.normal(jax.random.key(7), (1, 2, 256, 64), jnp.bfloat16)
+        v = jax.random.normal(jax.random.key(8), (1, 2, 256, 64), jnp.bfloat16)
+        got = flash_attention_op(q, k, v, causal=True, interpret=True)
+        want = flash_attention_ref(q, k, v, causal=True)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2
+        )
+
+    def test_long_context_streaming_blocks(self):
+        """Many kv blocks: the online softmax must stay numerically exact."""
+        q = jax.random.normal(jax.random.key(9), (1, 1, 128, 64))
+        k = jax.random.normal(jax.random.key(10), (1, 1, 2048, 64))
+        v = jax.random.normal(jax.random.key(11), (1, 1, 2048, 64))
+        got = flash_attention_op(q, k, v, causal=False, interpret=True)
+        want = flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-4)

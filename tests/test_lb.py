@@ -1,0 +1,150 @@
+"""Tests for §6 load balancing: partition arithmetic, Algorithm 2, Algorithm 1."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.lb.partitioner import (
+    Subpartitioner,
+    _align,
+    align_partitions,
+    cyclic_increment,
+    p_start,
+    p_stop,
+    p_trans,
+)
+from repro.lb.optimizer import LoadBalanceOptimizer, OptimizerInputs
+
+
+class TestPartitionArithmetic:
+    def test_partitions_tile_the_range(self):
+        for n in (10, 17, 100):
+            for p in (1, 2, 3, 7, n):
+                covered = []
+                for i in range(1, p + 1):
+                    covered.extend(range(p_start(n, p, i), p_stop(n, p, i) + 1))
+                assert covered == list(range(1, n + 1))
+
+    def test_paper_example3_values(self):
+        # n=10, p=2: [1..5],[6..10]; p'=3: [1..3],[4..6],[7..10]
+        assert p_start(10, 2, 1) == 1 and p_stop(10, 2, 1) == 5
+        assert p_start(10, 3, 2) == 4 and p_stop(10, 3, 2) == 6
+        assert p_trans(10, 2, 3, 2) == 2  # partition containing sample 6 -> ceil(6*3/10)=2
+        # Algorithm 2 walk from the paper: k1=1 -> increment -> k=2, ends k=k'=1
+        k, k_new = align_partitions(10, 2, 3, 1)
+        assert (k, k_new) == (1, 1)
+        assert p_start(10, 2, k) == p_start(10, 3, k_new)
+
+    def test_alignment_nontrivial_solution(self):
+        # paper: n=10, p=2, p'=4 has solution k=2, k'=3 (both start at sample 6)
+        k, k_new = _align(10, 2, 4, 2)
+        assert (k, k_new) == (2, 3)
+        assert p_start(10, 2, 2) == p_start(10, 4, 3) == 6
+
+    def test_cyclic_increment(self):
+        assert cyclic_increment(1, 3) == 2
+        assert cyclic_increment(3, 3) == 1
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=10_000),
+    p=st.integers(min_value=1, max_value=64),
+    p_new=st.integers(min_value=1, max_value=64),
+    data=st.data(),
+)
+def test_algorithm2_terminates_and_aligns(n, p, p_new, data):
+    p = min(p, n)
+    p_new = min(p_new, n)
+    k = data.draw(st.integers(min_value=1, max_value=p))
+    k_out, k_new = align_partitions(n, p, p_new, k)
+    assert 1 <= k_out <= p and 1 <= k_new <= p_new
+    assert p_start(n, p, k_out) == p_start(n, p_new, k_new)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    base=st.integers(min_value=1, max_value=1000),
+    width=st.integers(min_value=1, max_value=500),
+    p=st.integers(min_value=1, max_value=32),
+    steps=st.lists(st.integers(min_value=1, max_value=32), max_size=8),
+)
+def test_subpartitioner_intervals_stay_in_range_across_repartitions(
+    base, width, p, steps
+):
+    sub = Subpartitioner(base_start=base, base_stop=base + width - 1, p=p)
+    seen = set()
+    for p_new in steps + [sub.p]:
+        for _ in range(3):
+            lo, hi = sub.next_interval_and_advance()
+            assert base <= lo <= hi <= base + width - 1
+            seen.add((lo, hi))
+        sub.repartition(p_new)
+    # after repartition, the next interval must start at an old boundary
+    lo, _ = sub.current_interval()
+
+
+def test_subpartitioner_cycles_cover_local_range():
+    sub = Subpartitioner(base_start=11, base_stop=30, p=4)
+    covered = set()
+    for _ in range(4):
+        lo, hi = sub.next_interval_and_advance()
+        covered.update(range(lo, hi + 1))
+    assert covered == set(range(11, 31))
+
+
+def test_repartition_alignment_minimizes_evictions():
+    """After p: 2 -> 3 on a 10-sample worker, the first interval processed
+    must start at an existing boundary (paper Example 2/3)."""
+    sub = Subpartitioner(base_start=1, base_stop=10, p=2)
+    sub.next_interval_and_advance()  # processed [1..5], k now 2
+    sub.repartition(3)
+    lo, hi = sub.current_interval()
+    # old boundaries start at {1, 6}; new partition starts at an old boundary
+    assert lo in (1, 6)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def _inputs(e_comp, w=4):
+    n = len(e_comp)
+    e_comp = np.asarray(e_comp, dtype=np.float64)
+    return OptimizerInputs(
+        e_comm=np.full(n, 1e-4),
+        v_comm=np.full(n, 1e-10),
+        e_comp=e_comp,
+        v_comp=(0.1 * e_comp) ** 2,
+        samples_per_worker=np.full(n, 1000.0),
+        w=w,
+    )
+
+
+def test_optimizer_gives_slow_workers_less_work():
+    opt = LoadBalanceOptimizer(seed=0, sim_iterations=60)
+    p0 = np.full(8, 10, dtype=np.int64)
+    e_comp = np.linspace(1e-3, 2e-3, 8)  # worker 7 is 2x slower
+    p_new = opt.optimize(p0, _inputs(e_comp))
+    # slower workers should end up with (weakly) more subpartitions = less work
+    assert p_new[-1] >= p_new[0]
+    # and the latency spread should narrow
+    e0 = 1e-4 + e_comp
+    e1 = 1e-4 + e_comp * p0 / p_new
+    assert e1.max() / e1.min() <= e0.max() / e0.min() + 1e-9
+
+
+def test_optimizer_respects_bounds():
+    opt = LoadBalanceOptimizer(seed=0, sim_iterations=40)
+    p0 = np.full(4, 5, dtype=np.int64)
+    p_new = opt.optimize(p0, _inputs([1e-3, 1e-3, 1e-3, 5e-3], w=2))
+    assert (p_new >= 1).all()
+
+
+def test_should_publish_requires_improvement():
+    opt = LoadBalanceOptimizer(seed=0, improvement_threshold=0.10)
+    inputs = _inputs([1e-3] * 4)
+    p = np.full(4, 10, dtype=np.int64)
+    # identical p -> no improvement -> do not publish
+    assert not opt.should_publish(p, p, inputs)

@@ -1,0 +1,94 @@
+"""Oracle tests for the MoE dispatch and the Mamba2 SSD kernel-free paths."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.layers import init_from_decls
+from repro.models.moe import moe_apply, moe_decls, moe_reference
+from repro.models.ssm import (
+    mamba_decls,
+    mamba_forward,
+    mamba_reference_recurrent,
+)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = dataclasses.replace(get_smoke_config("deepseek-v2-236b"), dtype="float32")
+    params = init_from_decls(moe_decls(cfg), jax.random.key(3), jnp.float32)
+    return cfg, params
+
+
+class TestMoE:
+    def test_sort_dispatch_matches_dense_reference(self, moe_setup):
+        cfg, params = moe_setup
+        x = 0.5 * jax.random.normal(jax.random.key(4), (2, 8, cfg.d_model))
+        y_fast, _ = moe_apply(cfg, params, x, capacity_factor=8.0)
+        y_ref = moe_reference(cfg, params, x)
+        np.testing.assert_allclose(np.asarray(y_fast), np.asarray(y_ref), atol=2e-4)
+
+    @pytest.mark.parametrize("shape", [(1, 4), (2, 16), (3, 7)])
+    def test_shapes_and_finiteness(self, moe_setup, shape):
+        cfg, params = moe_setup
+        b, s = shape
+        x = 0.5 * jax.random.normal(jax.random.key(5), (b, s, cfg.d_model))
+        y, aux = moe_apply(cfg, params, x)
+        assert y.shape == x.shape
+        assert jnp.isfinite(y).all() and jnp.isfinite(aux)
+        # Switch-style aux loss is ~1 at uniform routing, bounded by E
+        assert 0.0 < float(aux) <= cfg.num_experts
+
+    def test_capacity_drops_reduce_output_not_crash(self, moe_setup):
+        cfg, params = moe_setup
+        x = 0.5 * jax.random.normal(jax.random.key(6), (4, 32, cfg.d_model))
+        y_low, _ = moe_apply(cfg, params, x, capacity_factor=0.5)
+        y_high, _ = moe_apply(cfg, params, x, capacity_factor=8.0)
+        assert jnp.isfinite(y_low).all()
+        # dropping must change (reduce) the routed contribution
+        assert float(jnp.abs(y_low - y_high).max()) > 0.0
+
+    def test_grads_flow_through_dispatch(self, moe_setup):
+        cfg, params = moe_setup
+        x = 0.5 * jax.random.normal(jax.random.key(7), (2, 8, cfg.d_model))
+
+        def loss(p):
+            y, aux = moe_apply(cfg, p, x)
+            return jnp.sum(y * y) + aux
+
+        g = jax.grad(loss)(params)
+        gnorm = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(g))
+        assert np.isfinite(gnorm) and gnorm > 0
+
+
+class TestSSD:
+    @pytest.mark.parametrize("seq", [8, 24, 33])  # incl. non-multiple of chunk
+    def test_chunked_matches_recurrent(self, seq):
+        cfg = dataclasses.replace(get_smoke_config("mamba2-370m"), dtype="float32")
+        params = init_from_decls(mamba_decls(cfg), jax.random.key(1), jnp.float32)
+        x = 0.5 * jax.random.normal(jax.random.key(2), (2, seq, cfg.d_model))
+        y_chunk = mamba_forward(cfg, params, x)
+        y_rec, _ = mamba_reference_recurrent(cfg, params, x)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec), atol=5e-4)
+
+    def test_prefill_state_matches_recurrent_state(self):
+        cfg = dataclasses.replace(get_smoke_config("mamba2-370m"), dtype="float32")
+        params = init_from_decls(mamba_decls(cfg), jax.random.key(1), jnp.float32)
+        x = 0.5 * jax.random.normal(jax.random.key(2), (2, 16, cfg.d_model))
+        _, st = mamba_forward(cfg, params, x, return_state=True)
+        _, cache = mamba_reference_recurrent(cfg, params, x)
+        np.testing.assert_allclose(
+            np.asarray(st["state"]), np.asarray(cache["state"]), atol=5e-4
+        )
+
+    def test_state_decay_is_stable(self):
+        """The SSD decay factors exp(dt*A) must lie in (0, 1] — no blowup."""
+        cfg = dataclasses.replace(get_smoke_config("mamba2-370m"), dtype="float32")
+        params = init_from_decls(mamba_decls(cfg), jax.random.key(1), jnp.float32)
+        x = 3.0 * jax.random.normal(jax.random.key(9), (1, 64, cfg.d_model))
+        y = mamba_forward(cfg, params, x)
+        assert jnp.isfinite(y).all()
