@@ -239,6 +239,26 @@ def table1_latency() -> None:
     )
 
 
+def fig9_scenario_sweep() -> None:
+    """Figs. 8-9 as a *sweep*: 100 workers x 5 methods x 10 seeds x 3 burst
+    regimes through the vectorized engine, checked against the scalar event
+    loop for wall-clock; emits the BENCH_sweep.json artifact."""
+    from repro.experiments import run_sweep, scalar_sweep_seconds, write_bench_sweep
+
+    out = run_sweep(n_workers=100, n_seeds=10, num_iterations=100)
+    scalar_s = scalar_sweep_seconds(out)
+    payload = write_bench_sweep(out, "BENCH_sweep.json", scalar_seconds=scalar_s)
+    burst = payload["ordering"]["heavy_bursts"]
+    record(
+        "fig9_scenario_sweep",
+        out.engine_seconds * 1e6,
+        f"speedup_vs_scalar={payload['speedup_vs_scalar']:.1f};"
+        f"sag_over_dsag={burst['sag_over_dsag']:.2f};"
+        f"coded_over_dsag={burst['coded_over_dsag']:.2f};"
+        f"dsag_beats_sag_and_coded={bool(burst['dsag_beats_sag_and_coded'])}",
+    )
+
+
 def run_all() -> None:
     fig1_latency_scaling()
     fig3_gamma_fit()
@@ -246,4 +266,5 @@ def run_all() -> None:
     fig6_event_sim()
     fig7_load_balancing()
     fig8_convergence()
+    fig9_scenario_sweep()
     table1_latency()

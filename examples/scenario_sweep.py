@@ -1,0 +1,82 @@
+"""Run a §7 scenario sweep with the vectorized engine and print the grid.
+
+  PYTHONPATH=src python examples/scenario_sweep.py
+  PYTHONPATH=src python examples/scenario_sweep.py --workers 100 --seeds 10 \
+      --iters 100 --out BENCH_sweep.json --check-scalar
+
+Sweeps (seeds x methods x w x burst regimes) in one batched pass — GD, the
+idealized coded bound, SGD, SAG, and DSAG across calm / paper / heavy burst
+regimes — and reports the paper's headline ordering (DSAG faster than SAG
+and coded under burst stragglers).
+"""
+
+import argparse
+
+from repro.experiments import (
+    paper_ordering,
+    run_sweep,
+    scalar_sweep_seconds,
+    write_bench_sweep,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=50)
+    ap.add_argument("--seeds", type=int, default=5)
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--w-frac", type=float, nargs="+", default=[0.8])
+    ap.add_argument("--out", default=None, help="write BENCH-style JSON here")
+    ap.add_argument(
+        "--check-scalar",
+        action="store_true",
+        help="also time the scalar event-loop baseline (slow)",
+    )
+    args = ap.parse_args()
+
+    out = run_sweep(
+        n_workers=args.workers,
+        n_seeds=args.seeds,
+        num_iterations=args.iters,
+        w_fracs=tuple(args.w_frac),
+    )
+    print(
+        f"{len(out.results)} cells x {args.seeds} seeds in "
+        f"{out.engine_seconds:.3f}s (vectorized engine)"
+    )
+    scalar_s = None
+    if args.check_scalar:
+        scalar_s = scalar_sweep_seconds(out)
+        print(f"scalar event loop: {scalar_s:.2f}s "
+              f"({scalar_s / out.engine_seconds:.1f}x slower)")
+
+    header = f"{'regime':>14} {'method':>6} {'w':>4} {'mean iter (ms)':>15} {'fresh':>6}"
+    print(header)
+    print("-" * len(header))
+    seen = set()
+    for r in out.rows:
+        key = (r.regime, r.method, r.w)
+        if key in seen:
+            continue
+        seen.add(key)
+        print(
+            f"{r.regime:>14} {r.method:>6} {r.w:>4} "
+            f"{1e3 * out.mean_iter_time(r.regime, r.method, r.w):>15.4f} "
+            f"{r.mean_fresh:>6.1f}"
+        )
+
+    for regime in sorted({r.regime for r in out.rows}):
+        o = paper_ordering(out, regime)
+        print(
+            f"{regime}: sag/dsag={o['sag_over_dsag']:.2f}x "
+            f"coded/dsag={o['coded_over_dsag']:.2f}x "
+            f"dsag_beats_sag_and_coded={bool(o['dsag_beats_sag_and_coded'])}"
+        )
+
+    if args.out:
+        write_bench_sweep(out, args.out, scalar_seconds=scalar_s)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,9 +3,19 @@ protocol run in event time over the §3 latency model, with real JAX compute
 for every subgradient."""
 
 from repro.cluster.simulator import (
+    LatencySource,
     MethodConfig,
-    TrainingSimulator,
+    ModelLatencySource,
     RunHistory,
+    TraceLatencySource,
+    TrainingSimulator,
 )
 
-__all__ = ["MethodConfig", "TrainingSimulator", "RunHistory"]
+__all__ = [
+    "LatencySource",
+    "MethodConfig",
+    "ModelLatencySource",
+    "RunHistory",
+    "TraceLatencySource",
+    "TrainingSimulator",
+]

@@ -24,10 +24,65 @@ import numpy as np
 
 from repro.core.gradient_cache import GradientCache
 from repro.core.problems import FiniteSumProblem
-from repro.latency.model import ClusterLatencyModel
+from repro.latency.model import ClusterLatencyModel, FleetTraces
 from repro.latency.profiler import LatencyProfiler, LatencySample
 from repro.lb.optimizer import LoadBalanceOptimizer, OptimizerInputs
 from repro.lb.partitioner import Subpartitioner, p_start, p_stop
+
+
+class LatencySource:
+    """Where per-task (comp, comm) latencies come from.
+
+    The simulator is agnostic about whether latencies are sampled live from
+    the §3 gamma/burst model or replayed from a pre-sampled trace; both
+    implement ``task_latency``.
+    """
+
+    def task_latency(self, worker: int, cost: float, now: float) -> Tuple[float, float]:
+        """Return ``(comp_latency, comm_latency)`` of one task."""
+        raise NotImplementedError
+
+
+class ModelLatencySource(LatencySource):
+    """Live sampling from a :class:`ClusterLatencyModel` (the default).
+
+    Reads the cluster on every draw, so timed events that mutate worker
+    state (e.g. §7.2 slowdown removal) keep working.
+    """
+
+    def __init__(self, cluster: ClusterLatencyModel):
+        self.cluster = cluster
+
+    def task_latency(self, worker: int, cost: float, now: float) -> Tuple[float, float]:
+        wk = self.cluster.workers[worker]
+        comp = wk.sample_comp(cost, self.cluster.rng, now=now)
+        comm = wk.sample_comm(self.cluster.rng)
+        return comp, comm
+
+
+class TraceLatencySource(LatencySource):
+    """Replay one scenario of pre-sampled :class:`FleetTraces`.
+
+    Each worker consumes its (comm, comp_unit) draw streams sequentially —
+    the same consumption order as the batched sweep engine, so a training
+    run replayed through this source sees exactly the latencies of the
+    corresponding sweep scenario.
+    """
+
+    def __init__(self, traces: FleetTraces, scenario: int):
+        if not (0 <= scenario < traces.num_scenarios):
+            raise ValueError(f"scenario {scenario} out of range")
+        self.traces = traces
+        self.scenario = scenario
+        self._k = np.zeros(traces.num_workers, dtype=np.int64)
+
+    def task_latency(self, worker: int, cost: float, now: float) -> Tuple[float, float]:
+        k = int(self._k[worker])
+        self._k[worker] += 1
+        comm, comp = self.traces.scalar_task_latency(
+            self.scenario, worker, k, now, cost
+        )
+        return float(comp), float(comm)
 
 
 @dataclasses.dataclass
@@ -99,7 +154,7 @@ class _SimWorker:
         task: _Task,
         now: float,
         problem: FiniteSumProblem,
-        cluster: ClusterLatencyModel,
+        latency_source: LatencySource,
         process_full_block: bool,
         comp_scale: float,
     ) -> Tuple[float, Tuple]:
@@ -114,9 +169,7 @@ class _SimWorker:
         start, stop = interval
         value = problem.subgradient(task.iterate, start, stop)
         cost = problem.compute_cost(start, stop) * comp_scale
-        wk = cluster.workers[self.idx]
-        comp_lat = wk.sample_comp(cost, cluster.rng, now=now)
-        comm_lat = wk.sample_comm(cluster.rng)
+        comp_lat, comm_lat = latency_source.task_latency(self.idx, cost, now)
         finish = now + comp_lat + comm_lat
         self.busy_until = finish
         result = (self.idx, interval, task.iteration, value, comp_lat, comm_lat, task.assigned_at)
@@ -136,12 +189,32 @@ class TrainingSimulator:
         eval_every: int = 1,
         timed_events: Optional[List[Tuple[float, Callable]]] = None,
         seed: int = 0,
+        latency_source: Optional[LatencySource] = None,
     ):
         self.problem = problem
         self.cluster = cluster
         self.config = config
         self.cost_scale = cost_scale
         self.eval_every = eval_every
+        #: live model sampling by default; pass a TraceLatencySource to replay
+        #: a pre-sampled sweep scenario through the full training simulator.
+        self.latency_source = latency_source or ModelLatencySource(cluster)
+        if timed_events and isinstance(self.latency_source, TraceLatencySource):
+            # timed events mutate the cluster model, which a pre-sampled trace
+            # never re-reads — silently ignoring them would fake the §7.2
+            # scenarios, so refuse the combination outright
+            raise ValueError(
+                "timed_events require live model sampling; a replayed trace "
+                "cannot react to cluster mutations"
+            )
+        if (
+            isinstance(self.latency_source, TraceLatencySource)
+            and self.latency_source.traces.num_workers != cluster.num_workers
+        ):
+            raise ValueError(
+                f"trace has {self.latency_source.traces.num_workers} workers "
+                f"but the cluster has {cluster.num_workers}"
+            )
         #: (sim_time, fn(cluster)) hooks, e.g. the §7.2 artificial
         #: slowdown-removal at t=1 s
         self.timed_events = sorted(timed_events or [], key=lambda e: e[0])
@@ -212,7 +285,7 @@ class TrainingSimulator:
             for wk in self.workers:
                 if wk.busy_until <= now:
                     fin, result = wk.start_task(
-                        task, now, problem, self.cluster, process_full, comp_scale
+                        task, now, problem, self.latency_source, process_full, comp_scale
                     )
                     heapq.heappush(heap, (fin, seq, result))
                     seq += 1
@@ -246,7 +319,7 @@ class TrainingSimulator:
                     qt = wk.queued
                     wk.queued = None
                     nfin, nresult = wk.start_task(
-                        qt, now, problem, self.cluster, process_full, comp_scale
+                        qt, now, problem, self.latency_source, process_full, comp_scale
                     )
                     heapq.heappush(heap, (nfin, seq, nresult))
                     seq += 1

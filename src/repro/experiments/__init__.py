@@ -1,0 +1,62 @@
+"""Batched scenario sweeps over the §3/§4.2 simulated fleet (paper §7).
+
+The subsystem has three layers:
+
+* :mod:`repro.experiments.sweep` — the vectorized event-dynamics engine
+  (bit-exact replay of the scalar simulator over a scenario batch) plus the
+  fully-vectorized fast path for queue-feedback-free methods;
+* :mod:`repro.experiments.grid` — the (seeds x methods x w x regimes) driver
+  with common-random-number trace sharing per regime;
+* :mod:`repro.experiments.results` — ordering verdicts, the profiler feed,
+  and the ``BENCH_sweep.json`` artifact.
+"""
+
+from repro.experiments.grid import (
+    CALM,
+    DEFAULT_REGIMES,
+    HEAVY_BURSTS,
+    PAPER_BURSTS,
+    BurstRegime,
+    MethodSpec,
+    SweepOutcome,
+    SweepRow,
+    default_methods,
+    run_sweep,
+    scalar_sweep_seconds,
+)
+from repro.experiments.results import (
+    feed_profiler,
+    outcome_to_dict,
+    paper_ordering,
+    write_bench_sweep,
+)
+from repro.experiments.sweep import (
+    BatchedRunResult,
+    replay_batch,
+    scalar_reference,
+    scalar_sync_reference,
+    synchronous_times_batch,
+)
+
+__all__ = [
+    "BatchedRunResult",
+    "BurstRegime",
+    "CALM",
+    "DEFAULT_REGIMES",
+    "HEAVY_BURSTS",
+    "MethodSpec",
+    "PAPER_BURSTS",
+    "SweepOutcome",
+    "SweepRow",
+    "default_methods",
+    "feed_profiler",
+    "outcome_to_dict",
+    "paper_ordering",
+    "replay_batch",
+    "run_sweep",
+    "scalar_reference",
+    "scalar_sweep_seconds",
+    "scalar_sync_reference",
+    "synchronous_times_batch",
+    "write_bench_sweep",
+]

@@ -1,0 +1,272 @@
+"""Vectorized scenario-sweep engine for the paper's §7 comparisons.
+
+The scalar simulators (:class:`repro.latency.event_sim.EventDrivenSimulator`,
+:class:`repro.cluster.simulator.TrainingSimulator`) replay the §4.2 busy/idle
+worker fleet one heap event at a time — minutes of wall-clock for a single
+100-worker comparison.  This module batches the *scenario* axis: all latency
+draws are pre-sampled with :func:`repro.latency.model.sample_fleet`, and the
+per-iteration event dynamics are resolved with [S, N] array operations, one
+numpy pass per iteration instead of one Python heap operation per event.
+
+The key observation that makes the event loop vectorizable without a
+fixed-point: within one iteration, a busy worker's fresh completion
+``f_i = F_i + d_i`` can only be among the ``w`` earliest if its previous
+task's completion ``F_i`` is below the iteration deadline (``F_i < f_i``),
+in which case its queued task *did* start — so the w-th order statistic of
+the candidate finish times over all workers is exactly the scalar
+simulator's w-th fresh arrival, with no per-event sequencing needed.  The
+remaining quantities (margin deadline, which workers actually started,
+iteration end time = last processed event) are pure array reductions.
+
+``replay_batch`` reproduces the scalar event loop *bit-exactly* on the same
+pre-sampled traces (see ``tests/test_sweep.py``); ``synchronous_times_batch``
+is the fully-vectorized fast path for methods without cross-iteration queue
+feedback (GD, the idealized coded bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.latency.event_sim import EventDrivenSimulator, SimResult
+from repro.latency.model import FleetTraces
+
+
+@dataclasses.dataclass
+class BatchedRunResult:
+    """Per-scenario traces of one batched method run.
+
+    ``iteration_times`` matches the scalar simulator's
+    ``SimResult.iteration_times`` per scenario; the ``task_*`` arrays (only
+    filled with ``record_tasks=True``) hold per-(scenario, iteration, worker)
+    samples for the §6.1 profiler feed (NaN where the worker never started
+    that iteration's task).
+    """
+
+    iteration_times: np.ndarray  # [S, T] completion time of each iteration
+    fresh_counts: np.ndarray  # [S, T]
+    participation: np.ndarray  # [S, N] fraction of iterations fresh
+    task_assigned: Optional[np.ndarray] = None  # [S, T] assignment time
+    task_start: Optional[np.ndarray] = None  # [S, T, N]
+    task_finish: Optional[np.ndarray] = None  # [S, T, N]
+    task_comp: Optional[np.ndarray] = None  # [S, T, N] compute-only latency
+
+    @property
+    def mean_iteration_time(self) -> np.ndarray:
+        """[S] mean per-iteration latency of each scenario."""
+        t = self.iteration_times
+        return t[:, -1] / t.shape[1]
+
+
+def _broadcast_loads(loads, S: int, N: int) -> np.ndarray:
+    return np.broadcast_to(np.asarray(loads, dtype=np.float64), (S, N))
+
+
+def replay_batch(
+    traces: FleetTraces,
+    w: int,
+    num_iterations: int,
+    *,
+    margin: float = 0.0,
+    loads=1.0,
+    record_tasks: bool = False,
+) -> BatchedRunResult:
+    """Run the §4.2 w-of-N event dynamics for every scenario at once.
+
+    Exactly equivalent (bit-for-bit, up to measure-zero event-time ties) to
+    running :class:`EventDrivenSimulator` per scenario with
+    ``traces.scalar_latency_provider`` — but resolved with [S, N] array
+    operations per iteration.
+    """
+    S, N, K = traces.comm.shape
+    if not (1 <= w <= N):
+        raise ValueError(f"w={w} not in 1..{N}")
+    if num_iterations > K:
+        raise ValueError(
+            f"traces hold {K} draws/worker but {num_iterations} iterations requested"
+        )
+    loads_b = _broadcast_loads(loads, S, N)
+
+    free_at = np.zeros((S, N))  # F_i: when each worker's current task finishes
+    iter_end = np.zeros(S)  # E: last processed event of the previous iteration
+    draw_idx = np.zeros((S, N), dtype=np.int64)
+    times = np.empty((S, num_iterations))
+    fresh_counts = np.empty((S, num_iterations), dtype=np.int64)
+    part_accum = np.zeros((S, N), dtype=np.int64)
+    if record_tasks:
+        assigned_rec = np.empty((S, num_iterations))
+        start_rec = np.full((S, num_iterations, N), np.nan)
+        finish_rec = np.full((S, num_iterations, N), np.nan)
+        comp_rec = np.full((S, num_iterations, N), np.nan)
+
+    for t in range(num_iterations):
+        assign = iter_end  # all idle workers start now; busy workers queue
+        idle = free_at <= assign[:, None]
+        start = np.where(idle, assign[:, None], free_at)
+        comm_d, comp_d = traces.task_latency_parts(draw_idx, start, loads_b)
+        finish = start + (comm_d + comp_d)
+
+        # w-th fresh arrival: any busy worker contributing to the first w has
+        # free_at < finish <= tau_w, i.e. its queued task provably started.
+        tau_w = np.partition(finish, w - 1, axis=1)[:, w - 1]
+        if margin > 0.0:
+            # paper §5.1: keep collecting `margin` longer than the time the
+            # first w fresh results took this iteration
+            deadline = tau_w + margin * (tau_w - assign)
+        else:
+            deadline = tau_w
+        started = idle | (free_at <= deadline[:, None])
+        fresh = started & (finish <= deadline[:, None])
+        fresh_counts[:, t] = fresh.sum(axis=1)
+        part_accum += fresh
+
+        # iteration ends at the last processed event <= deadline: either a
+        # fresh completion or a busy->idle transition that started a queued task
+        stale_events = np.where(~idle & (free_at <= deadline[:, None]), free_at, -np.inf)
+        fresh_events = np.where(fresh, finish, -np.inf)
+        iter_end = np.maximum(
+            np.maximum(stale_events.max(axis=1), fresh_events.max(axis=1)), tau_w
+        )
+        times[:, t] = iter_end
+
+        if record_tasks:
+            assigned_rec[:, t] = assign
+            start_rec[:, t] = np.where(started, start, np.nan)
+            finish_rec[:, t] = np.where(started, finish, np.nan)
+            comp_rec[:, t] = np.where(started, comp_d, np.nan)
+
+        free_at = np.where(started, finish, free_at)
+        draw_idx += started
+
+    return BatchedRunResult(
+        iteration_times=times,
+        fresh_counts=fresh_counts,
+        participation=part_accum / max(num_iterations, 1),
+        task_assigned=assigned_rec if record_tasks else None,
+        task_start=start_rec if record_tasks else None,
+        task_finish=finish_rec if record_tasks else None,
+        task_comp=comp_rec if record_tasks else None,
+    )
+
+
+def synchronous_times_batch(
+    traces: FleetTraces,
+    w: int,
+    num_iterations: int,
+    *,
+    loads=1.0,
+    return_participation: bool = False,
+):
+    """[S, T] cumulative iteration times for methods *without* queue feedback.
+
+    Models fully synchronized rounds (GD, the §7.1 idealized coded bound):
+    every worker starts each iteration at the sync point and stragglers'
+    leftover work is abandoned, so the iteration latency is the w-th order
+    statistic of N fresh draws.  Burst-free traces vectorize over iterations
+    too (no sequential dependence at all); with bursts the factor depends on
+    the running clock, so iterations are folded sequentially but still [S, N]
+    at a time.
+    """
+    S, N, K = traces.comm.shape
+    if not (1 <= w <= N):
+        raise ValueError(f"w={w} not in 1..{N}")
+    if num_iterations > K:
+        raise ValueError(
+            f"traces hold {K} draws/worker but {num_iterations} iterations requested"
+        )
+    loads_b = _broadcast_loads(loads, S, N)
+    if not traces.has_bursts:
+        d = traces.comm[:, :, :num_iterations] + (
+            traces.comp_unit[:, :, :num_iterations]
+            * loads_b[:, :, None]
+            * traces.slowdown[None, :, None]
+        )
+        per_iter = np.partition(d, w - 1, axis=1)[:, w - 1, :]
+        times = np.cumsum(per_iter, axis=1)
+        if return_participation:
+            participation = (d <= per_iter[:, None, :]).mean(axis=2)
+            return times, participation
+        return times
+    times = np.empty((S, num_iterations))
+    clock = np.zeros(S)
+    part_accum = np.zeros((S, N), dtype=np.int64)
+    for t in range(num_iterations):
+        idx = np.full((S, N), t, dtype=np.int64)
+        d = traces.task_latency(idx, np.broadcast_to(clock[:, None], (S, N)), loads_b)
+        kth = np.partition(d, w - 1, axis=1)[:, w - 1]
+        part_accum += d <= kth[:, None]
+        clock = clock + kth
+        times[:, t] = clock
+    if return_participation:
+        return times, part_accum / max(num_iterations, 1)
+    return times
+
+
+def scalar_reference(
+    traces: FleetTraces,
+    scenario: int,
+    w: int,
+    num_iterations: int,
+    *,
+    margin: float = 0.0,
+    loads=1.0,
+) -> SimResult:
+    """Replay one scenario through the *scalar* event loop (ground truth).
+
+    Used by the equivalence tests and the speedup benchmark: same trace
+    arrays, same draw-consumption order, one heap event at a time.
+    """
+    if num_iterations > traces.horizon:
+        raise ValueError(
+            f"traces hold {traces.horizon} draws/worker but "
+            f"{num_iterations} iterations requested"
+        )
+    N = traces.num_workers
+    loads_arr = np.broadcast_to(
+        np.asarray(loads, dtype=np.float64),
+        (traces.num_scenarios, N) if np.ndim(loads) == 2 else (N,),
+    )
+    if loads_arr.ndim == 2:
+        loads_arr = loads_arr[scenario]
+    sim = EventDrivenSimulator(
+        None,
+        loads_arr,
+        latency_provider=traces.scalar_latency_provider(scenario, loads),
+    )
+    return sim.run(w, num_iterations, margin=margin)
+
+
+def scalar_sync_reference(
+    traces: FleetTraces,
+    scenario: int,
+    w: int,
+    num_iterations: int,
+    *,
+    loads=1.0,
+) -> np.ndarray:
+    """Scalar counterpart of :func:`synchronous_times_batch` (one scenario).
+
+    Per iteration: draw every worker's latency at the sync point, advance
+    the clock by the w-th smallest.  Same dynamics, one draw at a time —
+    the honest baseline for timing the sync fast path.
+    """
+    if num_iterations > traces.horizon:
+        raise ValueError(
+            f"traces hold {traces.horizon} draws/worker but "
+            f"{num_iterations} iterations requested"
+        )
+    N = traces.num_workers
+    loads_arr = np.broadcast_to(np.asarray(loads, dtype=np.float64), (N,))
+    clock = 0.0
+    times = np.empty(num_iterations)
+    for t in range(num_iterations):
+        d = np.empty(N)
+        for i in range(N):
+            comm, comp = traces.scalar_task_latency(scenario, i, t, clock, loads_arr[i])
+            d[i] = comm + comp
+        clock = clock + np.sort(d)[w - 1]
+        times[t] = clock
+    return times

@@ -40,22 +40,33 @@ class EventDrivenSimulator:
 
     def __init__(
         self,
-        cluster: ClusterLatencyModel,
+        cluster: Optional[ClusterLatencyModel],
         loads: Sequence[float],
         *,
         with_bursts: bool = False,
+        latency_provider: Optional[Callable[[int, float], float]] = None,
     ):
-        if len(loads) != cluster.num_workers:
+        if cluster is None and latency_provider is None:
+            raise ValueError("need a cluster model or a latency_provider")
+        if cluster is not None and len(loads) != cluster.num_workers:
             raise ValueError("loads must have one entry per worker")
         self.cluster = cluster
         self.loads = np.asarray(loads, dtype=np.float64)
         self.with_bursts = with_bursts
+        #: optional trace replay: ``(worker, start_time) -> latency`` consuming
+        #: pre-sampled draws (e.g. ``FleetTraces.scalar_latency_provider``)
+        #: instead of sampling the cluster model live.
+        self.latency_provider = latency_provider
+
+    @property
+    def num_workers(self) -> int:
+        return self.cluster.num_workers if self.cluster is not None else len(self.loads)
 
     def run(self, w: int, num_iterations: int, *, margin: float = 0.0) -> SimResult:
-        n = self.cluster.num_workers
+        n = self.num_workers
         if not (1 <= w <= n):
             raise ValueError(f"w={w} not in 1..{n}")
-        rng = self.cluster.rng
+        rng = self.cluster.rng if self.cluster is not None else None
         now = 0.0
         # (finish_time, worker, iteration_of_task)
         heap: list = []
@@ -66,6 +77,8 @@ class EventDrivenSimulator:
         fresh_mask_accum = np.zeros(n, dtype=np.int64)
 
         def sample_latency(i: int, start: float) -> float:
+            if self.latency_provider is not None:
+                return float(self.latency_provider(i, start))
             wk = self.cluster.workers[i]
             if self.with_bursts:
                 return wk.sample_total(self.loads[i], rng, now=start)

@@ -107,26 +107,40 @@ class WorkerLatencyModel:
     _burst: BurstState = dataclasses.field(default_factory=BurstState)
 
     # -- burst process --------------------------------------------------
+    def _start_burst(self, now: float, rng: np.random.Generator) -> float:
+        factor = 1.0 + rng.exponential(self.burst_factor_mean - 1.0)
+        self._burst = BurstState(
+            active=True,
+            factor=factor,
+            ends_at=now + rng.exponential(self.burst_duration_mean),
+        )
+        return factor
+
     def _burst_factor(self, now: float, rng: np.random.Generator) -> float:
         if self._burst.active:
             if now >= self._burst.ends_at:
+                # the idle-gap clock restarts when the burst ends
+                self._last_query_t = self._burst.ends_at
                 self._burst = BurstState()
             else:
                 return self._burst.factor
         if self.burst_rate > 0.0:
-            # Probability a burst starts within one iteration-ish window; we
-            # sample burst arrivals lazily at query time using the gap since
-            # the last query (memorylessness of the Poisson process).
-            gap = getattr(self, "_last_query_gap", 1.0)
-            p_start = 1.0 - math.exp(-self.burst_rate * max(gap, 1e-9))
+            last = getattr(self, "_last_query_t", None)
+            if last is None:
+                # stationary start: the fleet was running long before t=0, so
+                # a worker is mid-burst with probability dur/(idle+dur); the
+                # residual duration is again exponential (memorylessness)
+                self._last_query_t = now
+                lam_m = self.burst_rate * self.burst_duration_mean
+                if rng.random() < lam_m / (1.0 + lam_m):
+                    return self._start_burst(now, rng)
+                return 1.0
+            # burst arrivals sampled lazily at query time by thinning the
+            # Poisson process over the elapsed idle gap (memorylessness)
+            p_start = 1.0 - math.exp(-self.burst_rate * max(now - last, 0.0))
+            self._last_query_t = now
             if rng.random() < p_start:
-                factor = 1.0 + rng.exponential(self.burst_factor_mean - 1.0)
-                self._burst = BurstState(
-                    active=True,
-                    factor=factor,
-                    ends_at=now + rng.exponential(self.burst_duration_mean),
-                )
-                return factor
+                return self._start_burst(now, rng)
         return 1.0
 
     # -- sampling --------------------------------------------------------
@@ -250,3 +264,268 @@ def clear_slowdowns(cluster: ClusterLatencyModel, worker_indices) -> None:
     second')."""
     for i in worker_indices:
         cluster.workers[i].slowdown = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Batched fleet sampling (scenario sweeps, §7)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetTraces:
+    """Pre-sampled latency traces for a whole (scenario x worker x task) grid.
+
+    ``comm[s, i, k]`` / ``comp_unit[s, i, k]`` hold the k-th communication /
+    per-unit-load computation draw of worker ``i`` in scenario ``s``; a worker
+    consumes its draws sequentially, one per *started* task, so the same
+    arrays can be replayed bit-exactly through the scalar event loop
+    (:class:`repro.latency.event_sim.EventDrivenSimulator` with a
+    ``latency_provider``) and the batched sweep engine
+    (:func:`repro.experiments.sweep.replay_batch`).
+
+    Bursts (paper §3.2) are pre-sampled as non-overlapping multiplicative
+    windows per (scenario, worker): an alternating renewal process with
+    Exp(1/rate) idle gaps and Exp(duration_mean) burst durations; the factor
+    of each window is ``1 + Exp(factor_mean - 1)``.  ``burst_factor_at``
+    looks up the active factor at arbitrary times.  Windows are sampled out
+    to a finite time horizon; beyond it the factor is 1.0.
+    """
+
+    comm: np.ndarray  # [S, N, K] float64
+    comp_unit: np.ndarray  # [S, N, K] float64, per unit computational load
+    slowdown: np.ndarray  # [N] persistent per-worker slowdown factors
+    burst_start: np.ndarray  # [S, N, M] (M == 0 when burst-free)
+    burst_end: np.ndarray  # [S, N, M]
+    burst_factor: np.ndarray  # [S, N, M]
+    seed: int = 0
+
+    @property
+    def num_scenarios(self) -> int:
+        return self.comm.shape[0]
+
+    @property
+    def num_workers(self) -> int:
+        return self.comm.shape[1]
+
+    @property
+    def horizon(self) -> int:
+        return self.comm.shape[2]
+
+    @property
+    def has_bursts(self) -> bool:
+        return self.burst_start.shape[2] > 0
+
+    def burst_factor_at(self, t: np.ndarray) -> np.ndarray:
+        """Active burst factor at times ``t`` ([S, N] -> [S, N])."""
+        if not self.has_bursts:
+            return np.ones_like(t, dtype=np.float64)
+        tt = np.asarray(t, dtype=np.float64)[:, :, None]
+        active = (self.burst_start <= tt) & (tt < self.burst_end)
+        # windows are non-overlapping, so at most one factor is selected
+        return np.where(active, self.burst_factor, 1.0).max(axis=2)
+
+    def _scalar_burst_factor(self, s: int, i: int, t: float) -> float:
+        """Same lookup as :meth:`burst_factor_at` for one (scenario, worker)."""
+        if not self.has_bursts:
+            return 1.0
+        starts = self.burst_start[s, i]
+        idx = int(np.searchsorted(starts, t, side="right")) - 1
+        if idx >= 0 and t < self.burst_end[s, i, idx]:
+            return float(self.burst_factor[s, i, idx])
+        return 1.0
+
+    def task_latency_parts(
+        self, k: np.ndarray, start: np.ndarray, loads
+    ) -> tuple:
+        """(comm, comp) latency of each worker's next task across scenarios.
+
+        ``k`` [S, N] is the per-(scenario, worker) draw index, ``start``
+        [S, N] the task start time, ``loads`` a scalar / [N] / [S, N]
+        computational load.  The arithmetic (order of multiplications) is
+        kept identical to :meth:`scalar_task_latency` so the batched and
+        scalar replay paths are bit-exact.
+        """
+        S, N, K = self.comm.shape
+        k = np.asarray(k)
+        if k.size and int(k.max()) >= K:
+            # same invariant as scalar_task_latency: silently reusing the
+            # last draw would fake a deterministic worker
+            raise ValueError(
+                f"trace draws exhausted (draw {int(k.max())} of horizon {K}); "
+                "sample a longer fleet"
+            )
+        s_idx = np.arange(S)[:, None]
+        n_idx = np.arange(N)[None, :]
+        kk = k
+        factor = self.burst_factor_at(start)
+        comp = (
+            self.comp_unit[s_idx, n_idx, kk]
+            * np.asarray(loads, dtype=np.float64)
+            * self.slowdown[None, :]
+            * factor
+        )
+        return self.comm[s_idx, n_idx, kk], comp
+
+    def task_latency(self, k: np.ndarray, start: np.ndarray, loads) -> np.ndarray:
+        """Total latency (comm + comp) of each worker's next task."""
+        comm, comp = self.task_latency_parts(k, start, loads)
+        return comm + comp
+
+    def scalar_task_latency(
+        self, scenario: int, worker: int, k: int, start: float, load: float
+    ) -> tuple:
+        """(comm, comp) of one draw — THE scalar counterpart of
+        :meth:`task_latency_parts`.
+
+        Every scalar consumer (``scalar_latency_provider``,
+        ``TraceLatencySource``) must go through this method: replay
+        bit-exactness depends on the multiplication order matching the
+        batched path, so the formula lives in exactly two places — here and
+        in :meth:`task_latency_parts` — kept textually parallel.
+
+        Raises when a worker's draw stream is exhausted; silently reusing
+        the last draw would fake a deterministic worker.
+        """
+        if k >= self.horizon:
+            raise ValueError(
+                f"trace draws exhausted for worker {worker} "
+                f"(horizon {self.horizon}); sample a longer fleet"
+            )
+        factor = self._scalar_burst_factor(scenario, worker, start)
+        comp = (
+            self.comp_unit[scenario, worker, k]
+            * load
+            * self.slowdown[worker]
+            * factor
+        )
+        return self.comm[scenario, worker, k], comp
+
+    def scalar_latency_provider(self, scenario: int, loads):
+        """A ``(worker, start_time) -> latency`` closure consuming this
+        scenario's draws in per-worker order — plug into
+        :class:`~repro.latency.event_sim.EventDrivenSimulator` to replay a
+        pre-sampled trace through the scalar event loop."""
+        loads_arr = np.broadcast_to(
+            np.asarray(loads, dtype=np.float64), (self.num_workers,)
+        ).copy() if np.ndim(loads) <= 1 else np.asarray(
+            loads[scenario], dtype=np.float64
+        )
+        counters = np.zeros(self.num_workers, dtype=np.int64)
+
+        def provider(i: int, start: float) -> float:
+            k = int(counters[i])
+            counters[i] += 1
+            comm, comp = self.scalar_task_latency(scenario, i, k, start, loads_arr[i])
+            return comm + comp
+
+        return provider
+
+
+def sample_fleet(
+    cluster: ClusterLatencyModel,
+    n_scenarios: int,
+    horizon: int,
+    *,
+    burst_rate: Optional[float] = None,
+    burst_factor_mean: Optional[float] = None,
+    burst_duration_mean: Optional[float] = None,
+    time_horizon: Optional[float] = None,
+    load_hint: float = 1.0,
+    max_bursts: int = 4096,
+    seed: int = 0,
+) -> FleetTraces:
+    """Draw the full (scenario x worker x task) latency grid at once.
+
+    Vectorizes the §3 gamma model and the §3.2 burst process over
+    ``n_scenarios`` independent scenarios and ``horizon`` tasks per worker
+    (one task per iteration is started at most, so ``horizon`` equal to the
+    number of iterations always suffices).  The per-worker gamma parameters,
+    slowdowns, and (unless overridden) burst parameters come from
+    ``cluster``; the ``burst_*`` keywords override them uniformly, which is
+    how the sweep driver realizes different burst *regimes* from one
+    cluster.
+
+    ``time_horizon`` bounds the burst renewal process in simulated seconds;
+    if omitted it is estimated as twice the expected makespan of ``horizon``
+    tasks of load ``load_hint`` on the slowest worker.
+    """
+    N = cluster.num_workers
+    rng = np.random.default_rng(seed)
+    shape_c = np.array([w.comm.shape for w in cluster.workers])
+    scale_c = np.array([w.comm.scale for w in cluster.workers])
+    shape_z = np.array([w.comp_per_unit.shape for w in cluster.workers])
+    scale_z = np.array([w.comp_per_unit.scale for w in cluster.workers])
+    slowdown = np.array([w.slowdown for w in cluster.workers], dtype=np.float64)
+
+    comm = rng.gamma(shape_c[None, :, None], scale_c[None, :, None],
+                     size=(n_scenarios, N, horizon))
+    comp_unit = rng.gamma(shape_z[None, :, None], scale_z[None, :, None],
+                          size=(n_scenarios, N, horizon))
+
+    rates = np.array(
+        [burst_rate if burst_rate is not None else w.burst_rate for w in cluster.workers],
+        dtype=np.float64,
+    )
+    f_means = np.array(
+        [
+            burst_factor_mean if burst_factor_mean is not None else w.burst_factor_mean
+            for w in cluster.workers
+        ],
+        dtype=np.float64,
+    )
+    d_means = np.array(
+        [
+            burst_duration_mean
+            if burst_duration_mean is not None
+            else w.burst_duration_mean
+        for w in cluster.workers
+        ],
+        dtype=np.float64,
+    )
+
+    if np.all(rates <= 0.0):
+        empty = np.zeros((n_scenarios, N, 0))
+        return FleetTraces(comm, comp_unit, slowdown, empty, empty.copy(),
+                           empty.copy(), seed=seed)
+
+    if time_horizon is None:
+        per_task = np.max(
+            (shape_c * scale_c) + (shape_z * scale_z) * load_hint * slowdown
+        )
+        # bursts inflate the realized makespan; without accounting for the
+        # duty cycle a high-duty regime would outrun its sampled windows and
+        # silently turn calm in the tail
+        duty = (rates * d_means) / (1.0 + rates * d_means)
+        inflation = 1.0 + float(np.max(duty * (f_means - 1.0)))
+        time_horizon = 2.0 * horizon * float(per_task) * inflation
+    max_rate = float(np.max(rates))
+    mean_cycle = 1.0 / max_rate + float(np.min(d_means))
+    M = int(math.ceil(1.5 * time_horizon / mean_cycle) + 6)
+    if M > max_bursts:
+        # clamping would silently leave the tail of the run burst-free —
+        # the same failure the time_horizon inflation above guards against
+        raise ValueError(
+            f"{M} burst windows needed to cover time_horizon={time_horizon:g} "
+            f"but max_bursts={max_bursts}; raise max_bursts or pass a smaller "
+            "time_horizon"
+        )
+
+    safe_scale = np.where(rates > 0.0, 1.0 / np.maximum(rates, 1e-30), 1.0)
+    gaps = rng.exponential(safe_scale[None, :, None], size=(n_scenarios, N, M))
+    gaps = np.where(rates[None, :, None] > 0.0, gaps, np.inf)
+    durations = rng.exponential(d_means[None, :, None], size=(n_scenarios, N, M))
+    # stationary start: the fleet was running long before t=0, so a worker
+    # begins mid-burst with probability dur/(idle+dur) — zero out the first
+    # idle gap for those (scenario, worker) pairs; the first duration draw is
+    # the residual burst length by memorylessness.  Without this, sweeps much
+    # shorter than 1/rate would never see a burst at all.
+    duty = (rates * d_means) / (1.0 + rates * d_means)
+    in_burst_at_0 = rng.random((n_scenarios, N)) < duty[None, :]
+    gaps[:, :, 0] = np.where(in_burst_at_0, 0.0, gaps[:, :, 0])
+    factors = 1.0 + rng.exponential(
+        np.maximum(f_means - 1.0, 1e-12)[None, :, None], size=(n_scenarios, N, M)
+    )
+    # alternating renewal: start_m = sum_{j<=m} gap_j + sum_{j<m} dur_j
+    starts = np.cumsum(gaps, axis=2) + np.cumsum(durations, axis=2) - durations
+    ends = starts + durations
+    return FleetTraces(comm, comp_unit, slowdown, starts, ends, factors, seed=seed)

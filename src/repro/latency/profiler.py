@@ -70,6 +70,58 @@ class LatencyProfiler:
         dq = self._samples[sample.worker]
         dq.append((sample.t_recorded, comm, sample.compute, sample.load))
 
+    def record_batch(
+        self,
+        workers: np.ndarray,
+        t_recorded: np.ndarray,
+        round_trip: np.ndarray,
+        compute: np.ndarray,
+        load: np.ndarray,
+    ) -> int:
+        """Bulk-insert samples from parallel arrays (batched-trace feed).
+
+        Entries are sorted by ``t_recorded`` per worker so the moving-window
+        eviction of :meth:`stats` keeps working; NaN entries (tasks that
+        never ran in a replayed trace) are dropped.  Returns the number of
+        samples recorded.
+        """
+        workers = np.asarray(workers, dtype=np.int64)
+        load = np.broadcast_to(np.asarray(load, dtype=np.float64), workers.shape).ravel()
+        workers = workers.ravel()
+        t_recorded = np.asarray(t_recorded, dtype=np.float64).ravel()
+        round_trip = np.asarray(round_trip, dtype=np.float64).ravel()
+        compute = np.asarray(compute, dtype=np.float64).ravel()
+        ok = ~(np.isnan(t_recorded) | np.isnan(round_trip) | np.isnan(compute))
+        if not ok.all():
+            workers, t_recorded, round_trip, compute, load = (
+                a[ok] for a in (workers, t_recorded, round_trip, compute, load)
+            )
+        if workers.size == 0:
+            return 0
+        if np.any((workers < 0) | (workers >= self.num_workers)):
+            raise ValueError("worker index out of range in batch")
+        comm = np.maximum(round_trip - compute, 0.0)
+        order = np.lexsort((t_recorded, workers))
+        workers, t_recorded, comm, compute, load = (
+            a[order] for a in (workers, t_recorded, comm, compute, load)
+        )
+        bounds = np.searchsorted(workers, np.arange(self.num_workers + 1))
+        for i in range(self.num_workers):
+            lo, hi = bounds[i], bounds[i + 1]
+            if lo < hi:
+                dq = self._samples[i]
+                dq.extend(
+                    zip(t_recorded[lo:hi], comm[lo:hi], compute[lo:hi], load[lo:hi])
+                )
+                if len(dq) > hi - lo and dq[-(hi - lo) - 1][0] > t_recorded[lo]:
+                    # batch starts before existing samples (e.g. a second
+                    # replayed scenario whose clock restarts at 0): re-sort so
+                    # _evict's front-only scan keeps seeing time order
+                    ordered = sorted(dq)
+                    dq.clear()
+                    dq.extend(ordered)
+        return int(workers.size)
+
     def _evict(self, worker: int, now: float) -> None:
         dq = self._samples[worker]
         cutoff = now - self.window

@@ -9,20 +9,27 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType landed after 0.4.x; on older jax every mesh axis is
+# implicitly Auto, which is exactly what we request on newer versions — so
+# the fallback just omits the kwarg.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(shape, axes, axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(devices_per_axis=(2, 4)):
     """Small mesh for subprocess tests (8 fake devices by default)."""
     axes = ("data", "model") if len(devices_per_axis) == 2 else ("pod", "data", "model")
-    return jax.make_mesh(
-        devices_per_axis, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(devices_per_axis, axes)

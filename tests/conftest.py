@@ -1,0 +1,183 @@
+"""Shared test setup.
+
+CI installs the real ``hypothesis`` (see requirements-dev.txt).  Minimal
+environments (e.g. the bare container this repo is grown in) may not have
+it, which previously broke *collection* of five test modules.  When the
+import fails we install a small API-compatible fallback into ``sys.modules``
+before the test modules import it: strategies become seeded random samplers
+and ``@given`` runs a fixed number of examples per test.  No shrinking and
+no example database — reduced property coverage, clearly inferior to the
+real library, but the properties still execute instead of erroring out.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+
+def _install_hypothesis_stub() -> None:
+    class _Unsatisfied(Exception):
+        pass
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rnd: random.Random):
+            return self._draw(rnd)
+
+        def map(self, fn):
+            return _Strategy(lambda r: fn(self._draw(r)))
+
+        def filter(self, pred):
+            def draw(r):
+                for _ in range(100):
+                    v = self._draw(r)
+                    if pred(v):
+                        return v
+                raise _Unsatisfied
+
+            return _Strategy(draw)
+
+    def integers(min_value=-(2**31), max_value=2**31 - 1):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        lo, hi = float(min_value), float(max_value)
+
+        def draw(r):
+            u = r.random()
+            if u < 0.05:
+                return lo
+            if u < 0.10:
+                return hi
+            if lo > 0.0 and hi / lo > 1e3:
+                # wide positive ranges: sample the exponent uniformly so
+                # small magnitudes are exercised, like hypothesis would
+                import math
+
+                return math.exp(r.uniform(math.log(lo), math.log(hi)))
+            return r.uniform(lo, hi)
+
+        return _Strategy(draw)
+
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    def sampled_from(seq):
+        choices = list(seq)
+        return _Strategy(lambda r: r.choice(choices))
+
+    def lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 10
+
+        def draw(r):
+            return [elements.example_from(r) for _ in range(r.randint(min_size, hi))]
+
+        return _Strategy(draw)
+
+    def tuples(*elements):
+        return _Strategy(lambda r: tuple(e.example_from(r) for e in elements))
+
+    class _DataObject:
+        def __init__(self, rnd):
+            self._rnd = rnd
+
+        def draw(self, strategy, label=None):
+            return strategy.example_from(self._rnd)
+
+    def data():
+        return _Strategy(lambda r: _DataObject(r))
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied
+        return True
+
+    def given(*args, **strategies):
+        if args:
+            raise TypeError("stub hypothesis supports keyword strategies only")
+
+        def decorate(fn):
+            import functools
+            import inspect
+
+            @functools.wraps(fn)
+            def wrapper(*wargs, **wkwargs):
+                max_examples = getattr(wrapper, "_stub_max_examples", None) or 25
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rnd = random.Random(seed)
+                ran = 0
+                attempts = 0
+                while ran < max_examples and attempts < max_examples * 20:
+                    attempts += 1
+                    drawn = {k: s.example_from(rnd) for k, s in strategies.items()}
+                    try:
+                        fn(*wargs, **wkwargs, **drawn)
+                    except _Unsatisfied:
+                        continue
+                    except BaseException:
+                        shown = {
+                            k: v for k, v in drawn.items()
+                            if not isinstance(v, _DataObject)
+                        }
+                        print(
+                            f"Falsifying example (stub hypothesis, no shrinking): "
+                            f"{fn.__qualname__}({shown!r})"
+                        )
+                        raise
+                    ran += 1
+
+            # pytest must not mistake the strategy parameters for fixtures:
+            # expose the original signature minus the drawn arguments
+            sig = inspect.signature(fn)
+            kept = [p for n, p in sig.parameters.items() if n not in strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+
+        return decorate
+
+    class settings:
+        def __init__(self, max_examples=None, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._stub_max_examples = self.max_examples
+            return fn
+
+    class HealthCheck:
+        too_slow = "too_slow"
+        filter_too_much = "filter_too_much"
+        data_too_large = "data_too_large"
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name, obj in [
+        ("integers", integers),
+        ("floats", floats),
+        ("booleans", booleans),
+        ("sampled_from", sampled_from),
+        ("lists", lists),
+        ("tuples", tuples),
+        ("data", data),
+    ]:
+        setattr(st_mod, name, obj)
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.strategies = st_mod
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    _install_hypothesis_stub()
