@@ -1,0 +1,163 @@
+"""Benchmark-regression gate: rerun the sweep grid and diff the committed
+``BENCH_sweep.json`` artifact.
+
+The vectorized sweep engine is deterministic given its seeds, so a rerun of
+the committed grid must reproduce the artifact's *method ordering* exactly;
+drift means a semantic change to the engine or the latency model.  The gate:
+
+* **fail** when a regime's method ranking (by best-w mean iteration time)
+  changes, or when the ``dsag_beats_sag_and_coded`` verdict flips;
+* **warn** (exit 0) when the DSAG speedup ratios (``sag_over_dsag``,
+  ``coded_over_dsag``) drift by more than 15% — noisy-but-directionally-
+  intact changes are surfaced without blocking.
+
+Run from the repo root:
+
+    PYTHONPATH=src python benchmarks/bench_regression.py [BENCH_sweep.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+SPEEDUP_DRIFT_TOLERANCE = 0.15
+SPEEDUP_KEYS = ("sag_over_dsag", "coded_over_dsag")
+
+
+class GridMismatch(RuntimeError):
+    """The committed artifact's grid cannot be reproduced by the rerun."""
+
+
+def method_ranking(cells: Dict[str, dict], regime: str) -> List[str]:
+    """Methods sorted fastest-first by their best-w mean iteration time."""
+    best: Dict[str, float] = {}
+    for key, cell in cells.items():
+        reg, method, _w = key.split("/")
+        if reg != regime:
+            continue
+        t = cell["mean_iter_time"]
+        if method not in best or t < best[method]:
+            best[method] = t
+    return sorted(best, key=best.get)
+
+
+def compare_sweep(committed: dict, fresh: dict) -> Tuple[List[str], List[str]]:
+    """Diff two BENCH_sweep payloads; returns (failures, warnings)."""
+    failures: List[str] = []
+    warnings: List[str] = []
+    for regime in committed["grid"]["regimes"]:
+        if regime not in fresh["grid"]["regimes"]:
+            failures.append(f"{regime}: regime missing from rerun")
+            continue
+        old_rank = method_ranking(committed["cells"], regime)
+        new_rank = method_ranking(fresh["cells"], regime)
+        if old_rank != new_rank:
+            failures.append(
+                f"{regime}: method ordering flipped {old_rank} -> {new_rank}"
+            )
+        old_o = committed["ordering"].get(regime, {})
+        new_o = fresh["ordering"].get(regime, {})
+        old_verdict = old_o.get("dsag_beats_sag_and_coded")
+        new_verdict = new_o.get("dsag_beats_sag_and_coded")
+        if old_verdict != new_verdict:
+            failures.append(
+                f"{regime}: dsag_beats_sag_and_coded flipped "
+                f"{old_verdict} -> {new_verdict}"
+            )
+        for key in SPEEDUP_KEYS:
+            if key in old_o and key in new_o and old_o[key] > 0:
+                drift = abs(new_o[key] / old_o[key] - 1.0)
+                if drift > SPEEDUP_DRIFT_TOLERANCE:
+                    warnings.append(
+                        f"{regime}: {key} drifted {drift:.0%} "
+                        f"({old_o[key]:.2f} -> {new_o[key]:.2f})"
+                    )
+    return failures, warnings
+
+
+def rerun_grid(committed: dict) -> dict:
+    """Re-execute the committed artifact's grid (engine only, no scalar
+    timing) and summarize it with the same results layer.
+
+    The artifact's ``grid`` section does not record every sweep parameter,
+    so the swept w values are reconstructed from the cell keys, the regimes
+    are matched by name against the known regime presets, and any cell-key
+    mismatch between the rerun and the artifact is an explicit failure
+    (raised as ``GridMismatch``) rather than a silent comparison of
+    different grids.
+    """
+    from repro.experiments import outcome_to_dict, run_sweep
+    from repro.experiments.grid import DEFAULT_REGIMES
+
+    grid = committed["grid"]
+    known_regimes = {r.name: r for r in DEFAULT_REGIMES}
+    regimes = []
+    for name in grid["regimes"]:
+        if name not in known_regimes:
+            raise GridMismatch(
+                f"regime {name!r} in the committed artifact is not a known "
+                "preset; rerun cannot reproduce the grid"
+            )
+        regimes.append(known_regimes[name])
+    # swept w values: the w cells of the w-swept methods (sgd / dsag)
+    w_values = sorted(
+        {
+            int(key.split("/")[2][1:])
+            for key in committed["cells"]
+            if key.split("/")[1] in ("sgd", "dsag")
+        }
+    )
+    outcome = run_sweep(
+        n_workers=grid["n_workers"],
+        n_seeds=grid["n_seeds"],
+        num_iterations=grid["num_iterations"],
+        w_values=w_values,
+        w_fracs=(),
+        regimes=regimes,
+        seed=grid.get("seed", 0),
+    )
+    fresh = outcome_to_dict(outcome)
+    if set(fresh["cells"]) != set(committed["cells"]):
+        missing = set(committed["cells"]) - set(fresh["cells"])
+        added = set(fresh["cells"]) - set(committed["cells"])
+        raise GridMismatch(
+            f"rerun produced different grid cells (missing {sorted(missing)}, "
+            f"unexpected {sorted(added)}); the artifact was generated with "
+            "parameters the rerun cannot reconstruct — regenerate it"
+        )
+    return fresh
+
+
+def main(argv: List[str]) -> int:
+    path = argv[1] if len(argv) > 1 else "BENCH_sweep.json"
+    try:
+        with open(path) as fh:
+            committed = json.load(fh)
+    except FileNotFoundError:
+        print(f"FAIL: committed artifact {path} not found")
+        return 1
+    try:
+        fresh = rerun_grid(committed)
+    except GridMismatch as exc:
+        print(f"FAIL: {exc}")
+        return 1
+    failures, warnings = compare_sweep(committed, fresh)
+    for w in warnings:
+        print(f"WARN: {w}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        print(f"benchmark regression: {len(failures)} ordering flip(s)")
+        return 1
+    print(
+        f"benchmark regression: ordering stable across "
+        f"{len(committed['grid']['regimes'])} regimes"
+        + (f" ({len(warnings)} drift warning(s))" if warnings else "")
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -30,6 +30,63 @@ from repro.lb.optimizer import LoadBalanceOptimizer, OptimizerInputs
 from repro.lb.partitioner import Subpartitioner, p_start, p_stop
 
 
+# ---------------------------------------------------------------------------
+# Method semantics shared by this scalar simulator and the batched
+# convergence engine (repro.experiments.convergence).  Both paths call these
+# helpers so the float expressions (and therefore every bit of the replayed
+# dynamics) cannot drift between the two implementations.
+# ---------------------------------------------------------------------------
+
+
+def task_finish_time(start, comp, comm):
+    """Completion time of a task: ``start + (comp + comm)``.
+
+    The grouping matters for bit-exact replay: both engines must add the
+    two latency components together before adding the start time.
+    """
+    return start + (comp + comm)
+
+
+def margin_deadline(tau_w, iter_start, margin):
+    """Paper §5.1: keep collecting ``margin`` longer than the time the
+    first w fresh results took this iteration."""
+    return tau_w + margin * (tau_w - iter_start)
+
+
+def effective_w(config: "MethodConfig", num_workers: int) -> int:
+    """The wait-for-w actually used by a method on an N-worker fleet."""
+    if config.name == "gd":
+        return num_workers
+    if config.name == "coded":
+        return int(math.ceil(config.code_rate * num_workers))
+    return min(config.w if config.w > 0 else num_workers, num_workers)
+
+
+def make_optimizer_inputs(
+    e_comm: np.ndarray,
+    v_comm: np.ndarray,
+    e_comp: np.ndarray,
+    v_comp: np.ndarray,
+    samples_per_worker: np.ndarray,
+    w: int,
+    margin: float,
+) -> OptimizerInputs:
+    """§6.1 profiler moments -> Algorithm-1 inputs (variance floors applied).
+
+    Accepts ``[N]`` arrays (scalar simulator) or ``[S, N]`` arrays (batched
+    engine); the floors are elementwise either way.
+    """
+    return OptimizerInputs(
+        e_comm=np.asarray(e_comm, dtype=np.float64),
+        v_comm=np.maximum(np.asarray(v_comm, dtype=np.float64), 1e-18),
+        e_comp=np.asarray(e_comp, dtype=np.float64),
+        v_comp=np.maximum(np.asarray(v_comp, dtype=np.float64), 1e-18),
+        samples_per_worker=np.asarray(samples_per_worker, dtype=np.float64),
+        w=w,
+        margin=margin,
+    )
+
+
 class LatencySource:
     """Where per-task (comp, comm) latencies come from.
 
@@ -118,10 +175,24 @@ class MethodConfig:
 
 @dataclasses.dataclass
 class RunHistory:
+    """Convergence trace of one training run.
+
+    ``per_worker_latency[t, i]`` is the total (comp + comm) latency of the
+    task worker ``i`` *started for iteration t* — completed results are
+    attributed to the task's own iteration ``titer``, not to the iteration
+    the coordinator happened to be collecting when the result arrived.  A
+    stale DSAG result that took three iterations to come back therefore
+    lands in the row it was assigned in (NaN where the worker never started
+    that iteration's task, or where the run ended before the result
+    returned).  This is the trace the §6.1 profiler view of the fleet is
+    judged against; attributing by completion row would smear slow workers'
+    latencies onto later iterations.
+    """
+
     times: np.ndarray  # [T] completion time of each iteration (sim s)
     suboptimality: np.ndarray  # [T] gap after each iteration (subsampled = nan)
     fresh_counts: np.ndarray  # [T]
-    per_worker_latency: np.ndarray  # [T, N] latency of last task completed (nan if none)
+    per_worker_latency: np.ndarray  # [T, N] latency of the task started at t
     repartition_events: List[float]  # sim times at which a new p was published
     evictions: int = 0
     rejected_stale: int = 0
@@ -170,7 +241,7 @@ class _SimWorker:
         value = problem.subgradient(task.iterate, start, stop)
         cost = problem.compute_cost(start, stop) * comp_scale
         comp_lat, comm_lat = latency_source.task_latency(self.idx, cost, now)
-        finish = now + comp_lat + comm_lat
+        finish = task_finish_time(now, comp_lat, comm_lat)
         self.busy_until = finish
         result = (self.idx, interval, task.iteration, value, comp_lat, comm_lat, task.assigned_at)
         return finish, result
@@ -238,13 +309,7 @@ class TrainingSimulator:
 
     # -- per-method gradient-estimate assembly -----------------------------
     def _effective_w(self) -> int:
-        c = self.config
-        N = self.cluster.num_workers
-        if c.name == "gd":
-            return N
-        if c.name == "coded":
-            return int(math.ceil(c.code_rate * N))
-        return min(c.w if c.w > 0 else N, N)
+        return effective_w(self.config, self.cluster.num_workers)
 
     def run(self, num_iterations: int) -> RunHistory:
         cfg = self.config
@@ -304,7 +369,10 @@ class TrainingSimulator:
                 now = fin
                 (widx, interval, titer, value, comp_lat, comm_lat, assigned_at) = result
                 wk = self.workers[widx]
-                lat_matrix[t, widx] = comp_lat + comm_lat
+                # attribute the latency to the task's own iteration (see
+                # RunHistory docstring) — NOT the collection iteration t,
+                # which would smear stale DSAG completions onto later rows
+                lat_matrix[titer, widx] = comp_lat + comm_lat
                 self.profiler.record(
                     LatencySample(
                         worker=widx,
@@ -338,7 +406,7 @@ class TrainingSimulator:
                         if cfg.uses_margin and cfg.margin > 0:
                             # paper §5.1: wait 2% longer than the time it took
                             # to collect the w-th fresh result this iteration
-                            deadline = now + cfg.margin * (now - iter_start)
+                            deadline = margin_deadline(now, iter_start, cfg.margin)
                         else:
                             break
 
@@ -394,23 +462,18 @@ class TrainingSimulator:
     def _run_load_balancer(
         self, now: float, current_p: np.ndarray, w_wait: int
     ) -> Optional[np.ndarray]:
-        stats = self.profiler.all_stats(now)
-        N = self.cluster.num_workers
-        if len(stats) < N:
+        moments = self.profiler.moment_arrays(now)
+        if moments is None:
             return None  # need at least one window sample per worker
-        e_comm = np.array([stats[i].e_comm for i in range(N)])
-        v_comm = np.array([max(stats[i].v_comm, 1e-18) for i in range(N)])
-        e_comp = np.array([stats[i].e_comp for i in range(N)])
-        v_comp = np.array([max(stats[i].v_comp, 1e-18) for i in range(N)])
         n_i = np.array([w.sub.n_local for w in self.workers], dtype=np.float64)
-        inputs = OptimizerInputs(
-            e_comm=e_comm,
-            v_comm=v_comm,
-            e_comp=e_comp,
-            v_comp=v_comp,
-            samples_per_worker=n_i,
-            w=w_wait,
-            margin=self.config.margin,
+        inputs = make_optimizer_inputs(
+            moments.e_comm,
+            moments.v_comm,
+            moments.e_comp,
+            moments.v_comp,
+            n_i,
+            w_wait,
+            self.config.margin,
         )
         p_new = self.lb_optimizer.optimize(current_p, inputs)
         if not self.lb_optimizer.should_publish(current_p, p_new, inputs):

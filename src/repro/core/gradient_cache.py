@@ -140,3 +140,131 @@ class GradientCache:
         for e in self._entries:
             recomputed = recomputed + np.asarray(e.value, dtype=np.float64)
         np.testing.assert_allclose(recomputed, self._sum, rtol=1e-9, atol=1e-9)
+
+
+class BatchedGradientCache:
+    """S independent §5 caches sharing one interval-slot table.
+
+    How this differs from :class:`GradientCache`: the scalar cache keys a
+    sorted entry list per run; here the *interval universe* (every [i, j]
+    ever inserted, across all scenarios) is a single slot table, and the
+    per-scenario state is dense arrays over those slots — iteration tags
+    ``[E, S]``, float64 values ``[E, S, ...]``, running sums ``[S, ...]``
+    and coverage ``[S]``.  Scenarios replaying the same fleet share the
+    same partition arithmetic, so their intervals coincide and the fast
+    path (an active exact-match slot, the SAG-style in-place update) is a
+    dict lookup + one fused add — no per-entry Python objects, no bisect.
+
+    Per-scenario semantics are exactly the scalar cache's §5 update rule
+    (staleness dominance, overlap eviction in start order, incremental sum
+    maintenance), applied event-by-event so the float accumulation order —
+    and therefore every bit of ``sums`` — matches a scalar
+    :class:`GradientCache` fed the same per-scenario insert sequence.
+    """
+
+    def __init__(self, num_scenarios: int, num_samples: int, zero_like: Any):
+        if num_scenarios <= 0 or num_samples <= 0:
+            raise ValueError("num_scenarios and num_samples must be positive")
+        self.num_scenarios = num_scenarios
+        self.num_samples = num_samples
+        zero = np.array(zero_like, dtype=np.float64, copy=True)
+        self._value_shape = zero.shape
+        self._sums = np.zeros((num_scenarios,) + zero.shape, dtype=np.float64)
+        self._covered = np.zeros(num_scenarios, dtype=np.int64)
+        self.evictions = np.zeros(num_scenarios, dtype=np.int64)
+        self.rejected_stale = np.zeros(num_scenarios, dtype=np.int64)
+        self._slot_of: dict = {}  # (start, stop) -> slot index
+        self._intervals: List[Tuple[int, int]] = []
+        cap = 8
+        self._iters = np.full((cap, num_scenarios), -1, dtype=np.int64)
+        self._values = np.zeros((cap,) + self._sums.shape, dtype=np.float64)
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def sums(self) -> np.ndarray:
+        """[S, ...] running sums H_s (same bits as scalar caches)."""
+        return self._sums
+
+    @property
+    def coverage(self) -> np.ndarray:
+        """[S] coverage fractions ξ_s."""
+        return self._covered / self.num_samples
+
+    def _ensure_slot(self, start: int, stop: int) -> int:
+        slot = self._slot_of.get((start, stop))
+        if slot is not None:
+            return slot
+        slot = len(self._intervals)
+        if slot >= self._iters.shape[0]:
+            grow = self._iters.shape[0]
+            self._iters = np.concatenate(
+                [self._iters, np.full((grow, self.num_scenarios), -1, np.int64)]
+            )
+            self._values = np.concatenate(
+                [self._values, np.zeros((grow,) + self._sums.shape)]
+            )
+        self._slot_of[(start, stop)] = slot
+        self._intervals.append((start, stop))
+        return slot
+
+    def insert(self, s: int, start: int, stop: int, iteration: int, value: Any) -> bool:
+        """Apply the §5 update for scenario ``s``; True iff accepted."""
+        if not (1 <= start <= stop <= self.num_samples):
+            raise ValueError(f"interval [{start},{stop}] outside 1..{self.num_samples}")
+        exact = self._slot_of.get((start, stop))
+        if exact is not None and self._iters[exact, s] >= 0:
+            # active entries are disjoint, so an active exact match is the
+            # ONLY overlap — the scalar fast path (SAG in-place update)
+            if self._iters[exact, s] >= iteration:
+                self.rejected_stale[s] += 1
+                return False
+            v64 = np.asarray(value, dtype=np.float64)
+            self._sums[s] += v64 - self._values[exact, s]
+            self._values[exact, s] = v64
+            self._iters[exact, s] = iteration
+            return True
+        # slow path: scan active slots for overlaps (in start order, like the
+        # scalar sorted-entry walk)
+        overlapping = [
+            slot
+            for slot, (a, b) in enumerate(self._intervals)
+            if self._iters[slot, s] >= 0 and not (b < start or stop < a)
+        ]
+        overlapping.sort(key=lambda slot: self._intervals[slot][0])
+        for slot in overlapping:
+            if self._iters[slot, s] >= iteration:
+                self.rejected_stale[s] += 1
+                return False
+        v64 = np.asarray(value, dtype=np.float64)
+        removed_width = 0
+        for slot in overlapping:
+            self._sums[s] -= self._values[slot, s]
+            a, b = self._intervals[slot]
+            removed_width += b - a + 1
+            self._iters[slot, s] = -1
+        self.evictions[s] += len(overlapping)
+        target = self._ensure_slot(start, stop)
+        self._iters[target, s] = iteration
+        self._values[target, s] = v64
+        self._sums[s] += v64
+        self._covered[s] += (stop - start + 1) - removed_width
+        return True
+
+    # -- invariant checks (used by tests) ----------------------------------
+    def check_invariants(self) -> None:
+        for s in range(self.num_scenarios):
+            active = [
+                (a, b, slot)
+                for slot, (a, b) in enumerate(self._intervals)
+                if self._iters[slot, s] >= 0
+            ]
+            active.sort()
+            assert all(
+                active[k][1] < active[k + 1][0] for k in range(len(active) - 1)
+            ), f"scenario {s}: active entries overlap"
+            width = sum(b - a + 1 for a, b, _ in active)
+            assert width == self._covered[s], f"scenario {s}: coverage mismatch"
+            recomputed = np.zeros(self._value_shape)
+            for _, _, slot in active:
+                recomputed = recomputed + self._values[slot, s]
+            np.testing.assert_allclose(recomputed, self._sums[s], rtol=1e-9, atol=1e-9)

@@ -26,7 +26,18 @@ import numpy as np
 
 
 class FiniteSumProblem:
-    """Interface shared by the coordinator/cluster simulator."""
+    """Interface shared by the coordinator/cluster simulator.
+
+    The ``*_blocks`` / ``*_batch`` methods are the batched counterparts used
+    by the vectorized convergence engine
+    (:mod:`repro.experiments.convergence`): they evaluate G tasks (one
+    iterate + one sample interval each) in a single JAX dispatch.  Each row
+    of the result must be *bit-identical* to the corresponding scalar call —
+    the batched engine's equivalence guarantee against the scalar
+    :class:`~repro.cluster.simulator.TrainingSimulator` rests on it, so the
+    implementations keep the exact operation order of the scalar path and
+    only add a leading batch dimension to the matmuls.
+    """
 
     num_samples: int
 
@@ -37,6 +48,16 @@ class FiniteSumProblem:
         """Sum of ∇f_k(V) for k in [start, stop] (1-based inclusive)."""
         raise NotImplementedError
 
+    def subgradient_blocks(
+        self, V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray
+    ) -> np.ndarray:
+        """[G, ...] block subgradients for G (iterate, interval) tasks.
+
+        All intervals must have the same width; row g must equal
+        ``subgradient(V_stack[g], starts[g], stops[g])`` bit-for-bit.
+        """
+        raise NotImplementedError
+
     def regularizer_grad(self, V: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
@@ -44,12 +65,43 @@ class FiniteSumProblem:
         """The G(·) operator of paper Eq. (2)."""
         return V
 
+    def project_batch(self, V_stack: np.ndarray) -> np.ndarray:
+        """Apply G(·) to a stack of iterates; identity by default."""
+        return V_stack
+
     def suboptimality(self, V: np.ndarray) -> float:
         raise NotImplementedError
 
     def compute_cost(self, start: int, stop: int) -> float:
         """Computational load c of the block (paper §3: ops count)."""
         raise NotImplementedError
+
+    def compute_cost_batch(self, starts: np.ndarray, stops: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`compute_cost` (same float expression per row)."""
+        raise NotImplementedError
+
+
+def _bucket_pad(V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray):
+    """Pad a task batch to the next power-of-two size (repeat the last row).
+
+    The batched subgradient kernels are batch-invariant (each row's result
+    is independent of what else shares the batch), so padding does not
+    change any real row's bits — but it bounds the number of distinct batch
+    shapes XLA ever sees to O(log G_max) per block width, instead of one
+    recompilation for every fleet configuration the event dynamics happen
+    to produce.
+    """
+    g = V_stack.shape[0]
+    bucket = 1 << (g - 1).bit_length()
+    if bucket == g:
+        return V_stack, starts, stops, g
+    pad = bucket - g
+    return (
+        np.concatenate([V_stack, np.repeat(V_stack[-1:], pad, axis=0)]),
+        np.concatenate([starts, np.repeat(starts[-1:], pad)]),
+        np.concatenate([stops, np.repeat(stops[-1:], pad)]),
+        g,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -114,10 +166,35 @@ class PCAProblem(FiniteSumProblem):
         # so the block subgradient is -X_b^T (X_b V) — exactly the worker
         # computation of paper Eq. (3).  With eta = 1 the GD update
         # V - (V - A V) = A V followed by Gram-Schmidt *is* the power method,
-        # as stated in §7.
-        xb = self._Xj[start - 1 : stop]  # 1-based inclusive -> python slice
-        Vj = jnp.asarray(V)
-        return np.asarray(-(xb.T @ (xb @ Vj)))
+        # as stated in §7.  Routed through the G = 1 batched kernel so the
+        # scalar simulator and the batched convergence engine share one code
+        # path (bit-exact equivalence depends on it).
+        return self.subgradient_blocks(
+            np.asarray(V)[None],
+            np.array([start], dtype=np.int64),
+            np.array([stop], dtype=np.int64),
+        )[0]
+
+    def subgradient_blocks(
+        self, V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray
+    ) -> np.ndarray:
+        # -X_b^T (X_b V) with a leading batch axis.  The batched matmul is
+        # batch-invariant on CPU (row g is bit-identical whatever else is in
+        # the batch — pinned by tests), which is what lets the scalar path
+        # reuse this kernel at G = 1.
+        starts = np.asarray(starts, dtype=np.int64)
+        stops = np.asarray(stops, dtype=np.int64)
+        widths = stops - starts + 1
+        if widths.size == 0:
+            return np.zeros((0,) + np.shape(V_stack)[1:], dtype=np.float32)
+        m = int(widths[0])
+        if not np.all(widths == m):
+            raise ValueError("subgradient_blocks requires equal-width intervals")
+        V_stack, starts, stops, g = _bucket_pad(np.asarray(V_stack), starts, stops)
+        idx = starts[:, None] - 1 + np.arange(m)[None, :]
+        xg = self._Xj[jnp.asarray(idx)]  # [G, m, d]
+        Vb = jnp.asarray(V_stack)  # [G, d, k]
+        return np.asarray(-(jnp.swapaxes(xg, 1, 2) @ (xg @ Vb)))[:g]
 
     def regularizer_grad(self, V: np.ndarray) -> np.ndarray:
         return V  # ∇ 1/2||V||_F^2
@@ -126,6 +203,13 @@ class PCAProblem(FiniteSumProblem):
         # Gram-Schmidt == thin-QR orthonormalization (sign-fixed)
         q, r = np.linalg.qr(V)
         return q * np.sign(np.diag(r))[None, :]
+
+    def project_batch(self, V_stack: np.ndarray) -> np.ndarray:
+        # np.linalg.qr gufunc-loops LAPACK per matrix, so each row matches
+        # the scalar `project` bit-for-bit
+        q, r = np.linalg.qr(V_stack)
+        diag = r[..., np.arange(self.k), np.arange(self.k)]
+        return q * np.sign(diag)[..., None, :]
 
     def explained_variance(self, V: np.ndarray) -> float:
         xv = self.X.astype(np.float64) @ V.astype(np.float64)
@@ -141,6 +225,10 @@ class PCAProblem(FiniteSumProblem):
         # c = 2 ζ d k rows  with ζ the density (paper §3); for our dense
         # representation ζ=1 gives ops of the dense Gram product.
         rows = stop - start + 1
+        return 2.0 * self.dim * self.k * rows
+
+    def compute_cost_batch(self, starts: np.ndarray, stops: np.ndarray) -> np.ndarray:
+        rows = np.asarray(stops, dtype=np.int64) - np.asarray(starts, np.int64) + 1
         return 2.0 * self.dim * self.k * rows
 
 
@@ -220,16 +308,46 @@ class LogisticRegressionProblem(FiniteSumProblem):
         return float(max(self.objective(V) - self.optimum_objective, 1e-16))
 
     def subgradient(self, V: np.ndarray, start: int, stop: int) -> np.ndarray:
-        xb = self._Xj[start - 1 : stop]
-        yb = self._yj[start - 1 : stop]
-        Vj = jnp.asarray(V)
-        z = yb * (xb @ Vj)
+        # routed through the G = 1 batched kernel (see subgradient_blocks)
+        return self.subgradient_blocks(
+            np.asarray(V)[None],
+            np.array([start], dtype=np.int64),
+            np.array([stop], dtype=np.int64),
+        )[0]
+
+    def subgradient_blocks(
+        self, V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray
+    ) -> np.ndarray:
+        # Uses explicit elementwise-multiply + axis reductions rather than
+        # matmuls: XLA lowers a [m, d] @ [d] mat-vec and a [G, m, d] batched
+        # product to different kernels with different accumulation orders, so
+        # matmul results would depend on the batch size.  The reduce-based
+        # form is batch-invariant (row g identical at any G — pinned by
+        # tests), which is what lets the scalar path reuse this kernel.
+        starts = np.asarray(starts, dtype=np.int64)
+        stops = np.asarray(stops, dtype=np.int64)
+        widths = stops - starts + 1
+        if widths.size == 0:
+            return np.zeros((0, self.dim), dtype=np.float32)
+        m = int(widths[0])
+        if not np.all(widths == m):
+            raise ValueError("subgradient_blocks requires equal-width intervals")
+        V_stack, starts, stops, g = _bucket_pad(np.asarray(V_stack), starts, stops)
+        idx = jnp.asarray(starts[:, None] - 1 + np.arange(m)[None, :])
+        xg = self._Xj[idx]  # [G, m, d]
+        yg = self._yj[idx]  # [G, m]
+        Vb = jnp.asarray(V_stack)  # [G, d]
+        z = yg * jnp.sum(xg * Vb[:, None, :], axis=2)
         s = jax.nn.sigmoid(-z)
-        grad = -(xb.T @ (yb * s)) / self.num_samples
-        return np.asarray(grad)
+        grad = -jnp.sum(xg * (yg * s)[:, :, None], axis=1) / self.num_samples
+        return np.asarray(grad)[:g]
 
     def regularizer_grad(self, V: np.ndarray) -> np.ndarray:
         return self.lam * V
 
     def compute_cost(self, start: int, stop: int) -> float:
         return 2.0 * self.dim * (stop - start + 1)
+
+    def compute_cost_batch(self, starts: np.ndarray, stops: np.ndarray) -> np.ndarray:
+        rows = np.asarray(stops, dtype=np.int64) - np.asarray(starts, np.int64) + 1
+        return 2.0 * self.dim * rows

@@ -1,14 +1,18 @@
 """Batched scenario sweeps over the §3/§4.2 simulated fleet (paper §7).
 
-The subsystem has three layers:
+The subsystem has four layers:
 
 * :mod:`repro.experiments.sweep` — the vectorized event-dynamics engine
   (bit-exact replay of the scalar simulator over a scenario batch) plus the
   fully-vectorized fast path for queue-feedback-free methods;
+* :mod:`repro.experiments.convergence` — the batched *convergence* engine:
+  the full DSAG/SAG/SGD update rule (gradient cache, coverage scaling,
+  §5.1 margin, stale integration, §6 load balancing) over all scenarios at
+  once, bit-exact against the scalar ``TrainingSimulator``;
 * :mod:`repro.experiments.grid` — the (seeds x methods x w x regimes) driver
   with common-random-number trace sharing per regime;
 * :mod:`repro.experiments.results` — ordering verdicts, the profiler feed,
-  and the ``BENCH_sweep.json`` artifact.
+  and the ``BENCH_sweep.json`` / ``BENCH_convergence.json`` artifacts.
 """
 
 from repro.experiments.grid import (
@@ -37,26 +41,48 @@ from repro.experiments.sweep import (
     scalar_sync_reference,
     synchronous_times_batch,
 )
+from repro.experiments.convergence import (
+    ConvergenceBatchResult,
+    ConvergenceSweepOutcome,
+    default_convergence_methods,
+    run_convergence_batch,
+    run_convergence_sweep,
+    scalar_convergence_run,
+    scalar_convergence_seconds,
+)
+from repro.experiments.results import (
+    convergence_ordering,
+    write_bench_convergence,
+)
 
 __all__ = [
     "BatchedRunResult",
     "BurstRegime",
     "CALM",
+    "ConvergenceBatchResult",
+    "ConvergenceSweepOutcome",
     "DEFAULT_REGIMES",
     "HEAVY_BURSTS",
     "MethodSpec",
     "PAPER_BURSTS",
     "SweepOutcome",
     "SweepRow",
+    "convergence_ordering",
+    "default_convergence_methods",
     "default_methods",
     "feed_profiler",
     "outcome_to_dict",
     "paper_ordering",
     "replay_batch",
+    "run_convergence_batch",
+    "run_convergence_sweep",
     "run_sweep",
+    "scalar_convergence_run",
+    "scalar_convergence_seconds",
     "scalar_reference",
     "scalar_sweep_seconds",
     "scalar_sync_reference",
     "synchronous_times_batch",
+    "write_bench_convergence",
     "write_bench_sweep",
 ]

@@ -122,6 +122,7 @@ class SweepOutcome:
     results: Dict[Tuple[str, str, int], BatchedRunResult]
     traces: Dict[str, FleetTraces]
     methods: Tuple[MethodSpec, ...] = ()
+    seed: int = 0  # base seed of the grid (recorded in the BENCH artifact)
 
     def mean_iter_time(self, regime: str, method: str, w: Optional[int] = None) -> float:
         sel = [
@@ -238,6 +239,7 @@ def run_sweep(
         results=results,
         traces=traces_by_regime,
         methods=methods,
+        seed=seed,
     )
 
 

@@ -31,6 +31,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.cluster.simulator import margin_deadline, task_finish_time
 from repro.latency.event_sim import EventDrivenSimulator, SimResult
 from repro.latency.model import FleetTraces
 
@@ -107,7 +108,7 @@ def replay_batch(
         idle = free_at <= assign[:, None]
         start = np.where(idle, assign[:, None], free_at)
         comm_d, comp_d = traces.task_latency_parts(draw_idx, start, loads_b)
-        finish = start + (comm_d + comp_d)
+        finish = task_finish_time(start, comp_d, comm_d)
 
         # w-th fresh arrival: any busy worker contributing to the first w has
         # free_at < finish <= tau_w, i.e. its queued task provably started.
@@ -115,7 +116,7 @@ def replay_batch(
         if margin > 0.0:
             # paper §5.1: keep collecting `margin` longer than the time the
             # first w fresh results took this iteration
-            deadline = tau_w + margin * (tau_w - assign)
+            deadline = margin_deadline(tau_w, assign, margin)
         else:
             deadline = tau_w
         started = idle | (free_at <= deadline[:, None])

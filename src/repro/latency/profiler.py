@@ -55,6 +55,18 @@ class WorkerStats:
         return GammaParams.from_mean_var(e, v)
 
 
+@dataclasses.dataclass(frozen=True)
+class ProfilerMoments:
+    """Per-worker moment arrays ([N]) for the load-balancing optimizer."""
+
+    e_comm: np.ndarray
+    v_comm: np.ndarray
+    e_comp: np.ndarray
+    v_comp: np.ndarray
+    mean_load: np.ndarray
+    num_samples: np.ndarray
+
+
 class LatencyProfiler:
     """Per-worker moving-window mean/variance of comm and comp latency."""
 
@@ -151,3 +163,25 @@ class LatencyProfiler:
             if s is not None:
                 out[i] = s
         return out
+
+    def moment_arrays(self, now: float) -> Optional["ProfilerMoments"]:
+        """All workers' moments as [N] arrays (the §6.2 optimizer feed).
+
+        Returns None unless every worker has at least one in-window sample —
+        the same gate the load-balancing loop applies before invoking
+        Algorithm 1.  Both the scalar simulator and the batched convergence
+        engine build their :class:`~repro.lb.optimizer.OptimizerInputs` from
+        this method so the two paths see identical moments.
+        """
+        stats = self.all_stats(now)
+        if len(stats) < self.num_workers:
+            return None
+        idx = range(self.num_workers)
+        return ProfilerMoments(
+            e_comm=np.array([stats[i].e_comm for i in idx]),
+            v_comm=np.array([stats[i].v_comm for i in idx]),
+            e_comp=np.array([stats[i].e_comp for i in idx]),
+            v_comp=np.array([stats[i].v_comp for i in idx]),
+            mean_load=np.array([stats[i].mean_load for i in idx]),
+            num_samples=np.array([stats[i].num_samples for i in idx]),
+        )

@@ -3,7 +3,11 @@
 Given per-worker latency statistics from the profiler, produce an updated
 subpartition-count vector p' that (i) equalizes expected total per-iteration
 latency across workers and (ii) respects the contribution constraint
-h(p') >= h_min, where h is estimated with the event-driven simulator.
+h(p') >= h_min, where h is estimated by replaying pre-sampled what-if
+latency traces through the batched §4.2 event dynamics
+(:func:`repro.experiments.sweep.replay_batch`) — the same dynamics the old
+event-driven estimate simulated one heap event at a time, resolved with
+array operations instead.
 
 The optimizer works on the §6.2 linearisation:
 
@@ -12,22 +16,31 @@ The optimizer works on the §6.2 linearisation:
     e'_{X,i} = e_{Y,i} + e'_{Z,i}          (total)
 
 and evaluates h with a 1% tolerance (the paper's noise allowance).
+
+Every phase (equalize / restore / slack) operates on ``[S, N]`` arrays so a
+whole batch of scenarios is balanced in one call
+(:meth:`LoadBalanceOptimizer.optimize_batch`); the scalar
+:meth:`~LoadBalanceOptimizer.optimize` entry point is the S = 1 special
+case of the batched path, so the scalar training simulator and the batched
+convergence engine cannot drift apart.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
-
-from repro.latency.event_sim import EventDrivenSimulator
-from repro.latency.model import ClusterLatencyModel, GammaParams, WorkerLatencyModel
 
 
 @dataclasses.dataclass
 class OptimizerInputs:
-    """Latest profiler statistics, one entry per worker."""
+    """Latest profiler statistics.
+
+    Arrays are ``[N]`` for a single scenario (the scalar simulator) or
+    ``[S, N]`` for a batch (the vectorized convergence engine); ``w`` and
+    ``margin`` are shared across the batch (one method configuration).
+    """
 
     e_comm: np.ndarray  # e_{Y,i}
     v_comm: np.ndarray  # v_{Y,i}
@@ -36,6 +49,20 @@ class OptimizerInputs:
     samples_per_worker: np.ndarray  # n_i
     w: int  # wait-for-w setting of the running method
     margin: float = 0.02
+
+    def as_batch(self) -> "OptimizerInputs":
+        """View with a leading scenario axis (no copy for 2-D inputs)."""
+        if np.ndim(self.e_comm) == 2:
+            return self
+        return OptimizerInputs(
+            e_comm=np.asarray(self.e_comm, np.float64)[None, :],
+            v_comm=np.asarray(self.v_comm, np.float64)[None, :],
+            e_comp=np.asarray(self.e_comp, np.float64)[None, :],
+            v_comp=np.asarray(self.v_comp, np.float64)[None, :],
+            samples_per_worker=np.asarray(self.samples_per_worker, np.float64)[None, :],
+            w=self.w,
+            margin=self.margin,
+        )
 
 
 class LoadBalanceOptimizer:
@@ -58,6 +85,10 @@ class LoadBalanceOptimizer:
         self.improvement_threshold = improvement_threshold
         self.seed = seed
         self.h_min: Optional[float] = None
+        #: h at the *returned* p' of the last optimize() call — kept
+        #: consistent with the returned vector even when the slack phase
+        #: backs a violating step out (see optimize_batch)
+        self.last_h: Optional[float] = None
 
     # -- objective -------------------------------------------------------
     @staticmethod
@@ -66,105 +97,218 @@ class LoadBalanceOptimizer:
         return inputs.e_comm + e_z
 
     @staticmethod
-    def objective(e_x: np.ndarray) -> float:
-        """max/min ratio of expected per-worker total latency (Eq. 7)."""
-        lo = float(e_x.min())
-        return float(e_x.max()) / max(lo, 1e-12)
+    def objective(e_x: np.ndarray):
+        """max/min ratio of expected per-worker total latency (Eq. 7).
 
-    # -- h(p) via event-driven simulation ---------------------------------
-    def _estimate_h(
-        self, inputs: OptimizerInputs, p: np.ndarray, p_new: np.ndarray
-    ) -> float:
-        n = float(inputs.samples_per_worker.sum())
-        workers = []
-        for i in range(len(p_new)):
-            comm = GammaParams.from_mean_var(
-                max(inputs.e_comm[i], 1e-12), max(inputs.v_comm[i], 1e-18)
-            )
+        Reduces over the worker axis: returns a float for ``[N]`` input and
+        an ``[S]`` array for ``[S, N]`` input.
+        """
+        lo = np.maximum(e_x.min(axis=-1), 1e-12)
+        ratio = e_x.max(axis=-1) / lo
+        return float(ratio) if np.ndim(ratio) == 0 else ratio
+
+    # -- h(p) via batched trace replay ------------------------------------
+    def _estimate_h_batch(
+        self,
+        inputs: OptimizerInputs,
+        p: np.ndarray,
+        p_new: np.ndarray,
+        active: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """h(p') for every active scenario (NaN elsewhere).
+
+        Builds the linearised what-if gamma parameters per scenario, draws
+        ``sim_iterations`` latency traces per worker (each scenario from its
+        own ``default_rng(seed)`` stream, so a scenario's draws do not
+        depend on which other scenarios share the batch), and replays all
+        scenarios at once through :func:`replay_batch`.
+        """
+        # deferred: repro.cluster.simulator -> repro.lb.optimizer at import
+        # time, and the experiments package imports the cluster simulator
+        from repro.experiments.sweep import replay_batch
+        from repro.latency.model import FleetTraces
+
+        S, N = p_new.shape
+        if active is None:
+            active = np.ones(S, dtype=bool)
+        idx = np.flatnonzero(active)
+        out = np.full(S, np.nan)
+        if idx.size == 0:
+            return out
+        K = self.sim_iterations
+        comm = np.empty((idx.size, N, K))
+        comp = np.empty((idx.size, N, K))
+        for row, s in enumerate(idx):
+            e_y = np.maximum(inputs.e_comm[s], 1e-12)
+            v_y = np.maximum(inputs.v_comm[s], 1e-18)
             # linearised what-if computation latency at p'_i
-            e_z = max(inputs.e_comp[i] * p[i] / p_new[i], 1e-12)
-            v_z = max(inputs.v_comp[i] * (p[i] / p_new[i]) ** 2, 1e-18)
-            comp = GammaParams.from_mean_var(e_z, v_z)
-            workers.append(WorkerLatencyModel(comm=comm, comp_per_unit=comp))
-        cluster = ClusterLatencyModel(workers=workers, seed=self.seed)
-        sim = EventDrivenSimulator(cluster, loads=np.ones(len(p_new)))
-        u = sim.estimate_participation(
-            inputs.w, num_iterations=self.sim_iterations, margin=inputs.margin
+            e_z = np.maximum(inputs.e_comp[s] * p[s] / p_new[s], 1e-12)
+            v_z = np.maximum(inputs.v_comp[s] * (p[s] / p_new[s]) ** 2, 1e-18)
+            rng = np.random.default_rng(self.seed)
+            comm[row] = rng.gamma(
+                (e_y * e_y / v_y)[:, None], (v_y / e_y)[:, None], size=(N, K)
+            )
+            comp[row] = rng.gamma(
+                (e_z * e_z / v_z)[:, None], (v_z / e_z)[:, None], size=(N, K)
+            )
+        empty = np.zeros((idx.size, N, 0))
+        traces = FleetTraces(
+            comm=comm,
+            comp_unit=comp,
+            slowdown=np.ones(N),
+            burst_start=empty,
+            burst_end=empty.copy(),
+            burst_factor=empty.copy(),
+            seed=self.seed,
         )
-        return float(
-            np.sum(u * inputs.samples_per_worker / (p_new * n))
-        )
+        res = replay_batch(traces, inputs.w, K, margin=inputs.margin)
+        u = res.participation  # [S_active, N]
+        n_i = inputs.samples_per_worker[idx]
+        n = n_i.sum(axis=1)
+        out[idx] = np.sum(u * n_i / (p_new[idx] * n[:, None]), axis=1)
+        return out
 
-    # -- Algorithm 1 -------------------------------------------------------
-    def optimize(self, p: Sequence[int], inputs: OptimizerInputs) -> np.ndarray:
+    def estimate_h(
+        self, inputs: OptimizerInputs, p: Sequence[int], p_new: Sequence[int]
+    ) -> float:
+        """Scalar convenience: h(p') for one scenario's inputs."""
+        b = inputs.as_batch()
+        p2 = np.asarray(p, np.float64)[None, :]
+        p2n = np.asarray(p_new, np.float64)[None, :]
+        return float(self._estimate_h_batch(b, p2, p2n)[0])
+
+    # -- Algorithm 1 (batched) ---------------------------------------------
+    def optimize_batch(
+        self,
+        p: np.ndarray,
+        inputs: OptimizerInputs,
+        h_min: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Run Algorithm 1 for S scenarios at once.
+
+        ``p`` is ``[S, N]`` int, ``inputs`` holds ``[S, N]`` arrays, and
+        ``h_min`` is the per-scenario contribution floor carried across
+        calls (NaN = not yet established; it is then set to h(p_0)).
+        Returns ``(p_new [S, N] int64, h_min [S], last_h [S])`` where
+        ``last_h`` is h at the returned vector.
+        """
         p = np.asarray(p, dtype=np.int64)
-        if self.h_min is None:
+        S, N = p.shape
+        rows = np.arange(S)
+        n_j = inputs.samples_per_worker
+        if h_min is None:
+            h_min = np.full(S, np.nan)
+        h_min = np.asarray(h_min, dtype=np.float64).copy()
+        unset = np.isnan(h_min)
+        p_f = p.astype(np.float64)
+        if unset.any():
             # h_min = h(p_0): the contribution of the baseline partitioning
-            self.h_min = self._estimate_h(inputs, p, p)
-        p_new = p.astype(np.float64).copy()
+            h0 = self._estimate_h_batch(inputs, p_f, p_f, active=unset)
+            h_min[unset] = h0[unset]
+        p_new = p_f.copy()
 
         # --- equalize total latency against the slowest worker ---
-        e_x = self._e_total(inputs, p, p_new)
-        slowest = int(np.argmax(e_x))
-        target = inputs.e_comm[slowest] + inputs.e_comp[slowest] * p[slowest] / p_new[slowest]
-        for j in range(len(p_new)):
-            denom = target - inputs.e_comm[j]
-            if denom <= 0:
-                p_new[j] = float(inputs.samples_per_worker[j])  # comm-bound: minimal work
-                continue
-            p_new[j] = max(np.floor(inputs.e_comp[j] * p[j] / denom), 1.0)
+        e_x = self._e_total(inputs, p_f, p_new)
+        slowest = np.argmax(e_x, axis=1)
+        target = (
+            inputs.e_comm[rows, slowest]
+            + inputs.e_comp[rows, slowest] * p_f[rows, slowest] / p_new[rows, slowest]
+        )
+        denom = target[:, None] - inputs.e_comm
+        safe = np.where(denom > 0, denom, 1.0)
+        balanced = np.maximum(np.floor(inputs.e_comp * p_f / safe), 1.0)
+        # comm-bound workers (denom <= 0) get minimal work: one sample/task
+        p_new = np.where(denom <= 0, n_j, balanced)
+        # a worker cannot be split finer than its own sample count — without
+        # this cap the equalization could emit p'_j > n_j for very slow
+        # fleets (only the comm-bound branch used to respect the bound)
+        p_new = np.clip(p_new, 1.0, n_j)
 
         # --- restore contribution: give the fastest workers more work ---
+        h = self._estimate_h_batch(inputs, p_f, p_new)
+        active = h < h_min * (1.0 - self.h_tolerance)
         rounds = 0
-        h = self._estimate_h(inputs, p, p_new)
-        while h < self.h_min * (1.0 - self.h_tolerance) and rounds < self.max_rounds:
-            e_x = self._e_total(inputs, p, p_new)
-            fastest = int(np.argmin(e_x))
-            reduced = np.floor(0.99 * p_new[fastest])
-            if reduced < 1.0 or reduced == p_new[fastest]:
-                # cannot increase this worker's load further; try next fastest
-                order = np.argsort(e_x)
-                moved = False
-                for idx in order[1:]:
-                    r2 = np.floor(0.99 * p_new[idx])
-                    if r2 >= 1.0 and r2 != p_new[idx]:
-                        p_new[idx] = r2
-                        moved = True
-                        break
-                if not moved:
-                    break
-            else:
-                p_new[fastest] = reduced
-            h = self._estimate_h(inputs, p, p_new)
+        while active.any() and rounds < self.max_rounds:
+            e_x = self._e_total(inputs, p_f, p_new)
+            reduced = np.floor(0.99 * p_new)
+            valid = (reduced >= 1.0) & (reduced != p_new)
+            # the fastest worker whose load can still be increased (i.e.
+            # whose p can be reduced); scenarios with no such worker stop
+            order = np.argsort(e_x, axis=1)
+            valid_ord = np.take_along_axis(valid, order, axis=1)
+            movable = valid_ord.any(axis=1)
+            pick = order[rows, np.argmax(valid_ord, axis=1)]
+            active = active & movable
+            if not active.any():
+                break
+            p_new[active, pick[active]] = reduced[active, pick[active]]
+            h_step = self._estimate_h_batch(inputs, p_f, p_new, active=active)
+            h[active] = h_step[active]
             rounds += 1
+            active = active & (h < h_min * (1.0 - self.h_tolerance))
 
         # --- spend slack: reduce the slowest workers' load while h holds ---
+        active = h >= 0.99 * h_min
         rounds = 0
-        while h >= 0.99 * self.h_min and rounds < self.max_rounds:
-            e_x = self._e_total(inputs, p, p_new)
-            slowest = int(np.argmax(e_x))
-            increased = np.ceil(1.01 * p_new[slowest])
-            if increased > inputs.samples_per_worker[slowest] or increased == p_new[slowest]:
-                increased = p_new[slowest] + 1
-                if increased > inputs.samples_per_worker[slowest]:
-                    break
-            p_prev = p_new[slowest]
-            p_new[slowest] = increased
-            h = self._estimate_h(inputs, p, p_new)
-            rounds += 1
-            if h < 0.99 * self.h_min:
-                p_new[slowest] = p_prev  # back out the violating step
+        while active.any() and rounds < self.max_rounds:
+            e_x = self._e_total(inputs, p_f, p_new)
+            slowest = np.argmax(e_x, axis=1)
+            cur = p_new[rows, slowest]
+            cap = n_j[rows, slowest]
+            increased = np.ceil(1.01 * cur)
+            fallback = (increased > cap) | (increased == cur)
+            increased = np.where(fallback, cur + 1.0, increased)
+            active = active & ~(increased > cap)  # cannot increase: stop
+            if not active.any():
                 break
+            prev_p = cur
+            prev_h = h.copy()
+            p_new[active, slowest[active]] = increased[active]
+            h_step = self._estimate_h_batch(inputs, p_f, p_new, active=active)
+            h[active] = h_step[active]
+            rounds += 1
+            violating = active & (h < 0.99 * h_min)
+            if violating.any():
+                # back out the violating step — and restore the pre-step h
+                # with it, so the reported h describes the returned p', not
+                # the rejected candidate
+                p_new[violating, slowest[violating]] = prev_p[violating]
+                h[violating] = prev_h[violating]
+            active = active & ~violating
 
-        return np.maximum(p_new, 1.0).astype(np.int64)
+        p_out = np.maximum(p_new, 1.0).astype(np.int64)
+        return p_out, h_min, h
+
+    def optimize(self, p: Sequence[int], inputs: OptimizerInputs) -> np.ndarray:
+        """Scalar entry point: Algorithm 1 for one scenario (S = 1 batch)."""
+        hm = None if self.h_min is None else np.array([self.h_min])
+        p_new, h_min, last_h = self.optimize_batch(
+            np.asarray(p, dtype=np.int64)[None, :], inputs.as_batch(), hm
+        )
+        self.h_min = float(h_min[0])
+        self.last_h = float(last_h[0])
+        return p_new[0]
+
+    # -- publication gate (paper §6.3) -------------------------------------
+    def should_publish_batch(
+        self, p: np.ndarray, p_new: np.ndarray, inputs: OptimizerInputs
+    ) -> np.ndarray:
+        """[S] bool: Eq.-(7) objective improves by > improvement_threshold."""
+        p = np.asarray(p, dtype=np.float64)
+        p_new_arr = np.asarray(p_new, dtype=np.float64)
+        cur = self.objective(self._e_total(inputs, p, p))
+        new = self.objective(self._e_total(inputs, p, p_new_arr))
+        return new < cur * (1.0 - self.improvement_threshold)
 
     def should_publish(
         self, p: Sequence[int], p_new: Sequence[int], inputs: OptimizerInputs
     ) -> bool:
         """Paper §6.3: only distribute p' if the Eq.-(7) objective improves by
         more than ``improvement_threshold`` (cache evictions are costly)."""
-        p = np.asarray(p, dtype=np.float64)
-        p_new_arr = np.asarray(p_new, dtype=np.float64)
-        cur = self.objective(self._e_total(inputs, p, p))
-        new = self.objective(self._e_total(inputs, p, p_new_arr))
-        return new < cur * (1.0 - self.improvement_threshold)
+        return bool(
+            self.should_publish_batch(
+                np.asarray(p, np.float64)[None, :],
+                np.asarray(p_new, np.float64)[None, :],
+                inputs.as_batch(),
+            )[0]
+        )

@@ -1,0 +1,102 @@
+"""Tests for the benchmark-regression gate (benchmarks/bench_regression.py)."""
+
+import copy
+
+from benchmarks.bench_regression import compare_sweep, method_ranking
+
+
+def make_payload():
+    return {
+        "grid": {"regimes": ["calm", "heavy_bursts"]},
+        "cells": {
+            "calm/dsag/w8": {"mean_iter_time": 1.0},
+            "calm/dsag/w10": {"mean_iter_time": 1.4},  # worse w cell, ignored
+            "calm/sag/w10": {"mean_iter_time": 2.0},
+            "calm/coded/w9": {"mean_iter_time": 3.0},
+            "heavy_bursts/dsag/w8": {"mean_iter_time": 2.0},
+            "heavy_bursts/sag/w10": {"mean_iter_time": 6.0},
+            "heavy_bursts/coded/w9": {"mean_iter_time": 9.0},
+        },
+        "ordering": {
+            "calm": {
+                "sag_over_dsag": 2.0,
+                "coded_over_dsag": 3.0,
+                "dsag_beats_sag_and_coded": 1.0,
+            },
+            "heavy_bursts": {
+                "sag_over_dsag": 3.0,
+                "coded_over_dsag": 4.5,
+                "dsag_beats_sag_and_coded": 1.0,
+            },
+        },
+    }
+
+
+def test_identical_payloads_pass():
+    committed = make_payload()
+    failures, warnings = compare_sweep(committed, copy.deepcopy(committed))
+    assert failures == [] and warnings == []
+
+
+def test_ranking_uses_best_w_cell():
+    assert method_ranking(make_payload()["cells"], "calm") == [
+        "dsag", "sag", "coded",
+    ]
+
+
+def test_ordering_flip_fails():
+    fresh = make_payload()
+    # sag overtakes dsag in the burst regime
+    fresh["cells"]["heavy_bursts/sag/w10"]["mean_iter_time"] = 1.0
+    fresh["ordering"]["heavy_bursts"]["sag_over_dsag"] = 0.5
+    fresh["ordering"]["heavy_bursts"]["dsag_beats_sag_and_coded"] = 0.0
+    failures, _ = compare_sweep(make_payload(), fresh)
+    assert any("ordering flipped" in f for f in failures)
+    assert any("dsag_beats_sag_and_coded" in f for f in failures)
+
+
+def test_speedup_drift_only_warns():
+    fresh = make_payload()
+    fresh["ordering"]["heavy_bursts"]["sag_over_dsag"] = 3.6  # +20% drift
+    failures, warnings = compare_sweep(make_payload(), fresh)
+    assert failures == []
+    assert any("sag_over_dsag" in w and "20%" in w for w in warnings)
+
+
+def test_missing_regime_fails():
+    fresh = make_payload()
+    fresh["grid"]["regimes"] = ["calm"]
+    failures, _ = compare_sweep(make_payload(), fresh)
+    assert any("missing" in f for f in failures)
+
+
+def test_rerun_refuses_unknown_regime():
+    import pytest
+
+    from benchmarks.bench_regression import GridMismatch, rerun_grid
+
+    committed = make_payload()
+    committed["grid"].update(
+        {"n_workers": 8, "n_seeds": 2, "num_iterations": 5,
+         "regimes": ["made_up_regime"]}
+    )
+    with pytest.raises(GridMismatch, match="not a known preset"):
+        rerun_grid(committed)
+
+
+def test_rerun_refuses_unreconstructable_cells():
+    import pytest
+
+    from benchmarks.bench_regression import GridMismatch, rerun_grid
+
+    # a real (tiny) grid whose committed cells claim a w the rerun's
+    # reconstruction cannot produce -> explicit mismatch, not a silent diff
+    committed = {
+        "grid": {"n_workers": 8, "n_seeds": 2, "num_iterations": 5,
+                 "regimes": ["calm"], "seed": 0},
+        "cells": {"calm/dsag/w6": {"mean_iter_time": 1.0},
+                  "calm/extra_method/w6": {"mean_iter_time": 1.0}},
+        "ordering": {"calm": {}},
+    }
+    with pytest.raises(GridMismatch, match="different grid cells"):
+        rerun_grid(committed)

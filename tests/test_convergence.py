@@ -1,0 +1,384 @@
+"""Tests for the batched convergence engine (repro.experiments.convergence).
+
+The load-bearing property mirrors PR 1's sweep guarantee, one level up the
+stack: the batched engine running the *full training loop* (gradient cache,
+coverage scaling, §5.1 margin, stale integration, §6 load balancing) over a
+scenario batch must reproduce the scalar ``TrainingSimulator`` replaying
+each scenario through ``TraceLatencySource`` — bit for bit, not just
+statistically.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import (
+    LatencySource,
+    MethodConfig,
+    TraceLatencySource,
+    TrainingSimulator,
+)
+from repro.core.gradient_cache import BatchedGradientCache, GradientCache
+from repro.core.problems import (
+    LogisticRegressionProblem,
+    PCAProblem,
+    make_genomics_like_matrix,
+    make_higgs_like,
+)
+from repro.experiments.convergence import (
+    default_convergence_methods,
+    run_convergence_batch,
+    run_convergence_sweep,
+    scalar_convergence_run,
+    scalar_convergence_seconds,
+)
+from repro.experiments.grid import HEAVY_BURSTS
+from repro.experiments.results import convergence_ordering, write_bench_convergence
+from repro.latency.model import (
+    make_heterogeneous_cluster,
+    make_paper_artificial_cluster,
+    sample_fleet,
+)
+
+
+@pytest.fixture(scope="module")
+def logreg_small():
+    X, y = make_higgs_like(240, seed=0)
+    return LogisticRegressionProblem(X=X, y=y)
+
+
+@pytest.fixture(scope="module")
+def pca_small():
+    return PCAProblem(X=make_genomics_like_matrix(240, 48, seed=0), k=3)
+
+
+def small_fleet(n_workers=6, n_scenarios=3, horizon=25, seed=3):
+    cluster = make_heterogeneous_cluster(
+        n_workers, seed=seed, burst_rate=0.0, comp_range=(1.1e-3, 2.5e-3)
+    )
+    traces = sample_fleet(
+        cluster,
+        n_scenarios,
+        horizon,
+        burst_rate=3.0,
+        burst_factor_mean=3.0,
+        burst_duration_mean=5e-3,
+        seed=seed + 8,
+    )
+    return cluster, traces
+
+
+def assert_bitexact(problem, cluster, traces, cfg, T, *, eval_every=2, seed=0):
+    res = run_convergence_batch(
+        problem, traces, cfg, T, eval_every=eval_every, seed=seed
+    )
+    for s in range(traces.num_scenarios):
+        sim = TrainingSimulator(
+            problem,
+            cluster,
+            cfg,
+            eval_every=eval_every,
+            seed=seed,
+            latency_source=TraceLatencySource(traces, s),
+        )
+        h = sim.run(T)
+        np.testing.assert_array_equal(h.times, res.times[s])
+        np.testing.assert_array_equal(h.suboptimality, res.suboptimality[s])
+        np.testing.assert_array_equal(h.fresh_counts, res.fresh_counts[s])
+        np.testing.assert_array_equal(
+            h.per_worker_latency, res.per_worker_latency[s]
+        )
+        assert list(h.repartition_events) == list(res.repartition_events[s])
+        assert h.evictions == res.evictions[s]
+        assert h.rejected_stale == res.rejected_stale[s]
+    return res
+
+
+class TestScalarEquivalence:
+    @pytest.mark.parametrize(
+        "name,w",
+        [("dsag", 2), ("sag", 6), ("sgd", 3), ("gd", 0), ("coded", 0)],
+    )
+    def test_logreg_methods_bitexact(self, logreg_small, name, w):
+        cluster, traces = small_fleet()
+        cfg = MethodConfig(name=name, w=w, eta=0.25, subpartitions=3)
+        assert_bitexact(logreg_small, cluster, traces, cfg, 25)
+
+    @pytest.mark.parametrize("name,w", [("dsag", 2), ("sag", 6)])
+    def test_pca_methods_bitexact(self, pca_small, name, w):
+        cluster, traces = small_fleet()
+        cfg = MethodConfig(name=name, w=w, eta=0.9, subpartitions=3)
+        assert_bitexact(pca_small, cluster, traces, cfg, 25)
+
+    def test_margin_case_collects_post_w_stragglers(self, logreg_small):
+        # a wide §5.1 margin makes the post-w collection window visible:
+        # some iterations must count more than w fresh results, and the
+        # batched path must still match the scalar loop exactly
+        cluster, traces = small_fleet(horizon=30)
+        cfg = MethodConfig(name="dsag", w=2, eta=0.25, subpartitions=3, margin=0.25)
+        res = assert_bitexact(logreg_small, cluster, traces, cfg, 30)
+        assert (res.fresh_counts > 2).any()
+
+    def test_load_balancing_case_bitexact(self):
+        """The tentpole gate: §6 in the loop — profiler moments, Algorithm 1,
+        publication schedule, and Algorithm-2 repartitions all batched."""
+        X, y = make_higgs_like(480, seed=0)
+        prob = LogisticRegressionProblem(X=X, y=y)
+        N = 6
+        c_task = prob.compute_cost(1, max(prob.num_samples // (N * 4), 1))
+        cluster = make_paper_artificial_cluster(num_workers=N, load_unit=c_task, seed=1)
+        traces = sample_fleet(cluster, 3, 40, seed=11)
+        cfg = MethodConfig(
+            name="dsag", w=3, eta=0.25, subpartitions=4,
+            load_balance=True, lb_startup_delay=0.005, lb_interval=0.01,
+        )
+        res = assert_bitexact(prob, cluster, traces, cfg, 40)
+        # the balancer must actually publish (otherwise this gate is vacuous)
+        assert any(len(ev) > 0 for ev in res.repartition_events)
+
+    def test_horizon_too_short_raises(self, logreg_small):
+        cluster, traces = small_fleet(horizon=5)
+        cfg = MethodConfig(name="dsag", w=2, subpartitions=3)
+        with pytest.raises(ValueError, match="draws/worker"):
+            run_convergence_batch(logreg_small, traces, cfg, 6)
+
+
+class TestBatchedCacheEquivalence:
+    def _random_inserts(self, rng, n, num_events):
+        events = []
+        for _ in range(num_events):
+            start = int(rng.integers(1, n))
+            stop = int(min(n, start + rng.integers(0, 8)))
+            it = int(rng.integers(0, 12))
+            events.append((start, stop, it, rng.normal(size=(4,)).astype(np.float32)))
+        return events
+
+    def test_matches_scalar_cache_under_random_overlapping_inserts(self):
+        rng = np.random.default_rng(0)
+        n, S = 40, 3
+        batched = BatchedGradientCache(S, n, np.zeros(4))
+        scalars = [GradientCache(n, np.zeros(4)) for _ in range(S)]
+        for s in range(S):
+            for start, stop, it, val in self._random_inserts(rng, n, 120):
+                a = batched.insert(s, start, stop, it, val)
+                b = scalars[s].insert(start, stop, it, val)
+                assert a == b
+        batched.check_invariants()
+        for s in range(S):
+            scalars[s].check_invariants()
+            np.testing.assert_array_equal(batched.sums[s], scalars[s].sum)
+            assert batched.coverage[s] == scalars[s].coverage
+            assert batched.evictions[s] == scalars[s].evictions
+            assert batched.rejected_stale[s] == scalars[s].rejected_stale
+
+    def test_scenarios_are_independent(self):
+        cache = BatchedGradientCache(2, 10, np.zeros(2))
+        cache.insert(0, 1, 5, 0, np.ones(2))
+        assert cache.coverage[0] == 0.5 and cache.coverage[1] == 0.0
+        np.testing.assert_array_equal(cache.sums[1], np.zeros(2))
+
+    def test_interval_validation(self):
+        cache = BatchedGradientCache(1, 10, np.zeros(2))
+        with pytest.raises(ValueError, match="outside"):
+            cache.insert(0, 0, 5, 0, np.ones(2))
+
+
+class TestConvergenceSweep:
+    def test_speedup_and_ordering_on_small_grid(self, tmp_path):
+        """Mini version of the BENCH_convergence acceptance grid."""
+        X, y = make_higgs_like(4096, seed=0)
+        prob = LogisticRegressionProblem(X=X, y=y)
+        N, sp = 40, 10
+        c_task = prob.compute_cost(1, max(prob.num_samples // (N * sp), 1))
+        cluster = make_heterogeneous_cluster(
+            N, seed=0, burst_rate=0.0, load_unit=c_task
+        )
+        methods = default_convergence_methods(N, w=32, eta=0.25, subpartitions=sp)
+        out = run_convergence_sweep(
+            prob, cluster, methods,
+            n_scenarios=6, num_iterations=40, eval_every=4,
+            regime=HEAVY_BURSTS, seed=0,
+        )
+        # ordering: DSAG must reach a mid-range gap before SAG and coded
+        gap = 0.2
+        o = convergence_ordering(out, gap)
+        assert o["sag_over_dsag"] > 1.0, o
+        assert o["coded_over_dsag"] > 1.0, o
+        assert o["dsag_fastest_to_gap"] == 1.0
+        # speed: batched engine vs the scalar loop on a subset, extrapolated.
+        # The acceptance benchmark records >=10x on the full 10x100 grid; use
+        # a low bar here so shared-runner scheduler noise cannot flake it.
+        t0 = time.perf_counter()
+        run_convergence_batch(
+            prob, out.traces, methods["dsag"], 40, eval_every=4, seed=0
+        )
+        batched_dsag = time.perf_counter() - t0
+        measured, extrapolated = scalar_convergence_seconds(
+            out, methods=("dsag",), max_scenarios=2
+        )
+        assert extrapolated > 3.0 * batched_dsag, (extrapolated, batched_dsag)
+        # artifact round-trips; the scalar timing covered only dsag, so the
+        # writer must record the subset and omit the apples-to-oranges
+        # top-level speedup ratio
+        path = tmp_path / "BENCH_convergence.json"
+        payload = write_bench_convergence(
+            out, str(path), gap=gap, scalar_seconds=extrapolated,
+            scalar_seconds_measured=measured, scalar_methods=["dsag"],
+        )
+        import json
+
+        on_disk = json.loads(path.read_text())
+        assert on_disk == payload
+        assert on_disk["grid"]["n_workers"] == N
+        assert on_disk["ordering"]["dsag_fastest_to_gap"] == 1.0
+        assert on_disk["scalar_methods"] == ["dsag"]
+        assert "speedup_vs_scalar" not in on_disk
+
+    def test_history_view_matches_scalar_run(self, logreg_small):
+        cluster, traces = small_fleet()
+        del traces  # the sweep draws its own traces
+        methods = {"dsag": MethodConfig(name="dsag", w=2, eta=0.25, subpartitions=3)}
+        out = run_convergence_sweep(
+            logreg_small, cluster, methods,
+            n_scenarios=2, num_iterations=15, eval_every=3, seed=0,
+        )
+        h = scalar_convergence_run(out, "dsag", 1)
+        view = out.results["dsag"].history(1)
+        np.testing.assert_array_equal(h.times, view.times)
+        np.testing.assert_array_equal(h.suboptimality, view.suboptimality)
+
+    def test_time_to_gap_vectorized(self):
+        from repro.experiments.convergence import ConvergenceBatchResult
+
+        res = ConvergenceBatchResult(
+            times=np.array([[1.0, 2.0, 3.0], [1.0, 2.0, 3.0]]),
+            suboptimality=np.array([[0.5, 0.05, np.nan], [0.5, 0.4, 0.3]]),
+            fresh_counts=np.zeros((2, 3), np.int64),
+            per_worker_latency=np.zeros((2, 3, 1)),
+            repartition_events=[[], []],
+            evictions=np.zeros(2, np.int64),
+            rejected_stale=np.zeros(2, np.int64),
+        )
+        ttg = res.time_to_gap(0.1)
+        assert ttg[0] == 2.0 and np.isinf(ttg[1])
+
+
+def _fake_result(ttgs):
+    """A ConvergenceBatchResult whose time_to_gap(0.1) equals ``ttgs``."""
+    from repro.experiments.convergence import ConvergenceBatchResult
+
+    S = len(ttgs)
+    times = np.tile(np.array([1.0, 2.0]), (S, 1))
+    sub = np.full((S, 2), 0.5)
+    for s, t in enumerate(ttgs):
+        if np.isfinite(t):
+            times[s] = [t, t + 1.0]
+            sub[s, 0] = 0.05
+    return ConvergenceBatchResult(
+        times=times,
+        suboptimality=sub,
+        fresh_counts=np.zeros((S, 2), np.int64),
+        per_worker_latency=np.zeros((S, 2, 1)),
+        repartition_events=[[] for _ in range(S)],
+        evictions=np.zeros(S, np.int64),
+        rejected_stale=np.zeros(S, np.int64),
+    )
+
+
+class _FakeOutcome:
+    def __init__(self, results):
+        self.results = results
+
+
+class TestConvergenceOrdering:
+    def test_single_missed_scenario_does_not_flip_the_verdict(self):
+        # 4 of 5 dsag scenarios reach the gap: the median must stay finite
+        # and the verdict must hold (one straggler-heavy draw cannot flip it)
+        out = _FakeOutcome(
+            {
+                "dsag": _fake_result([1.0, 1.1, 1.2, 1.3, np.inf]),
+                "sag": _fake_result([3.0] * 5),
+                "coded": _fake_result([4.0] * 5),
+            }
+        )
+        o = convergence_ordering(out, 0.1)
+        assert np.isfinite(o["median_time_to_gap_dsag"])
+        assert o["reached_gap_frac_dsag"] == pytest.approx(0.8)
+        assert o["dsag_fastest_to_gap"] == 1.0
+        assert o["ordering_dsag_sag_coded"] == 1.0
+
+    def test_verdict_omitted_when_baselines_missing(self):
+        # no sag/coded columns: the paper-ordering verdict must not
+        # vacuously read "DSAG beats SAG and coded"
+        out = _FakeOutcome({"dsag": _fake_result([1.0, 1.1])})
+        o = convergence_ordering(out, 0.1)
+        assert "dsag_fastest_to_gap" not in o
+        assert "ordering_dsag_sag_coded" not in o
+
+    def test_artifact_is_strict_json_even_with_unreached_gaps(self, tmp_path):
+        # a method that never reaches the gap yields inf medians; the
+        # artifact must still be strict JSON (null, not Infinity)
+        out = _FakeOutcome(
+            {
+                "dsag": _fake_result([1.0, 1.1]),
+                "sag": _fake_result([np.inf, np.inf]),
+                "coded": _fake_result([4.0, 4.0]),
+            }
+        )
+        out.methods = {
+            name: MethodConfig(name=name if name != "coded" else "coded", w=2)
+            for name in out.results
+        }
+        out.num_iterations = 2
+        out.engine_seconds = 1.0
+
+        class _P:
+            num_samples = 8
+
+        out.problem = _P()
+
+        class _T:
+            num_workers = 2
+            num_scenarios = 2
+
+        out.traces = _T()
+        path = tmp_path / "bench.json"
+        payload = write_bench_convergence(out, str(path), gap=0.1)
+        import json
+
+        on_disk = json.loads(path.read_text())  # raises on Infinity tokens
+        assert "Infinity" not in path.read_text()
+        assert on_disk == payload
+        assert on_disk["methods"]["sag"]["median_time_to_gap"] is None
+
+
+class _FixedLatency(LatencySource):
+    """Deterministic per-worker latency for semantics tests."""
+
+    def __init__(self, comps):
+        self.comps = comps
+
+    def task_latency(self, worker, cost, now):
+        return self.comps[worker], 0.0
+
+
+class TestLatencyAttribution:
+    def test_stale_completion_lands_in_its_own_iteration_row(self, logreg_small):
+        """A stale result must be attributed to the iteration it was
+        assigned in (RunHistory semantics), not the iteration the
+        coordinator was collecting when it arrived."""
+        cfg = MethodConfig(name="dsag", w=1, eta=0.25, subpartitions=2, margin=0.0)
+        cluster = make_heterogeneous_cluster(2, seed=0, burst_rate=0.0)
+        sim = TrainingSimulator(
+            logreg_small, cluster, cfg, seed=0,
+            latency_source=_FixedLatency([0.1, 0.25]),
+        )
+        h = sim.run(3)
+        # worker 1's iteration-0 task (latency 0.25) completes during
+        # iteration 2 (which starts at 0.2): row 0 must hold it, row 2 must
+        # stay empty for worker 1 (its iteration-2 task returns after t=3)
+        assert h.per_worker_latency[0, 1] == pytest.approx(0.25)
+        assert np.isnan(h.per_worker_latency[2, 1])
+        # fresh completions stay on their own rows
+        assert h.per_worker_latency[0, 0] == pytest.approx(0.1)

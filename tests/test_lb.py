@@ -148,3 +148,78 @@ def test_should_publish_requires_improvement():
     p = np.full(4, 10, dtype=np.int64)
     # identical p -> no improvement -> do not publish
     assert not opt.should_publish(p, p, inputs)
+
+
+def test_equalization_caps_subpartitions_at_sample_count():
+    """Regression: a worker whose comm latency sits just below the slowest
+    worker's total gets a near-zero equalization denominator, and the old
+    equalize phase emitted p'_j > n_j — more subpartitions than the worker
+    has samples.  p' must stay within [1, n_j] for every worker."""
+    n = 6
+    e_comp = np.full(n, 1e-4)
+    e_comm = np.full(n, 1e-4)
+    # worker 0: very slow compute -> the equalization target
+    e_comp[0] = 10e-3
+    # worker 1: comm-heavy, total just below worker 0's -> tiny denominator
+    e_comm[1] = 9.9e-3
+    e_comp[1] = 1e-4
+    inputs = OptimizerInputs(
+        e_comm=e_comm,
+        v_comm=(0.1 * e_comm) ** 2,
+        e_comp=e_comp,
+        v_comp=(0.1 * e_comp) ** 2,
+        samples_per_worker=np.full(n, 4.0),  # tiny local datasets
+        w=3,
+    )
+    opt = LoadBalanceOptimizer(seed=0, sim_iterations=40)
+    p_new = opt.optimize(np.full(n, 10, dtype=np.int64), inputs)
+    assert (p_new >= 1).all()
+    assert (p_new <= inputs.samples_per_worker).all(), p_new
+
+
+def test_slack_phase_reports_h_of_the_returned_vector():
+    """Regression: when the slack phase backs out a violating step it must
+    also restore the pre-step h, so the h it reports corresponds to the p'
+    it returns.  The estimator is deterministic given (inputs, p, p'), so
+    re-estimating at the returned vector must reproduce last_h exactly."""
+    opt = LoadBalanceOptimizer(seed=0, sim_iterations=40)
+    p0 = np.full(8, 10, dtype=np.int64)
+    inputs = _inputs(np.linspace(1e-3, 3e-3, 8))
+    p_new = opt.optimize(p0, inputs)
+    assert opt.h_min is not None and opt.last_h is not None
+    h_at_returned = opt.estimate_h(inputs, p0, p_new)
+    assert opt.last_h == h_at_returned
+
+
+def test_batched_optimize_matches_scalar_per_scenario():
+    """optimize_batch must reproduce per-scenario scalar optimize calls —
+    the convergence engine's LB equivalence rests on it."""
+    rng = np.random.default_rng(1)
+    S, N = 3, 6
+    e_comp = rng.uniform(1e-3, 3e-3, size=(S, N))
+    e_comm = rng.uniform(1e-4, 3e-4, size=(S, N))
+    inputs2d = OptimizerInputs(
+        e_comm=e_comm,
+        v_comm=(0.1 * e_comm) ** 2,
+        e_comp=e_comp,
+        v_comp=(0.1 * e_comp) ** 2,
+        samples_per_worker=np.full((S, N), 1000.0),
+        w=4,
+    )
+    p0 = np.full((S, N), 10, dtype=np.int64)
+    batch_opt = LoadBalanceOptimizer(seed=0, sim_iterations=40)
+    p_batch, h_min_batch, last_h_batch = batch_opt.optimize_batch(p0, inputs2d)
+    for s in range(S):
+        scal = LoadBalanceOptimizer(seed=0, sim_iterations=40)
+        inputs1d = OptimizerInputs(
+            e_comm=e_comm[s],
+            v_comm=(0.1 * e_comm[s]) ** 2,
+            e_comp=e_comp[s],
+            v_comp=(0.1 * e_comp[s]) ** 2,
+            samples_per_worker=np.full(N, 1000.0),
+            w=4,
+        )
+        p_scalar = scal.optimize(p0[s], inputs1d)
+        np.testing.assert_array_equal(p_scalar, p_batch[s])
+        assert scal.h_min == h_min_batch[s]
+        assert scal.last_h == last_h_batch[s]
