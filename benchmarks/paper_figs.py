@@ -262,11 +262,14 @@ def fig9_scenario_sweep() -> None:
 def fig10_12_convergence_sweep() -> None:
     """Figs. 10-12 (time-to-suboptimality) as a batched *convergence* sweep:
     DSAG/SAG/SGD/coded through the full training loop on a 100-worker,
-    10-scenario heavy-burst fleet via the vectorized engine, with the scalar
-    TrainingSimulator timed on a subset for the speedup claim; emits the
-    BENCH_convergence.json artifact."""
+    10-scenario heavy-burst fleet via the fused-scan engine, with the scalar
+    TrainingSimulator timed on a subset for the speedup claim, plus the
+    paper-scale PCA column (n=50k genomics-like matrix, the paper's actual
+    workload size); emits the BENCH_convergence.json artifact."""
     from repro.experiments import (
+        convergence_payload,
         default_convergence_methods,
+        paper_scale_pca_sweep,
         run_convergence_sweep,
         scalar_convergence_seconds,
         write_bench_convergence,
@@ -299,6 +302,12 @@ def fig10_12_convergence_sweep() -> None:
             prob, out.traces, methods[name], 60, eval_every=5, seed=0
         )
     batched_pair = _time.perf_counter() - t0
+
+    # paper-scale PCA column: the n=50k genomics-like matrix through the
+    # same fused engine (calibrated eta/gap — see PAPER_SCALE_PCA)
+    pca_out, pca_gap = paper_scale_pca_sweep(seed=0)
+    pca_payload = convergence_payload(pca_out, pca_gap)
+
     gap = 0.2
     payload = write_bench_convergence(
         out, "BENCH_convergence.json", gap=gap,
@@ -315,9 +324,11 @@ def fig10_12_convergence_sweep() -> None:
                 "scalar_seconds_extrapolated": extrapolated,
                 "speedup": extrapolated / max(batched_pair, 1e-12),
             },
+            "pca_paper_scale": pca_payload,
         },
     )
     o = payload["ordering"]
+    po = pca_payload["ordering"]
     record(
         "fig10_12_convergence_sweep",
         out.engine_seconds * 1e6,
@@ -325,6 +336,14 @@ def fig10_12_convergence_sweep() -> None:
         f"sag_over_dsag={o['sag_over_dsag']:.2f};"
         f"coded_over_dsag={o['coded_over_dsag']:.2f};"
         f"ordering_dsag_sag_coded={bool(o['ordering_dsag_sag_coded'])}",
+    )
+    record(
+        "fig10_12_pca_paper_scale",
+        pca_out.engine_seconds * 1e6,
+        f"n={pca_out.problem.num_samples};gap={pca_gap:g};"
+        f"sag_over_dsag={po['sag_over_dsag']:.2f};"
+        f"coded_over_dsag={po['coded_over_dsag']:.2f};"
+        f"ordering_dsag_sag_coded={bool(po['ordering_dsag_sag_coded'])}",
     )
 
 

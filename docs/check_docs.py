@@ -1,0 +1,63 @@
+"""Docs link checker (the CI docs job).
+
+Scans ``docs/*.md`` and ``README.md`` for markdown links and inline-code
+path references and verifies that every *repo-relative* target exists.
+External (``http(s)://``) links are not fetched — CI must not depend on
+network availability — but their markdown syntax is validated.
+
+Run from anywhere inside the repo:
+
+    python docs/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+# backtick path references like `src/repro/core/problems.py` or `docs/FOO.md`
+CODE_PATH_RE = re.compile(
+    r"`([A-Za-z0-9_./-]+\.(?:py|md|json|txt|toml|yml))`"
+)
+
+
+def check_file(path: Path, repo_root: Path) -> list:
+    errors = []
+    text = path.read_text()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link -> {target}")
+    for m in CODE_PATH_RE.finditer(text):
+        target = m.group(1)
+        # only treat it as a path claim when it names a directory we ship
+        if not target.split("/")[0] in (
+            "src", "docs", "tests", "benchmarks", "examples", ".github"
+        ) and "/" in target:
+            continue
+        if "/" not in target:
+            continue
+        if not (repo_root / target).exists():
+            errors.append(f"{path}: referenced path missing -> {target}")
+    return errors
+
+
+def main() -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    files = sorted((repo_root / "docs").glob("*.md")) + [repo_root / "README.md"]
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, repo_root))
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"checked {len(files)} files: " + ("FAIL" if errors else "ok"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,13 +5,23 @@ each method's time-to-gap across scenarios.
   PYTHONPATH=src python examples/convergence_sweep.py --workers 100 \
       --scenarios 10 --iters 60 --gap 0.2 --out BENCH_convergence.json \
       --check-scalar
+  PYTHONPATH=src python examples/convergence_sweep.py --problem pca \
+      --paper-scale                     # the n=50k genomics-like matrix
 
 Runs DSAG, SAG (w = N), SGD, and the idealized coded bound through the full
 training loop (gradient cache, §5.1 margin, stale integration) on one
-shared heavy-burst trace draw — all scenarios resolved at once by the
-batched convergence engine, which is bit-exact against the scalar
+shared heavy-burst trace draw — all scenarios resolved at once by the fused
+``jax.lax.scan`` convergence engine (``--engine host`` selects the
+numpy-driven batched loop instead), which is bit-exact against the scalar
 ``TrainingSimulator`` (``--check-scalar`` verifies one scenario end to end
 and times the scalar loop for the speedup report).
+
+``--problem pca`` switches the workload to PCA of a synthetic genomics-like
+matrix (paper §2); ``--paper-scale`` applies the calibrated paper-scale
+configuration (n=50k rows, 50 workers, eta/gap per
+``repro.experiments.convergence.PAPER_SCALE_PCA``) — the committed
+``BENCH_convergence.json`` carries this run as its ``pca_paper_scale``
+column.
 """
 
 import argparse
@@ -19,10 +29,17 @@ import argparse
 import numpy as np
 
 from repro.cluster.simulator import effective_w
-from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+from repro.core.problems import (
+    LogisticRegressionProblem,
+    PCAProblem,
+    make_genomics_like_matrix,
+    make_higgs_like,
+)
 from repro.experiments import (
+    PAPER_SCALE_PCA,
     convergence_ordering,
     default_convergence_methods,
+    paper_scale_pca_sweep,
     run_convergence_sweep,
     scalar_convergence_run,
     scalar_convergence_seconds,
@@ -34,17 +51,32 @@ from repro.latency.model import make_heterogeneous_cluster
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--problem", choices=("logreg", "pca"), default="logreg")
+    ap.add_argument(
+        "--paper-scale",
+        action="store_true",
+        help="run the calibrated paper-scale PCA sweep (implies --problem pca; "
+        "n=50k rows, 50 workers, gap per PAPER_SCALE_PCA)",
+    )
     ap.add_argument("--workers", type=int, default=40)
     ap.add_argument("--scenarios", type=int, default=6)
     ap.add_argument("--iters", type=int, default=40)
     ap.add_argument("--samples", type=int, default=4096)
+    ap.add_argument("--cols", type=int, default=96,
+                    help="columns of the PCA matrix (pca only)")
     ap.add_argument("--w-frac", type=float, default=0.8)
     ap.add_argument("--subpartitions", type=int, default=10)
-    ap.add_argument("--eta", type=float, default=0.25)
-    ap.add_argument("--gap", type=float, default=0.2)
+    ap.add_argument("--eta", type=float, default=None,
+                    help="step size (default 0.25 for logreg, 0.9 for pca)")
+    ap.add_argument("--gap", type=float, default=None,
+                    help="time-to-gap threshold (default 0.2 logreg, 1e-4 pca)")
     ap.add_argument("--eval-every", type=int, default=4)
+    ap.add_argument("--engine", choices=("auto", "scan", "host"), default="auto",
+                    help="fused jax.lax.scan engine (auto/scan) or the "
+                    "numpy-driven batched host loop")
     ap.add_argument("--load-balance", action="store_true",
-                    help="run DSAG with the §6 load balancer in the loop")
+                    help="run DSAG with the §6 load balancer in the loop "
+                    "(routes DSAG to the host engine)")
     ap.add_argument("--out", default=None, help="write BENCH-style JSON here")
     ap.add_argument(
         "--check-scalar",
@@ -53,25 +85,50 @@ def main() -> None:
         "(bit-exact) and time the scalar loop (slow)",
     )
     args = ap.parse_args()
+    if args.paper_scale:
+        args.problem = "pca"
 
-    X, y = make_higgs_like(args.samples, seed=0)
-    prob = LogisticRegressionProblem(X=X, y=y)
-    N, sp = args.workers, args.subpartitions
-    c_task = prob.compute_cost(1, max(prob.num_samples // (N * sp), 1))
-    cluster = make_heterogeneous_cluster(N, seed=0, burst_rate=0.0, load_unit=c_task)
-    w = min(max(round(args.w_frac * N), 1), N)
-    methods = default_convergence_methods(
-        N, w=w, eta=args.eta, subpartitions=sp,
-        load_balance_dsag=args.load_balance,
-    )
-    out = run_convergence_sweep(
-        prob, cluster, methods,
-        n_scenarios=args.scenarios, num_iterations=args.iters,
-        eval_every=args.eval_every, regime=HEAVY_BURSTS, seed=0,
-    )
+    if args.paper_scale:
+        out, default_gap = paper_scale_pca_sweep(seed=0, engine=args.engine)
+        N = out.traces.num_workers
+        print(
+            f"paper-scale PCA: n={out.problem.num_samples} rows, {N} workers, "
+            f"{out.traces.num_scenarios} scenarios, {out.num_iterations} iters "
+            f"(PAPER_SCALE_PCA={PAPER_SCALE_PCA})"
+        )
+    else:
+        if args.problem == "pca":
+            prob = PCAProblem(
+                X=make_genomics_like_matrix(args.samples, args.cols, seed=0), k=3
+            )
+            eta = 0.9 if args.eta is None else args.eta
+            default_gap = 1e-4
+        else:
+            X, y = make_higgs_like(args.samples, seed=0)
+            prob = LogisticRegressionProblem(X=X, y=y)
+            eta = 0.25 if args.eta is None else args.eta
+            default_gap = 0.2
+        N, sp = args.workers, args.subpartitions
+        c_task = prob.compute_cost(1, max(prob.num_samples // (N * sp), 1))
+        cluster = make_heterogeneous_cluster(
+            N, seed=0, burst_rate=0.0, load_unit=c_task
+        )
+        w = min(max(round(args.w_frac * N), 1), N)
+        methods = default_convergence_methods(
+            N, w=w, eta=eta, subpartitions=sp,
+            load_balance_dsag=args.load_balance,
+        )
+        out = run_convergence_sweep(
+            prob, cluster, methods,
+            n_scenarios=args.scenarios, num_iterations=args.iters,
+            eval_every=args.eval_every, regime=HEAVY_BURSTS, seed=0,
+            engine=args.engine,
+        )
+    gap = default_gap if args.gap is None else args.gap
     print(
-        f"{len(methods)} methods x {args.scenarios} scenarios x {args.iters} "
-        f"iterations in {out.engine_seconds:.2f}s (batched engine)"
+        f"{len(out.methods)} methods x {out.traces.num_scenarios} scenarios x "
+        f"{out.num_iterations} iterations in {out.engine_seconds:.2f}s "
+        f"({args.engine} engine)"
     )
 
     scalar_s = measured = None
@@ -90,23 +147,23 @@ def main() -> None:
     print(header)
     print("-" * len(header))
     for name, res in out.results.items():
-        ttg = res.time_to_gap(args.gap)
+        ttg = res.time_to_gap(gap)
         print(
             f"{name:>6} {effective_w(out.methods[name], N):>4} "
             f"{np.median(ttg):>18.4f} "
-            f"{np.nanmean(res.suboptimality[:, -1]):>11.4f} "
+            f"{np.nanmean(res.suboptimality[:, -1]):>11.2e} "
             f"{res.times[:, -1].mean():>12.3f}"
         )
-    o = convergence_ordering(out, args.gap)
+    o = convergence_ordering(out, gap)
     print(
-        f"gap={args.gap}: sag/dsag={o['sag_over_dsag']:.2f}x "
+        f"gap={gap}: sag/dsag={o['sag_over_dsag']:.2f}x "
         f"coded/dsag={o['coded_over_dsag']:.2f}x "
         f"dsag_fastest={bool(o['dsag_fastest_to_gap'])}"
     )
 
     if args.out:
         write_bench_convergence(
-            out, args.out, gap=args.gap,
+            out, args.out, gap=gap,
             scalar_seconds=scalar_s, scalar_seconds_measured=measured,
             scalar_methods=["dsag", "sag"] if scalar_s is not None else None,
         )

@@ -18,6 +18,22 @@ O(log|𝒴| + overlap) via bisect.  The cache also tracks the *coverage*
 
 Exact-match fast path: if an entry with identical [i, j] exists, it is
 updated in place (paper remark: the update then degrades to SAG's).
+
+Example — staleness dominance and overlap eviction (paper §5):
+
+>>> import numpy as np
+>>> from repro.core.gradient_cache import GradientCache
+>>> cache = GradientCache(10, np.zeros(2))
+>>> cache.insert(1, 5, 0, np.ones(2))       # Y_{1:5}^{(0)} accepted
+True
+>>> cache.insert(3, 7, 0, np.ones(2))       # overlaps an equally recent entry
+False
+>>> cache.insert(3, 7, 1, 2 * np.ones(2))   # newer iterate: evicts [1, 5]
+True
+>>> cache.coverage                           # ξ: only [3, 7] remains
+0.5
+>>> cache.sum.tolist()
+[2.0, 2.0]
 """
 
 from __future__ import annotations
@@ -27,6 +43,28 @@ import dataclasses
 from typing import Any, List, Optional, Tuple
 
 import numpy as np
+
+
+def scenario_ranks(ev_s: np.ndarray) -> np.ndarray:
+    """Position of each event within its scenario's subsequence.
+
+    ``ev_s`` is the per-event scenario index of a *time-ordered* event
+    batch; the result assigns 0, 1, 2, ... to each scenario's events in
+    order of appearance.  Events sharing a rank belong to distinct
+    scenarios, so a rank's updates can be applied as one masked vectorized
+    scatter without changing any scenario's sequential semantics.
+
+    >>> scenario_ranks(np.array([0, 1, 0, 1, 1])).tolist()
+    [0, 0, 1, 1, 2]
+    """
+    ev_s = np.asarray(ev_s)
+    order = np.argsort(ev_s, kind="stable")
+    sorted_s = ev_s[order]
+    ranks = np.empty(ev_s.size, dtype=np.int64)
+    ranks[order] = np.arange(ev_s.size) - np.searchsorted(
+        sorted_s, sorted_s, side="left"
+    )
+    return ranks
 
 
 @dataclasses.dataclass
@@ -175,7 +213,11 @@ class BatchedGradientCache:
         self.rejected_stale = np.zeros(num_scenarios, dtype=np.int64)
         self._slot_of: dict = {}  # (start, stop) -> slot index
         self._intervals: List[Tuple[int, int]] = []
+        # parallel numpy views of the interval universe (vectorized overlap
+        # tests in insert_events); rows past len(_intervals) are unused
         cap = 8
+        self._int_starts = np.zeros(cap, dtype=np.int64)
+        self._int_stops = np.zeros(cap, dtype=np.int64)
         self._iters = np.full((cap, num_scenarios), -1, dtype=np.int64)
         self._values = np.zeros((cap,) + self._sums.shape, dtype=np.float64)
 
@@ -203,8 +245,14 @@ class BatchedGradientCache:
             self._values = np.concatenate(
                 [self._values, np.zeros((grow,) + self._sums.shape)]
             )
+            self._int_starts = np.concatenate(
+                [self._int_starts, np.zeros(grow, np.int64)]
+            )
+            self._int_stops = np.concatenate([self._int_stops, np.zeros(grow, np.int64)])
         self._slot_of[(start, stop)] = slot
         self._intervals.append((start, stop))
+        self._int_starts[slot] = start
+        self._int_stops[slot] = stop
         return slot
 
     def insert(self, s: int, start: int, stop: int, iteration: int, value: Any) -> bool:
@@ -249,6 +297,96 @@ class BatchedGradientCache:
         self._sums[s] += v64
         self._covered[s] += (stop - start + 1) - removed_width
         return True
+
+    def insert_events(
+        self,
+        ev_s: np.ndarray,
+        ev_start: np.ndarray,
+        ev_stop: np.ndarray,
+        ev_iter: np.ndarray,
+        values: np.ndarray,
+    ) -> np.ndarray:
+        """Apply a *time-ordered* batch of §5 updates as masked scatters.
+
+        ``values`` is ``[K, ...]``; events must arrive in event-time order
+        (per-scenario subsequences are what the §5 semantics depend on —
+        scenarios are independent).  Events are regrouped by within-scenario
+        rank (:func:`scenario_ranks`): one rank holds at most one event per
+        scenario, so its updates apply as a single vectorized masked scatter
+        with per-event float expressions identical to :meth:`insert` — the
+        result is bit-for-bit the same as K sequential inserts, without the
+        per-event Python loop.  Overlapping-but-not-exact events (which
+        occur only after a §6 repartition) fall back to the scalar slow path
+        at their correct sequence position.
+
+        Returns the ``[K]`` accepted mask.
+        """
+        ev_s = np.asarray(ev_s, dtype=np.int64)
+        ev_start = np.asarray(ev_start, dtype=np.int64)
+        ev_stop = np.asarray(ev_stop, dtype=np.int64)
+        ev_iter = np.asarray(ev_iter, dtype=np.int64)
+        K = ev_s.size
+        accepted = np.zeros(K, dtype=bool)
+        if K == 0:
+            return accepted
+        if np.any((ev_start < 1) | (ev_stop > self.num_samples) | (ev_start > ev_stop)):
+            bad = np.flatnonzero(
+                (ev_start < 1) | (ev_stop > self.num_samples) | (ev_start > ev_stop)
+            )[0]
+            raise ValueError(
+                f"interval [{ev_start[bad]},{ev_stop[bad]}] outside "
+                f"1..{self.num_samples}"
+            )
+        ranks = scenario_ranks(ev_s)
+        n_active = len(self._intervals)
+        for r in range(int(ranks.max()) + 1):
+            idx = np.flatnonzero(ranks == r)
+            # classify each event (<= S of them): exact-active fast path,
+            # overlap-free simple insert, or scalar eviction fallback
+            fast, simple = [], []
+            for j in idx:
+                s, a, b = int(ev_s[j]), int(ev_start[j]), int(ev_stop[j])
+                slot = self._slot_of.get((a, b))
+                if slot is not None and self._iters[slot, s] >= 0:
+                    fast.append((j, slot))
+                    continue
+                n_active = len(self._intervals)
+                overlap = (
+                    (self._iters[:n_active, s] >= 0)
+                    & (self._int_starts[:n_active] <= b)
+                    & (a <= self._int_stops[:n_active])
+                )
+                if overlap.any():
+                    accepted[j] = self.insert(s, a, b, int(ev_iter[j]), values[j])
+                else:
+                    simple.append((j, self._ensure_slot(a, b)))
+            if fast:
+                j_arr = np.array([j for j, _ in fast])
+                slot_arr = np.array([sl for _, sl in fast])
+                s_arr = ev_s[j_arr]
+                dom = self._iters[slot_arr, s_arr] >= ev_iter[j_arr]
+                np.add.at(self.rejected_stale, s_arr[dom], 1)
+                acc = ~dom
+                if acc.any():
+                    ja, sa, sl = j_arr[acc], s_arr[acc], slot_arr[acc]
+                    v64 = np.asarray(values[ja], dtype=np.float64)
+                    # active entries are disjoint, so an active exact match
+                    # is the only overlap — the SAG-style in-place update
+                    self._sums[sa] += v64 - self._values[sl, sa]
+                    self._values[sl, sa] = v64
+                    self._iters[sl, sa] = ev_iter[ja]
+                    accepted[ja] = True
+            if simple:
+                j_arr = np.array([j for j, _ in simple])
+                slot_arr = np.array([sl for _, sl in simple])
+                s_arr = ev_s[j_arr]
+                v64 = np.asarray(values[j_arr], dtype=np.float64)
+                self._sums[s_arr] += v64
+                self._values[slot_arr, s_arr] = v64
+                self._iters[slot_arr, s_arr] = ev_iter[j_arr]
+                self._covered[s_arr] += ev_stop[j_arr] - ev_start[j_arr] + 1
+                accepted[j_arr] = True
+        return accepted
 
     # -- invariant checks (used by tests) ----------------------------------
     def check_invariants(self) -> None:

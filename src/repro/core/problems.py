@@ -13,30 +13,47 @@
 Metrics follow the paper: explained-variance suboptimality for PCA and
 classification-error/objective suboptimality for logreg, both against a
 directly computed optimum.
+
+Every float expression that feeds the convergence engines lives in exactly
+one place: a per-problem set of JAX kernels (:class:`FusedKernels`) that the
+scalar :class:`~repro.cluster.simulator.TrainingSimulator`, the batched host
+engine (:mod:`repro.experiments.convergence`), and the fused
+``jax.lax.scan`` engine (:mod:`repro.experiments.fused`) all share.  The
+numpy-facing methods are thin wrappers; bit-exact equivalence of the three
+paths rests on this delegation plus two structural properties: batch-size
+invariance of the kernels (empirically pinned on CPU by
+``tests/test_fused.py``) and the static :func:`width_bucket` ladder —
+every interval width maps to one fixed gather shape, so a given (iterate,
+interval) is evaluated at identical static shapes by every engine.  The
+ladder is what carries bit-reproducibility: XLA's reduction lane grouping
+*changes with the padded length*, so masking alone (zero rows contribute
+0.0 mathematically, not positionally) would not keep the bits stable
+across different pad widths.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 
 class FiniteSumProblem:
     """Interface shared by the coordinator/cluster simulator.
 
     The ``*_blocks`` / ``*_batch`` methods are the batched counterparts used
-    by the vectorized convergence engine
-    (:mod:`repro.experiments.convergence`): they evaluate G tasks (one
-    iterate + one sample interval each) in a single JAX dispatch.  Each row
-    of the result must be *bit-identical* to the corresponding scalar call —
-    the batched engine's equivalence guarantee against the scalar
+    by the vectorized convergence engines
+    (:mod:`repro.experiments.convergence`, :mod:`repro.experiments.fused`):
+    they evaluate G tasks (one iterate + one sample interval each) in a
+    single JAX dispatch.  Each row of the result must be *bit-identical* to
+    the corresponding scalar call — the batched engines' equivalence
+    guarantee against the scalar
     :class:`~repro.cluster.simulator.TrainingSimulator` rests on it, so the
-    implementations keep the exact operation order of the scalar path and
-    only add a leading batch dimension to the matmuls.
+    scalar methods delegate to the batched kernels at batch size 1.
     """
 
     num_samples: int
@@ -44,9 +61,17 @@ class FiniteSumProblem:
     def init(self, seed: int = 0) -> np.ndarray:
         raise NotImplementedError
 
+    def fused_kernels(self) -> "FusedKernels":
+        """The problem's traceable JAX kernels (shared by every engine)."""
+        raise NotImplementedError
+
     def subgradient(self, V: np.ndarray, start: int, stop: int) -> np.ndarray:
         """Sum of ∇f_k(V) for k in [start, stop] (1-based inclusive)."""
-        raise NotImplementedError
+        return self.subgradient_blocks(
+            np.asarray(V)[None],
+            np.array([start], dtype=np.int64),
+            np.array([stop], dtype=np.int64),
+        )[0]
 
     def subgradient_blocks(
         self, V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray
@@ -56,7 +81,61 @@ class FiniteSumProblem:
         All intervals must have the same width; row g must equal
         ``subgradient(V_stack[g], starts[g], stops[g])`` bit-for-bit.
         """
-        raise NotImplementedError
+        starts = np.asarray(starts, dtype=np.int64)
+        stops = np.asarray(stops, dtype=np.int64)
+        widths = stops - starts + 1
+        if widths.size == 0:
+            k = self.fused_kernels()
+            return np.zeros((0,) + k.value_shape, dtype=k.value_dtype)
+        m = int(widths[0])
+        if not np.all(widths == m):
+            raise ValueError("subgradient_blocks requires equal-width intervals")
+        return self._call_sub_kernel(
+            V_stack, starts, widths, width_bucket(m, self.num_samples)
+        )
+
+    def subgradient_blocks_masked(
+        self, V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray
+    ) -> np.ndarray:
+        """Like :meth:`subgradient_blocks` but for *mixed-width* intervals.
+
+        Rows are grouped by their :func:`width_bucket` (at most a couple of
+        buckets in practice — the §6.3 partition arithmetic only produces
+        floor/ceil widths plus the full range) and each bucket is one
+        dispatch.  Because the bucket of a width is a pure function of the
+        width, every caller — the scalar simulator at G = 1, this wrapper,
+        and the fused scan — evaluates a given (iterate, interval) at the
+        exact same static shapes, which is what makes the results
+        bit-identical across engines (pinned by ``tests/test_fused.py``).
+        """
+        starts = np.asarray(starts, dtype=np.int64)
+        stops = np.asarray(stops, dtype=np.int64)
+        widths = stops - starts + 1
+        if widths.size == 0:
+            k = self.fused_kernels()
+            return np.zeros((0,) + k.value_shape, dtype=k.value_dtype)
+        buckets = np.array([width_bucket(int(m), self.num_samples) for m in widths])
+        out: Optional[np.ndarray] = None
+        for b in np.unique(buckets):
+            sel = buckets == b
+            block = self._call_sub_kernel(
+                np.asarray(V_stack)[sel], starts[sel], widths[sel], int(b)
+            )
+            if out is None:
+                out = np.empty((widths.size,) + block.shape[1:], dtype=block.dtype)
+            out[sel] = block
+        return out
+
+    def _call_sub_kernel(self, V_stack, starts, widths, pad_width: int):
+        k = self.fused_kernels()
+        with enable_x64():
+            out = k.sub_blocks_jit(
+                jnp.asarray(V_stack),
+                jnp.asarray(starts),
+                jnp.asarray(widths),
+                pad_width,
+            )
+            return np.asarray(out)
 
     def regularizer_grad(self, V: np.ndarray) -> np.ndarray:
         raise NotImplementedError
@@ -70,36 +149,107 @@ class FiniteSumProblem:
         return V_stack
 
     def suboptimality(self, V: np.ndarray) -> float:
-        raise NotImplementedError
+        return float(self.suboptimality_batch(np.asarray(V)[None])[0])
+
+    def suboptimality_batch(self, V_stack: np.ndarray) -> np.ndarray:
+        """[S] suboptimality gaps in one JAX dispatch.
+
+        Row s must equal ``suboptimality(V_stack[s])`` bit-for-bit: the
+        kernel maps the single-iterate evaluation over the batch with
+        ``lax.map`` (a batched ``dot_general`` would reassociate the
+        reductions and break batch invariance on CPU).
+        """
+        k = self.fused_kernels()
+        with enable_x64():
+            return np.asarray(k.suboptimality_jit(jnp.asarray(V_stack)))
+
+    #: ops per sample row (set by subclasses; the static cost constant must
+    #: be readable without building the JAX kernels — e.g. logreg's kernels
+    #: materialize the Newton optimum, which cost-only callers never need)
+    cost_per_row: float
 
     def compute_cost(self, start: int, stop: int) -> float:
         """Computational load c of the block (paper §3: ops count)."""
-        raise NotImplementedError
+        return float(self.cost_per_row * (stop - start + 1))
 
     def compute_cost_batch(self, starts: np.ndarray, stops: np.ndarray) -> np.ndarray:
         """Vectorized :meth:`compute_cost` (same float expression per row)."""
-        raise NotImplementedError
+        rows = np.asarray(stops, dtype=np.int64) - np.asarray(starts, np.int64) + 1
+        return self.cost_per_row * rows
 
 
-def _bucket_pad(V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray):
+@dataclasses.dataclass
+class FusedKernels:
+    """One problem's traceable JAX kernels plus their jitted entry points.
+
+    ``sub_blocks(V_stack, starts, widths, pad_width)`` evaluates G block
+    subgradients at a static gather width (rows past each width masked to
+    zero); ``suboptimality`` / ``project`` / ``regularizer_grad`` operate on
+    ``[S, ...]`` iterate stacks.  ``value_dtype`` is the dtype
+    ``sub_blocks`` returns (the fused engine sizes its in-flight value
+    buffers with it).  The raw callables are traceable from inside an outer
+    ``jax.jit`` / ``lax.scan`` (the fused engine); the ``*_jit`` fields are
+    the standalone jitted versions the numpy wrappers use.  Instances hash
+    by identity, so they can be passed as static arguments to jitted
+    drivers.
+    """
+
+    num_samples: int
+    value_shape: Tuple[int, ...]
+    value_dtype: np.dtype
+    cost_per_row: float
+    sub_blocks: Callable  # (Vb, starts, widths, pad_width) -> [G, ...]
+    suboptimality: Callable  # [S, ...] -> [S]
+    project: Callable  # [S, ...] -> [S, ...]
+    regularizer_grad: Callable  # [S, ...] -> [S, ...]
+
+    def __post_init__(self):
+        self.sub_blocks_jit = jax.jit(self.sub_blocks, static_argnums=3)
+        self.suboptimality_jit = jax.jit(self.suboptimality)
+        self.project_jit = jax.jit(self.project)
+
+    def __hash__(self):  # identity hash: usable as a jit static argument
+        return id(self)
+
+    def __eq__(self, other):
+        return self is other
+
+
+def width_bucket(m: int, num_samples: int) -> int:
+    """Static gather width used to evaluate an interval of width ``m``.
+
+    The next power of two, except the full range keeps its exact width (no
+    point doubling the gather for the gd/coded full-dataset blocks).  The
+    kernels' reductions are *not* invariant to the padded length (XLA's
+    lane grouping changes with the shape), so bit-reproducibility across
+    engines comes from this ladder being a pure function of the width:
+    every caller evaluates a given width at the same static shape.
+    """
+    if m == num_samples:
+        return m
+    return 1 << (m - 1).bit_length()
+
+
+def _pad_pow2(Vb, starts, widths):
     """Pad a task batch to the next power-of-two size (repeat the last row).
 
     The batched subgradient kernels are batch-invariant (each row's result
     is independent of what else shares the batch), so padding does not
     change any real row's bits — but it bounds the number of distinct batch
-    shapes XLA ever sees to O(log G_max) per block width, instead of one
+    shapes XLA ever sees to O(log G_max) per gather width, instead of one
     recompilation for every fleet configuration the event dynamics happen
-    to produce.
+    to produce.  Shapes are static at trace time, so this is usable from
+    inside the fused scan as well.
     """
-    g = V_stack.shape[0]
+    g = Vb.shape[0]
     bucket = 1 << (g - 1).bit_length()
     if bucket == g:
-        return V_stack, starts, stops, g
+        return Vb, starts, widths, g
     pad = bucket - g
     return (
-        np.concatenate([V_stack, np.repeat(V_stack[-1:], pad, axis=0)]),
-        np.concatenate([starts, np.repeat(starts[-1:], pad)]),
-        np.concatenate([stops, np.repeat(stops[-1:], pad)]),
+        jnp.concatenate([Vb, jnp.repeat(Vb[-1:], pad, axis=0)]),
+        jnp.concatenate([starts, jnp.repeat(starts[-1:], pad)]),
+        jnp.concatenate([widths, jnp.repeat(widths[-1:], pad)]),
         g,
     )
 
@@ -147,12 +297,16 @@ class PCAProblem(FiniteSumProblem):
     def __post_init__(self):
         self.num_samples = int(self.X.shape[0])
         self.dim = int(self.X.shape[1])
-        self._Xj = jnp.asarray(self.X)
+        self.cost_per_row = 2.0 * self.dim * self.k
+        with enable_x64():
+            self._Xj = jnp.asarray(self.X)
+            self._X64 = jnp.asarray(self.X, dtype=jnp.float64)
         # reference optimum: exact top-k eigendecomposition of X^T X
         gram = np.asarray(self.X, dtype=np.float64).T @ np.asarray(self.X, np.float64)
         evals = np.linalg.eigvalsh(gram)
         self._opt_explained = float(np.sum(np.sort(evals)[::-1][: self.k]))
         self._total_var = float(np.trace(gram))
+        self._kernels: Optional[FusedKernels] = None
 
     def init(self, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)
@@ -160,76 +314,87 @@ class PCAProblem(FiniteSumProblem):
         q, _ = np.linalg.qr(v)
         return q
 
-    def subgradient(self, V: np.ndarray, start: int, stop: int) -> np.ndarray:
-        # On the Stiefel manifold enforced by G (V^T V = I),
-        #   f_i(V) = 1/2||x_i - x_i V V^T||^2 = 1/2||x_i||^2 - 1/2||x_i V||^2,
-        # so the block subgradient is -X_b^T (X_b V) — exactly the worker
-        # computation of paper Eq. (3).  With eta = 1 the GD update
-        # V - (V - A V) = A V followed by Gram-Schmidt *is* the power method,
-        # as stated in §7.  Routed through the G = 1 batched kernel so the
-        # scalar simulator and the batched convergence engine share one code
-        # path (bit-exact equivalence depends on it).
-        return self.subgradient_blocks(
-            np.asarray(V)[None],
-            np.array([start], dtype=np.int64),
-            np.array([stop], dtype=np.int64),
-        )[0]
+    def fused_kernels(self) -> FusedKernels:
+        if self._kernels is not None:
+            return self._kernels
+        Xj, X64 = self._Xj, self._X64
+        n = self.num_samples
+        opt, total = self._opt_explained, self._total_var
 
-    def subgradient_blocks(
-        self, V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray
-    ) -> np.ndarray:
-        # -X_b^T (X_b V) with a leading batch axis.  The batched matmul is
-        # batch-invariant on CPU (row g is bit-identical whatever else is in
-        # the batch — pinned by tests), which is what lets the scalar path
-        # reuse this kernel at G = 1.
-        starts = np.asarray(starts, dtype=np.int64)
-        stops = np.asarray(stops, dtype=np.int64)
-        widths = stops - starts + 1
-        if widths.size == 0:
-            return np.zeros((0,) + np.shape(V_stack)[1:], dtype=np.float32)
-        m = int(widths[0])
-        if not np.all(widths == m):
-            raise ValueError("subgradient_blocks requires equal-width intervals")
-        V_stack, starts, stops, g = _bucket_pad(np.asarray(V_stack), starts, stops)
-        idx = starts[:, None] - 1 + np.arange(m)[None, :]
-        xg = self._Xj[jnp.asarray(idx)]  # [G, m, d]
-        Vb = jnp.asarray(V_stack)  # [G, d, k]
-        return np.asarray(-(jnp.swapaxes(xg, 1, 2) @ (xg @ Vb)))[:g]
+        def sub_blocks(Vb, starts, widths, pad_width: int):
+            # -X_b^T (X_b V) with a leading batch axis.  On the Stiefel
+            # manifold enforced by G (V^T V = I),
+            #   f_i(V) = 1/2||x_i - x_i V V^T||^2 = 1/2||x_i||^2 - 1/2||x_i V||^2,
+            # so the block subgradient is -X_b^T (X_b V) — exactly the worker
+            # computation of paper Eq. (3).  With eta = 1 the GD update
+            # V - (V - A V) = A V followed by Gram-Schmidt *is* the power
+            # method, as stated in §7.  Rows past each interval's width are
+            # zero-masked (they contribute 0.0 to both matmuls); bit
+            # reproducibility across engines comes from every caller using
+            # the same static width_bucket pad per width, NOT from pad-width
+            # invariance — see width_bucket.
+            Vb, starts, widths, g = _pad_pow2(Vb, starts, widths)
+            idx = jnp.clip(starts[:, None] - 1 + jnp.arange(pad_width)[None, :], 0, n - 1)
+            xg = Xj[idx]  # [G, pad, d]
+            mask = (jnp.arange(pad_width)[None, :] < widths[:, None]).astype(Xj.dtype)
+            xg = xg * mask[:, :, None]
+            return (-(jnp.swapaxes(xg, 1, 2) @ (xg @ Vb)))[:g]
+
+        def explained_one(V):
+            xv = X64 @ V.astype(jnp.float64)
+            return jnp.sum(xv * xv)
+
+        def suboptimality(V_stack):
+            # (optimal explained variance - achieved) / total variance — the
+            # paper's 'suboptimality gap' for PCA, nonnegative up to roundoff
+            def one(V):
+                return jnp.maximum((opt - explained_one(V)) / total, 1e-16)
+
+            return jax.lax.map(one, V_stack)
+
+        def project(V_stack):
+            # Gram-Schmidt == thin-QR orthonormalization (sign-fixed); on CPU
+            # jnp.linalg.qr loops LAPACK per matrix, so rows are
+            # batch-invariant (pinned by tests)
+            q, r = jnp.linalg.qr(V_stack)
+            diag = jnp.diagonal(r, axis1=-2, axis2=-1)
+            return q * jnp.sign(diag)[..., None, :]
+
+        self._kernels = FusedKernels(
+            num_samples=n,
+            value_shape=(self.dim, self.k),
+            value_dtype=np.result_type(self.X.dtype, np.float32),
+            cost_per_row=self.cost_per_row,
+            sub_blocks=sub_blocks,
+            suboptimality=suboptimality,
+            project=project,
+            regularizer_grad=lambda V_stack: V_stack,  # ∇ 1/2||V||_F^2
+        )
+        self._explained_jit = jax.jit(lambda Vs: jax.lax.map(explained_one, Vs))
+        return self._kernels
 
     def regularizer_grad(self, V: np.ndarray) -> np.ndarray:
         return V  # ∇ 1/2||V||_F^2
 
     def project(self, V: np.ndarray) -> np.ndarray:
-        # Gram-Schmidt == thin-QR orthonormalization (sign-fixed)
-        q, r = np.linalg.qr(V)
-        return q * np.sign(np.diag(r))[None, :]
+        return self.project_batch(np.asarray(V)[None])[0]
 
     def project_batch(self, V_stack: np.ndarray) -> np.ndarray:
-        # np.linalg.qr gufunc-loops LAPACK per matrix, so each row matches
-        # the scalar `project` bit-for-bit
-        q, r = np.linalg.qr(V_stack)
-        diag = r[..., np.arange(self.k), np.arange(self.k)]
-        return q * np.sign(diag)[..., None, :]
+        # delegates to the shared QR kernel: the scalar simulator, the host
+        # batched engine, and the fused scan all orthonormalize with the
+        # exact same bits
+        k = self.fused_kernels()
+        with enable_x64():
+            return np.asarray(k.project_jit(jnp.asarray(V_stack)))
 
     def explained_variance(self, V: np.ndarray) -> float:
-        xv = self.X.astype(np.float64) @ V.astype(np.float64)
-        return float(np.sum(xv * xv))
+        self.fused_kernels()
+        with enable_x64():
+            return float(self._explained_jit(jnp.asarray(V)[None])[0])
 
-    def suboptimality(self, V: np.ndarray) -> float:
-        """(optimal explained variance - achieved) / total variance — the
-        paper's 'suboptimality gap' for PCA, nonnegative up to roundoff."""
-        gap = (self._opt_explained - self.explained_variance(V)) / self._total_var
-        return float(max(gap, 1e-16))
-
-    def compute_cost(self, start: int, stop: int) -> float:
-        # c = 2 ζ d k rows  with ζ the density (paper §3); for our dense
-        # representation ζ=1 gives ops of the dense Gram product.
-        rows = stop - start + 1
-        return 2.0 * self.dim * self.k * rows
-
-    def compute_cost_batch(self, starts: np.ndarray, stops: np.ndarray) -> np.ndarray:
-        rows = np.asarray(stops, dtype=np.int64) - np.asarray(starts, np.int64) + 1
-        return 2.0 * self.dim * self.k * rows
+    # compute_cost doc: c = 2 ζ d k rows with ζ the density (paper §3); for
+    # our dense representation ζ=1 gives ops of the dense Gram product —
+    # encoded as FusedKernels.cost_per_row = 2 d k.
 
 
 # ---------------------------------------------------------------------------
@@ -264,20 +429,87 @@ class LogisticRegressionProblem(FiniteSumProblem):
     def __post_init__(self):
         self.num_samples = int(self.X.shape[0])
         self.dim = int(self.X.shape[1])
+        self.cost_per_row = 2.0 * self.dim
         if self.lam is None:
             self.lam = 1.0 / self.num_samples
-        self._Xj = jnp.asarray(self.X)
-        self._yj = jnp.asarray(self.y)
+        with enable_x64():
+            self._Xj = jnp.asarray(self.X)
+            self._yj = jnp.asarray(self.y)
+            self._X64 = jnp.asarray(self.X, dtype=jnp.float64)
+            self._y64 = jnp.asarray(self.y, dtype=jnp.float64)
         self._opt = None  # lazy: computed by Newton iterations on first use
+        self._kernels: Optional[FusedKernels] = None
 
     def init(self, seed: int = 0) -> np.ndarray:
         return np.zeros((self.dim,), dtype=np.float32)
 
+    def fused_kernels(self) -> FusedKernels:
+        if self._kernels is not None:
+            return self._kernels
+        Xj, yj = self._Xj, self._yj
+        X64, y64 = self._X64, self._y64
+        n, lam = self.num_samples, self.lam
+
+        def sub_blocks(Vb, starts, widths, pad_width: int):
+            # Uses explicit elementwise-multiply + axis reductions rather
+            # than matmuls: XLA lowers a [m, d] @ [d] mat-vec and a
+            # [G, m, d] batched product to different kernels with different
+            # accumulation orders, so matmul results would depend on the
+            # batch size.  The reduce-based form is batch-invariant (pinned
+            # by tests); labels are zero-masked past each interval's width,
+            # and every caller evaluates a given width at the same static
+            # width_bucket pad — the reduction is NOT invariant to the pad
+            # length itself (see width_bucket).
+            Vb, starts, widths, g = _pad_pow2(Vb, starts, widths)
+            idx = jnp.clip(starts[:, None] - 1 + jnp.arange(pad_width)[None, :], 0, n - 1)
+            xg = Xj[idx]  # [G, pad, d]
+            yg = yj[idx] * (jnp.arange(pad_width)[None, :] < widths[:, None]).astype(
+                yj.dtype
+            )
+            z = yg * jnp.sum(xg * Vb[:, None, :], axis=2)
+            s = jax.nn.sigmoid(-z)
+            return (-jnp.sum(xg * (yg * s)[:, :, None], axis=1) / n)[:g]
+
+        def objective_one(V):
+            V64 = V.astype(jnp.float64)
+            z = y64 * (X64 @ V64)
+            # log1p(exp(-z)) stable
+            return jnp.mean(jnp.logaddexp(0.0, -z)) + 0.5 * lam * jnp.sum(V64 * V64)
+
+        def objective(V_stack):
+            return jax.lax.map(objective_one, V_stack)
+
+        self._objective_jit = jax.jit(objective)
+        # materialize the Newton optimum now: the suboptimality kernel must
+        # close over a concrete float (it may first be traced from inside
+        # the fused scan, where resolving the lazy property would nest a
+        # jit call into the trace)
+        opt_obj = self.optimum_objective
+
+        def suboptimality(V_stack):
+            return jnp.maximum(objective(V_stack) - opt_obj, 1e-16)
+
+        self._kernels = FusedKernels(
+            num_samples=n,
+            value_shape=(self.dim,),
+            value_dtype=np.result_type(self.X.dtype, np.float32),
+            cost_per_row=self.cost_per_row,
+            sub_blocks=sub_blocks,
+            suboptimality=suboptimality,
+            project=lambda V_stack: V_stack,  # G = identity
+            regularizer_grad=lambda V_stack: lam * V_stack,
+        )
+        return self._kernels
+
     def objective(self, V: np.ndarray) -> float:
-        z = self.y * (self.X @ V)
-        # log1p(exp(-z)) stable
-        loss = np.logaddexp(0.0, -z).mean()
-        return float(loss + 0.5 * self.lam * np.dot(V, V))
+        return float(self.objective_batch(np.asarray(V)[None])[0])
+
+    def objective_batch(self, V_stack: np.ndarray) -> np.ndarray:
+        """[S] objectives through the shared JAX kernel (one dispatch)."""
+        if not hasattr(self, "_objective_jit"):  # set mid-build by fused_kernels
+            self.fused_kernels()
+        with enable_x64():
+            return np.asarray(self._objective_jit(jnp.asarray(V_stack)))
 
     def _solve_optimum(self) -> np.ndarray:
         """Newton's method — logreg is strongly convex with λ>0."""
@@ -304,50 +536,5 @@ class LogisticRegressionProblem(FiniteSumProblem):
             self._opt_obj = self.objective(self._opt)
         return self._opt_obj
 
-    def suboptimality(self, V: np.ndarray) -> float:
-        return float(max(self.objective(V) - self.optimum_objective, 1e-16))
-
-    def subgradient(self, V: np.ndarray, start: int, stop: int) -> np.ndarray:
-        # routed through the G = 1 batched kernel (see subgradient_blocks)
-        return self.subgradient_blocks(
-            np.asarray(V)[None],
-            np.array([start], dtype=np.int64),
-            np.array([stop], dtype=np.int64),
-        )[0]
-
-    def subgradient_blocks(
-        self, V_stack: np.ndarray, starts: np.ndarray, stops: np.ndarray
-    ) -> np.ndarray:
-        # Uses explicit elementwise-multiply + axis reductions rather than
-        # matmuls: XLA lowers a [m, d] @ [d] mat-vec and a [G, m, d] batched
-        # product to different kernels with different accumulation orders, so
-        # matmul results would depend on the batch size.  The reduce-based
-        # form is batch-invariant (row g identical at any G — pinned by
-        # tests), which is what lets the scalar path reuse this kernel.
-        starts = np.asarray(starts, dtype=np.int64)
-        stops = np.asarray(stops, dtype=np.int64)
-        widths = stops - starts + 1
-        if widths.size == 0:
-            return np.zeros((0, self.dim), dtype=np.float32)
-        m = int(widths[0])
-        if not np.all(widths == m):
-            raise ValueError("subgradient_blocks requires equal-width intervals")
-        V_stack, starts, stops, g = _bucket_pad(np.asarray(V_stack), starts, stops)
-        idx = jnp.asarray(starts[:, None] - 1 + np.arange(m)[None, :])
-        xg = self._Xj[idx]  # [G, m, d]
-        yg = self._yj[idx]  # [G, m]
-        Vb = jnp.asarray(V_stack)  # [G, d]
-        z = yg * jnp.sum(xg * Vb[:, None, :], axis=2)
-        s = jax.nn.sigmoid(-z)
-        grad = -jnp.sum(xg * (yg * s)[:, :, None], axis=1) / self.num_samples
-        return np.asarray(grad)[:g]
-
     def regularizer_grad(self, V: np.ndarray) -> np.ndarray:
         return self.lam * V
-
-    def compute_cost(self, start: int, stop: int) -> float:
-        return 2.0 * self.dim * (stop - start + 1)
-
-    def compute_cost_batch(self, starts: np.ndarray, stops: np.ndarray) -> np.ndarray:
-        rows = np.asarray(stops, dtype=np.int64) - np.asarray(starts, np.int64) + 1
-        return 2.0 * self.dim * rows

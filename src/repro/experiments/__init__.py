@@ -1,6 +1,7 @@
 """Batched scenario sweeps over the §3/§4.2 simulated fleet (paper §7).
 
-The subsystem has four layers:
+The subsystem has five layers (see ``docs/ARCHITECTURE.md`` for how they
+relate to the scalar simulators):
 
 * :mod:`repro.experiments.sweep` — the vectorized event-dynamics engine
   (bit-exact replay of the scalar simulator over a scenario batch) plus the
@@ -9,6 +10,9 @@ The subsystem has four layers:
   the full DSAG/SAG/SGD update rule (gradient cache, coverage scaling,
   §5.1 margin, stale integration, §6 load balancing) over all scenarios at
   once, bit-exact against the scalar ``TrainingSimulator``;
+* :mod:`repro.experiments.fused` — the fused ``jax.lax.scan`` convergence
+  engine: the whole iteration body as one jittable function, bit-exact
+  against the host engine (the default for non-load-balanced configs);
 * :mod:`repro.experiments.grid` — the (seeds x methods x w x regimes) driver
   with common-random-number trace sharing per regime;
 * :mod:`repro.experiments.results` — ordering verdicts, the profiler feed,
@@ -42,16 +46,21 @@ from repro.experiments.sweep import (
     synchronous_times_batch,
 )
 from repro.experiments.convergence import (
+    PAPER_SCALE_PCA,
     ConvergenceBatchResult,
     ConvergenceSweepOutcome,
     default_convergence_methods,
+    make_paper_scale_pca,
+    paper_scale_pca_sweep,
     run_convergence_batch,
     run_convergence_sweep,
     scalar_convergence_run,
     scalar_convergence_seconds,
 )
+from repro.experiments.fused import run_convergence_scan
 from repro.experiments.results import (
     convergence_ordering,
+    convergence_payload,
     write_bench_convergence,
 )
 
@@ -65,16 +74,21 @@ __all__ = [
     "HEAVY_BURSTS",
     "MethodSpec",
     "PAPER_BURSTS",
+    "PAPER_SCALE_PCA",
     "SweepOutcome",
     "SweepRow",
     "convergence_ordering",
+    "convergence_payload",
     "default_convergence_methods",
     "default_methods",
     "feed_profiler",
+    "make_paper_scale_pca",
     "outcome_to_dict",
     "paper_ordering",
+    "paper_scale_pca_sweep",
     "replay_batch",
     "run_convergence_batch",
+    "run_convergence_scan",
     "run_convergence_sweep",
     "run_sweep",
     "scalar_convergence_run",

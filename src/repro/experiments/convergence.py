@@ -50,7 +50,7 @@ from repro.cluster.simulator import (
     margin_deadline,
     task_finish_time,
 )
-from repro.core.gradient_cache import BatchedGradientCache
+from repro.core.gradient_cache import BatchedGradientCache, scenario_ranks
 from repro.core.problems import FiniteSumProblem
 from repro.latency.model import ClusterLatencyModel, FleetTraces, sample_fleet
 from repro.latency.profiler import LatencyProfiler
@@ -111,6 +111,7 @@ def run_convergence_batch(
     cost_scale: float = 1.0,
     eval_every: int = 1,
     seed: int = 0,
+    engine: str = "auto",
 ) -> ConvergenceBatchResult:
     """Train ``config`` on every scenario of ``traces`` simultaneously.
 
@@ -118,7 +119,40 @@ def run_convergence_batch(
     latency_source=TraceLatencySource(traces, s), ...).run(num_iterations)``
     for each scenario ``s`` — resolved with ``[S, N]`` array operations and
     batched JAX subgradient evaluation instead of a per-event Python loop.
+
+    ``engine`` selects the implementation:
+
+    * ``"scan"`` — the fused ``jax.lax.scan`` engine
+      (:func:`repro.experiments.fused.run_convergence_scan`): the whole
+      iteration body (event algebra, subgradients, cache scatter, iterate
+      update, suboptimality) is one jittable function scanned over
+      iterations.  Load-balanced configs are rejected (§6 Algorithm 1 is
+      host code).
+    * ``"host"`` — the numpy-driven batched loop below (one Python
+      iteration per training iteration, batched kernels inside).  Required
+      for ``config.load_balance``.
+    * ``"auto"`` (default) — ``"scan"`` unless the config load-balances.
+
+    All engines are bit-exact against each other and against the scalar
+    simulator (pinned by ``tests/test_convergence.py`` /
+    ``tests/test_fused.py``).
     """
+    if engine not in ("auto", "scan", "host"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "auto":
+        engine = "host" if config.load_balance else "scan"
+    if engine == "scan":
+        from repro.experiments.fused import run_convergence_scan
+
+        return run_convergence_scan(
+            problem,
+            traces,
+            config,
+            num_iterations,
+            cost_scale=cost_scale,
+            eval_every=eval_every,
+            seed=seed,
+        )
     S, N = traces.num_scenarios, traces.num_workers
     n = problem.num_samples
     T = num_iterations
@@ -276,17 +310,13 @@ def run_convergence_batch(
         val_index = np.full((S, N), -1, dtype=np.int64)
         vals: Optional[np.ndarray] = None
         if need.any():
+            # one masked-width dispatch for the whole mixed-width task batch
+            # (bit-identical to per-width bucketing — pinned by tests)
             v_s, v_w = np.nonzero(need)
             val_index[v_s, v_w] = np.arange(v_s.size)
-            v_lo = lo[v_s, v_w]
-            v_hi = hi[v_s, v_w]
-            widths = v_hi - v_lo + 1
-            for wd in np.unique(widths):
-                sel = widths == wd
-                block = problem.subgradient_blocks(V[v_s[sel]], v_lo[sel], v_hi[sel])
-                if vals is None:
-                    vals = np.empty((v_s.size,) + vshape, dtype=block.dtype)
-                vals[sel] = block
+            vals = problem.subgradient_blocks_masked(
+                V[v_s], lo[v_s, v_w], hi[v_s, v_w]
+            )
 
         # -- cache / gradient-accumulator updates in event-time order ------
         if cfg.uses_cache:
@@ -306,25 +336,36 @@ def run_convergence_batch(
                 ev_lo, ev_hi = lo[f_s, f_w], hi[f_s, f_w]
                 ev_iter = np.full(f_s.size, t, np.int64)
                 n_stale = 0
-            order = np.argsort(ev_time, kind="stable")
-            for j in order:
-                if j < n_stale:
-                    value = flight_val[ev_s[j], ev_w[j]]
+            if ev_s.size:
+                if n_stale:
+                    ev_vals = np.concatenate(
+                        [
+                            flight_val[ev_s[:n_stale], ev_w[:n_stale]],
+                            vals[val_index[ev_s[n_stale:], ev_w[n_stale:]]],
+                        ]
+                    )
                 else:
-                    value = vals[val_index[ev_s[j], ev_w[j]]]
-                cache.insert(
-                    int(ev_s[j]),
-                    int(ev_lo[j]),
-                    int(ev_hi[j]),
-                    int(ev_iter[j]),
-                    value,
+                    ev_vals = vals[val_index[ev_s, ev_w]]
+                # time-ordered masked scatters instead of a per-event loop
+                # (per-scenario §5 semantics preserved bit for bit)
+                order = np.argsort(ev_time, kind="stable")
+                cache.insert_events(
+                    ev_s[order],
+                    ev_lo[order],
+                    ev_hi[order],
+                    ev_iter[order],
+                    ev_vals[order],
                 )
         elif cfg.name in ("gd", "sgd"):
             grad_acc = np.zeros((S,) + vshape, dtype=np.float64)
             covered = np.zeros(S, dtype=np.int64)
-            f_time = finish[f_s, f_w]
-            for j in np.argsort(f_time, kind="stable"):
-                grad_acc[f_s[j]] += vals[val_index[f_s[j], f_w[j]]]
+            if f_s.size:
+                order = np.argsort(finish[f_s, f_w], kind="stable")
+                os_, ow_ = f_s[order], f_w[order]
+                ranks = scenario_ranks(os_)
+                for r in range(int(ranks.max()) + 1):
+                    sel = ranks == r  # <= one event per scenario: masked add
+                    grad_acc[os_[sel]] += vals[val_index[os_[sel], ow_[sel]]]
             np.add.at(covered, f_s, hi[f_s, f_w] - lo[f_s, f_w] + 1)
 
         # -- commit worker state for started tasks --------------------------
@@ -366,8 +407,9 @@ def run_convergence_batch(
         V = problem.project_batch((V - cfg.eta * grad).astype(V.dtype, copy=False))
 
         if t % eval_every == 0 or t == T - 1:
-            for s in range(S):
-                subopt[s, t] = problem.suboptimality(V[s])
+            # one [S] JAX dispatch (the scalar simulator delegates to the
+            # same kernel at S = 1, so the bits agree)
+            subopt[:, t] = problem.suboptimality_batch(V)
 
         # -- load balancing (batched §6 background loop) --------------------
         if cfg.load_balance:
@@ -476,6 +518,7 @@ def run_convergence_sweep(
     burst_factor_mean: Optional[float] = None,
     burst_duration_mean: Optional[float] = None,
     seed: int = 0,
+    engine: str = "auto",
 ) -> ConvergenceSweepOutcome:
     """Run every method over one shared scenario batch (common random
     numbers: all methods see the same latency draws, like the paper's
@@ -483,7 +526,8 @@ def run_convergence_sweep(
 
     ``regime`` is an optional :class:`~repro.experiments.grid.BurstRegime`
     (the iteration-time grid's burst environments); explicit ``burst_*``
-    keywords override its fields.
+    keywords override its fields.  ``engine`` is forwarded to
+    :func:`run_convergence_batch` per method.
     """
     if regime is not None:
         burst_rate = regime.rate if burst_rate is None else burst_rate
@@ -513,6 +557,7 @@ def run_convergence_sweep(
             cost_scale=cost_scale,
             eval_every=eval_every,
             seed=seed,
+            engine=engine,
         )
     engine_seconds = time.perf_counter() - t0
     return ConvergenceSweepOutcome(
@@ -527,6 +572,80 @@ def run_convergence_sweep(
         seed=seed,
         engine_seconds=engine_seconds,
     )
+
+
+#: Calibrated parameters of the paper-scale PCA convergence sweep (Figs.
+#: 10-12 at the genomics matrix's actual row count).  ``gap=1e-4`` sits in
+#: the regime where ignoring-stragglers SGD has stalled but the
+#: cache-based methods keep converging — the paper's reason for DSAG —
+#: while DSAG reaches it ~2.5-3x before SAG and the coded bound
+#: (ordering pinned by the committed ``BENCH_convergence.json``).
+PAPER_SCALE_PCA = dict(
+    n_rows=50_000,
+    n_cols=96,
+    k=3,
+    n_workers=50,
+    subpartitions=5,
+    w=40,
+    eta=0.9,
+    gap=1e-4,
+    n_scenarios=4,
+    num_iterations=80,
+    eval_every=4,
+)
+
+
+def make_paper_scale_pca(
+    n_rows: int = PAPER_SCALE_PCA["n_rows"],
+    n_cols: int = PAPER_SCALE_PCA["n_cols"],
+    k: int = PAPER_SCALE_PCA["k"],
+    seed: int = 0,
+):
+    """The n≈50k synthetic genomics matrix as a :class:`PCAProblem`."""
+    from repro.core.problems import PCAProblem, make_genomics_like_matrix
+
+    return PCAProblem(X=make_genomics_like_matrix(n_rows, n_cols, seed=seed), k=k)
+
+
+def paper_scale_pca_sweep(
+    *,
+    scale: float = 1.0,
+    seed: int = 0,
+    regime=None,
+    engine: str = "auto",
+) -> Tuple[ConvergenceSweepOutcome, float]:
+    """Run the calibrated paper-scale PCA convergence sweep.
+
+    ``scale`` shrinks the grid uniformly (rows, iterations, scenarios) for
+    smoke tests; 1.0 is the benchmark configuration.  Returns
+    ``(outcome, gap)`` with ``gap`` the calibrated time-to-gap threshold.
+    """
+    from repro.experiments.grid import HEAVY_BURSTS
+    from repro.latency.model import make_heterogeneous_cluster
+
+    p = PAPER_SCALE_PCA
+    n_rows = max(int(p["n_rows"] * scale), 512)
+    n_iter = max(int(p["num_iterations"] * scale), 10)
+    n_scen = max(int(p["n_scenarios"] * scale), 2)
+    prob = make_paper_scale_pca(n_rows=n_rows, seed=seed)
+    N, sp = p["n_workers"], p["subpartitions"]
+    c_task = prob.compute_cost(1, max(prob.num_samples // (N * sp), 1))
+    cluster = make_heterogeneous_cluster(N, seed=seed, burst_rate=0.0, load_unit=c_task)
+    methods = default_convergence_methods(
+        N, w=p["w"], eta=p["eta"], subpartitions=sp
+    )
+    outcome = run_convergence_sweep(
+        prob,
+        cluster,
+        methods,
+        n_scenarios=n_scen,
+        num_iterations=n_iter,
+        eval_every=p["eval_every"],
+        regime=regime if regime is not None else HEAVY_BURSTS,
+        seed=seed,
+        engine=engine,
+    )
+    return outcome, float(p["gap"])
 
 
 def scalar_convergence_run(

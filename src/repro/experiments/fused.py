@@ -1,0 +1,548 @@
+"""Fused ``jax.lax.scan`` convergence engine.
+
+The host engine (:func:`repro.experiments.convergence.run_convergence_batch`
+with ``engine="host"``) runs one Python iteration per training iteration and
+dispatches batched kernels from it.  This module compiles the *entire*
+iteration body — §4.2 event algebra, §3 trace replay, block subgradients,
+the §5 cache update as masked scatters, the iterate update, and the
+suboptimality evaluation — into one jittable function and scans it over the
+whole run: a single XLA dispatch for a complete ``[S]``-scenario training
+sweep, ready for accelerators.
+
+Bit-exactness contract (pinned by ``tests/test_fused.py``): for every
+scenario, the scan produces the same bits as the host engine and the scalar
+:class:`~repro.cluster.simulator.TrainingSimulator` replaying the same
+trace.  Three ingredients make that possible:
+
+* every float expression is shared: the problems'
+  :class:`~repro.core.problems.FusedKernels` are called from all three
+  engines, and the event algebra mirrors
+  :func:`~repro.cluster.simulator.task_finish_time` /
+  :func:`~repro.cluster.simulator.margin_deadline` term by term;
+* block subgradients are evaluated at the static
+  :func:`~repro.core.problems.width_bucket` ladder — one kernel call per
+  possible bucket, rows selected by their actual width — so a given
+  (iterate, interval) is always computed at the same static shape;
+* the §5 cache is a *fixed slot universe*: without §6 repartitioning the
+  interval set is exactly the initial subpartition grid, so per-scenario
+  cache state is dense ``[S, E]`` arrays and each event rank applies as one
+  masked scatter, sequenced per scenario in event-time order by an inner
+  ``fori_loop`` (float accumulation order preserved).
+
+Load-balanced configs are rejected: §6 Algorithm 1 (profiler moments +
+hill-climbing) is host code, and a repartition would grow the slot
+universe mid-scan.  ``run_convergence_batch`` routes those to the host
+engine, which shares all the kernels above.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.cluster.simulator import (
+    MethodConfig,
+    effective_w,
+    margin_deadline,
+    task_finish_time,
+)
+from repro.core.problems import FiniteSumProblem, FusedKernels, width_bucket
+from repro.latency.model import FleetTraces, comp_latency_expr
+from repro.lb.partitioner import p_start, p_stop
+
+
+@dataclasses.dataclass(frozen=True)
+class _StaticSpec:
+    """Hashable static configuration of one fused-scan compilation."""
+
+    name: str
+    w_wait: int
+    eta: float
+    margin: float  # effective margin (0.0 when unused)
+    comp_scale: float
+    process_full: bool
+    uses_cache: bool
+    accepts_stale: bool
+    num_iterations: int
+    base_start: Tuple[int, ...]
+    base_stop: Tuple[int, ...]
+    sub_p: Tuple[int, ...]  # initial (and, without §6, permanent) p_i
+    buckets: Tuple[int, ...]  # static width_bucket ladder, ascending
+    slot_offsets: Tuple[int, ...]  # per-worker first slot (cache methods)
+    num_slots: int
+
+
+def _possible_widths(n_local: int, p: int, full: bool) -> set:
+    if full:
+        return {n_local}
+    return {k * n_local // p - (k - 1) * n_local // p for k in range(1, p + 1)}
+
+
+def _static_spec(
+    problem: FiniteSumProblem,
+    config: MethodConfig,
+    num_workers: int,
+    num_iterations: int,
+    cost_scale: float,
+) -> _StaticSpec:
+    n = problem.num_samples
+    N = num_workers
+    cfg = config
+    base_start = tuple(p_start(n, N, i + 1) for i in range(N))
+    base_stop = tuple(p_stop(n, N, i + 1) for i in range(N))
+    n_local = [b - a + 1 for a, b in zip(base_start, base_stop)]
+    process_full = cfg.name in ("gd", "coded")
+    sub_p = tuple(min(cfg.subpartitions, nl) for nl in n_local)
+    widths = set()
+    for nl, p in zip(n_local, sub_p):
+        widths |= _possible_widths(nl, p, process_full)
+    buckets = tuple(sorted({width_bucket(m, n) for m in widths}))
+    if cfg.uses_cache:
+        offsets = np.concatenate([[0], np.cumsum(sub_p)])
+        slot_offsets = tuple(int(o) for o in offsets[:-1])
+        num_slots = int(offsets[-1])
+    else:
+        slot_offsets = (0,) * N
+        num_slots = 0
+    margin_eff = cfg.margin if (cfg.uses_margin and cfg.margin > 0) else 0.0
+    return _StaticSpec(
+        name=cfg.name,
+        w_wait=effective_w(cfg, N),
+        eta=float(cfg.eta),
+        margin=float(margin_eff),
+        comp_scale=float(
+            cost_scale * (1.0 / cfg.code_rate if cfg.name == "coded" else 1.0)
+        ),
+        process_full=process_full,
+        uses_cache=cfg.uses_cache,
+        accepts_stale=cfg.accepts_stale,
+        num_iterations=num_iterations,
+        base_start=base_start,
+        base_stop=base_stop,
+        sub_p=sub_p,
+        buckets=buckets,
+        slot_offsets=slot_offsets,
+        num_slots=num_slots,
+    )
+
+
+def _bcast(mask, value_ndim: int):
+    """Reshape an [S] mask so it broadcasts over value dimensions."""
+    return mask.reshape(mask.shape + (1,) * value_ndim)
+
+
+def _subgradients(kernels: FusedKernels, spec: _StaticSpec, V, lo, hi):
+    """[S, N, ...] block subgradients via the static width-bucket ladder.
+
+    One kernel dispatch per possible bucket (all S*N tasks each time), rows
+    selected by their actual width — bit-identical to the host wrapper,
+    which routes each row to the same bucket.
+    """
+    S, N = lo.shape
+    n = kernels.num_samples
+    widths = hi - lo + 1
+    vdim = len(kernels.value_shape)
+    Vb = jnp.broadcast_to(
+        V[:, None], (S, N) + kernels.value_shape
+    ).reshape((S * N,) + kernels.value_shape)
+    lo_f = lo.reshape(-1)
+    w_f = widths.reshape(-1)
+    out = None
+    prev = 0
+    for b in spec.buckets:
+        block = kernels.sub_blocks(Vb, lo_f, w_f, b).reshape(
+            (S, N) + kernels.value_shape
+        )
+        if b == n:
+            sel = widths == n
+        else:
+            sel = (widths != n) & (widths <= b) & (widths > prev)
+        out = block if out is None else jnp.where(_bcast(sel, vdim), block, out)
+        prev = b
+    return out
+
+
+def _apply_cache_events(
+    spec: _StaticSpec,
+    slot_width,
+    cache_state,
+    ev_valid,
+    ev_time,
+    ev_slot,
+    ev_tag,
+    ev_vals,
+):
+    """The §5 update for one iteration's events, as masked scatters.
+
+    ``ev_*`` are ``[S, E_ev]`` tables (stale then fresh halves for DSAG,
+    fresh only for SAG).  Events are ranked per scenario by a stable sort
+    on event time (+inf where invalid) and applied rank by rank: one rank
+    holds at most one event per scenario, so its updates are a single
+    vectorized masked scatter, and the per-scenario float accumulation
+    order of the running sums matches the host cache's time-ordered
+    inserts bit for bit.  With a fixed slot universe an active exact-match
+    slot is the only possible overlap, so the scalar cache's eviction walk
+    reduces to staleness dominance + in-place update (the SAG fast path).
+    """
+    sums, values, iters, covered, rejected = cache_state
+    S, E_ev = ev_time.shape
+    vdim = values.ndim - 2
+    order = jnp.argsort(jnp.where(ev_valid, ev_time, jnp.inf), axis=1, stable=True)
+    s_idx = jnp.arange(S)
+    flat_vals = ev_vals.reshape((S * E_ev,) + ev_vals.shape[2:])
+
+    def rank_body(j, state):
+        sums, values, iters, covered, rejected = state
+        e = order[:, j]
+        flat = s_idx * E_ev + e
+        valid = ev_valid.reshape(-1)[flat]
+        slot = jnp.clip(ev_slot.reshape(-1)[flat], 0, spec.num_slots - 1)
+        tag = ev_tag.reshape(-1)[flat]
+        v64 = flat_vals[flat].astype(jnp.float64)
+        cur_it = iters[s_idx, slot]
+        active = cur_it >= 0
+        dom = active & (cur_it >= tag)
+        acc = valid & ~dom
+        rej = valid & dom
+        old = values[s_idx, slot]
+        delta = v64 - jnp.where(_bcast(active, vdim), old, 0.0)
+        sums = jnp.where(_bcast(acc, vdim), sums + delta, sums)
+        values = values.at[s_idx, slot].set(jnp.where(_bcast(acc, vdim), v64, old))
+        iters = iters.at[s_idx, slot].set(jnp.where(acc, tag, cur_it))
+        covered = covered + jnp.where(acc & ~active, slot_width[slot], 0)
+        rejected = rejected + rej.astype(rejected.dtype)
+        return sums, values, iters, covered, rejected
+
+    return jax.lax.fori_loop(
+        0, E_ev, rank_body, (sums, values, iters, covered, rejected)
+    )
+
+
+def _fresh_accumulate(kernels, fresh, finish, vals):
+    """gd/sgd: sum fresh values per scenario in event-time order."""
+    S, N = fresh.shape
+    vdim = len(kernels.value_shape)
+    order = jnp.argsort(jnp.where(fresh, finish, jnp.inf), axis=1, stable=True)
+    s_idx = jnp.arange(S)
+    flat_vals = vals.reshape((S * N,) + vals.shape[2:])
+    grad0 = jnp.zeros((S,) + kernels.value_shape, dtype=jnp.float64)
+
+    def rank_body(j, grad_acc):
+        e = order[:, j]
+        flat = s_idx * N + e
+        valid = fresh.reshape(-1)[flat]
+        v64 = flat_vals[flat].astype(jnp.float64)
+        return jnp.where(_bcast(valid, vdim), grad_acc + v64, grad_acc)
+
+    return jax.lax.fori_loop(0, N, rank_body, grad0)
+
+
+def _run_scan(
+    kernels: FusedKernels,
+    spec: _StaticSpec,
+    comm,
+    comp_unit,
+    slowdown,
+    burst_start,
+    burst_end,
+    burst_factor,
+    V0,
+    eval_mask,
+):
+    """The jitted driver: precompute static tables, scan the fused body."""
+    S, N, _K = comm.shape
+    T = spec.num_iterations
+    n = kernels.num_samples
+    vshape = kernels.value_shape
+    vdim = len(vshape)
+    base_start = jnp.asarray(spec.base_start, dtype=jnp.int64)
+    base_stop = jnp.asarray(spec.base_stop, dtype=jnp.int64)
+    n_local = base_stop - base_start + 1
+    sub_p = jnp.asarray(spec.sub_p, dtype=jnp.int64)
+    offsets = jnp.asarray(spec.slot_offsets, dtype=jnp.int64)
+    E = spec.num_slots
+    if spec.uses_cache:
+        # static slot universe: slot (i, k) -> interval width
+        sw = []
+        for i in range(N):
+            nl, p = spec.base_stop[i] - spec.base_start[i] + 1, spec.sub_p[i]
+            if spec.process_full:
+                sw.extend([nl] * p)
+            else:
+                sw.extend([k * nl // p - (k - 1) * nl // p for k in range(1, p + 1)])
+        slot_width = jnp.asarray(sw, dtype=jnp.int64)
+    else:
+        slot_width = jnp.zeros((0,), dtype=jnp.int64)
+
+    s_idx2 = jnp.arange(S)[:, None]
+    w_idx2 = jnp.arange(N)[None, :]
+
+    def burst_factor_at(start):
+        if burst_start.shape[2] == 0:
+            return jnp.ones_like(start)
+        tt = start[:, :, None]
+        active = (burst_start <= tt) & (tt < burst_end)
+        return jnp.where(active, burst_factor, 1.0).max(axis=2)
+
+    def body(carry, xs):
+        (
+            V,
+            free_at,
+            iter_end,
+            draw_idx,
+            sub_k,
+            flight_slot,
+            flight_titer,
+            flight_comp,
+            flight_comm,
+            flight_val,
+            cache_state,
+            lat_matrix,
+        ) = carry
+        t, do_eval = xs
+        assign = iter_end
+        idle = free_at <= assign[:, None]
+
+        if spec.process_full:
+            lo = jnp.broadcast_to(base_start, (S, N))
+            hi = jnp.broadcast_to(base_stop, (S, N))
+        else:
+            lo = base_start[None, :] + (sub_k - 1) * n_local[None, :] // sub_p[None, :]
+            hi = base_start[None, :] + sub_k * n_local[None, :] // sub_p[None, :] - 1
+        cost = (kernels.cost_per_row * (hi - lo + 1)) * spec.comp_scale
+
+        # -- §3 trace replay (THE shared latency expression) ----------------
+        start = jnp.where(idle, assign[:, None], free_at)
+        comm_d = jnp.take_along_axis(comm, draw_idx[:, :, None], axis=2)[:, :, 0]
+        unit = jnp.take_along_axis(comp_unit, draw_idx[:, :, None], axis=2)[:, :, 0]
+        comp_d = comp_latency_expr(
+            unit, cost, slowdown[None, :], burst_factor_at(start)
+        )
+
+        # -- event resolution (the shared method-semantics helpers) ---------
+        finish = task_finish_time(start, comp_d, comm_d)
+        tau_w = jnp.sort(finish, axis=1)[:, spec.w_wait - 1]
+        if spec.margin > 0.0:
+            deadline = margin_deadline(tau_w, assign, spec.margin)
+        else:
+            deadline = tau_w
+        started = idle | (free_at <= deadline[:, None])
+        fresh = started & (finish <= deadline[:, None])
+        stale_done = (~idle) & (free_at <= deadline[:, None])
+        fresh_cnt = fresh.sum(axis=1)
+        stale_ev = jnp.where(stale_done, free_at, -jnp.inf)
+        fresh_ev = jnp.where(fresh, finish, -jnp.inf)
+        iter_end_new = jnp.maximum(
+            jnp.maximum(stale_ev.max(axis=1), fresh_ev.max(axis=1)), tau_w
+        )
+
+        # -- latency attribution by the task's own iteration ----------------
+        titer_safe = jnp.clip(flight_titer, 0, T - 1)
+        cur = lat_matrix[s_idx2, titer_safe, w_idx2]
+        lat_matrix = lat_matrix.at[s_idx2, titer_safe, w_idx2].set(
+            jnp.where(stale_done, flight_comp + flight_comm, cur)
+        )
+        lat_matrix = lat_matrix.at[:, t, :].set(
+            jnp.where(fresh, comp_d + comm_d, lat_matrix[:, t, :])
+        )
+
+        # -- batched subgradients (skipped entirely for coded) --------------
+        if spec.name != "coded":
+            vals = _subgradients(kernels, spec, V, lo, hi)
+        else:
+            vals = None
+
+        # -- §5 cache / gradient accumulation -------------------------------
+        slot_cur = offsets[None, :] + sub_k - 1 if spec.uses_cache else None
+        if spec.uses_cache:
+            if spec.accepts_stale:  # dsag: stale half then fresh half
+                ev_valid = jnp.concatenate([stale_done, fresh], axis=1)
+                ev_time = jnp.concatenate([free_at, finish], axis=1)
+                ev_slot = jnp.concatenate([flight_slot, slot_cur], axis=1)
+                ev_tag = jnp.concatenate(
+                    [flight_titer, jnp.full((S, N), 1, jnp.int64) * t], axis=1
+                )
+                ev_vals = jnp.concatenate([flight_val, vals], axis=1)
+            else:  # sag: fresh results only
+                ev_valid, ev_time = fresh, finish
+                ev_slot = slot_cur
+                ev_tag = jnp.full((S, N), 1, jnp.int64) * t
+                ev_vals = vals
+            cache_state = _apply_cache_events(
+                spec, slot_width, cache_state, ev_valid, ev_time, ev_slot,
+                ev_tag, ev_vals,
+            )
+            sums, _, _, covered, _ = cache_state
+            xi = jnp.maximum(covered / n, 1e-12)
+            grad = sums / _bcast(xi, vdim) + kernels.regularizer_grad(V)
+        elif spec.name == "coded":
+            # idealized MDS bound: exact gradient at full-range width
+            g = kernels.sub_blocks(
+                V,
+                jnp.ones((S,), jnp.int64),
+                jnp.full((S,), n, jnp.int64),
+                n,
+            ).astype(jnp.float64)
+            grad = g + kernels.regularizer_grad(V)
+        elif spec.name == "gd":
+            grad = _fresh_accumulate(kernels, fresh, finish, vals) + (
+                kernels.regularizer_grad(V)
+            )
+        else:  # sgd: scale the partial sum by observed coverage
+            grad_acc = _fresh_accumulate(kernels, fresh, finish, vals)
+            covered_f = jnp.sum(jnp.where(fresh, hi - lo + 1, 0), axis=1)
+            xi = jnp.maximum(covered_f / n, 1e-12)
+            grad = grad_acc / _bcast(xi, vdim) + kernels.regularizer_grad(V)
+
+        # -- iterate update + suboptimality ---------------------------------
+        V_new = kernels.project((V - spec.eta * grad).astype(V.dtype))
+        subopt_t = jax.lax.cond(
+            do_eval,
+            lambda v: kernels.suboptimality(v),
+            lambda v: jnp.full((S,), jnp.nan, dtype=jnp.float64),
+            V_new,
+        )
+
+        # -- commit worker state for started tasks --------------------------
+        if not spec.process_full:
+            sub_k = jnp.where(started, sub_k % sub_p[None, :] + 1, sub_k)
+        free_at = jnp.where(started, finish, free_at)
+        draw_idx = draw_idx + started.astype(jnp.int64)
+        if spec.uses_cache:
+            flight_slot = jnp.where(started, slot_cur, flight_slot)
+        flight_titer = jnp.where(started, t, flight_titer)
+        flight_comp = jnp.where(started, comp_d, flight_comp)
+        flight_comm = jnp.where(started, comm_d, flight_comm)
+        if spec.accepts_stale:
+            flight_val = jnp.where(_bcast(started, vdim), vals, flight_val)
+
+        carry = (
+            V_new,
+            free_at,
+            iter_end_new,
+            draw_idx,
+            sub_k,
+            flight_slot,
+            flight_titer,
+            flight_comp,
+            flight_comm,
+            flight_val,
+            cache_state,
+            lat_matrix,
+        )
+        return carry, (iter_end_new, subopt_t, fresh_cnt)
+
+    val_dtype = jnp.dtype(kernels.value_dtype)
+    cache0 = (
+        jnp.zeros((S,) + vshape, dtype=jnp.float64),  # sums
+        jnp.zeros((S, max(E, 1)) + vshape, dtype=jnp.float64),  # values
+        jnp.full((S, max(E, 1)), -1, dtype=jnp.int64),  # iters
+        jnp.zeros((S,), dtype=jnp.int64),  # covered
+        jnp.zeros((S,), dtype=jnp.int64),  # rejected_stale
+    )
+    carry0 = (
+        V0,
+        jnp.zeros((S, N)),  # free_at
+        jnp.zeros((S,)),  # iter_end
+        jnp.zeros((S, N), dtype=jnp.int64),  # draw_idx
+        jnp.ones((S, N), dtype=jnp.int64),  # sub_k
+        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_slot
+        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_titer
+        jnp.zeros((S, N)),  # flight_comp
+        jnp.zeros((S, N)),  # flight_comm
+        jnp.zeros((S, N) + vshape, dtype=val_dtype),  # flight_val
+        cache0,
+        jnp.full((S, T, N), jnp.nan),  # lat_matrix
+    )
+    xs = (jnp.arange(T, dtype=jnp.int64), eval_mask)
+    carry, ys = jax.lax.scan(body, carry0, xs)
+    times, subopt, fresh_counts = ys
+    cache_state = carry[10]
+    return (
+        times.T,
+        subopt.T,
+        fresh_counts.T,
+        carry[11],  # lat_matrix
+        cache_state[4],  # rejected_stale
+    )
+
+
+def _scan_jit_for(kernels: FusedKernels):
+    """Per-kernels jitted driver.
+
+    The jit cache is owned by the kernels object rather than a module-level
+    callable: a module-level ``jax.jit`` would keep every problem's data
+    matrices (captured by the static ``kernels`` argument) alive for the
+    process lifetime; this way the compiled executables are garbage
+    collected with the problem.
+    """
+    jitted = getattr(kernels, "_scan_driver_jit", None)
+    if jitted is None:
+        jitted = jax.jit(_run_scan, static_argnums=(0, 1))
+        kernels._scan_driver_jit = jitted
+    return jitted
+
+
+def run_convergence_scan(
+    problem: FiniteSumProblem,
+    traces: FleetTraces,
+    config: MethodConfig,
+    num_iterations: int,
+    *,
+    cost_scale: float = 1.0,
+    eval_every: int = 1,
+    seed: int = 0,
+):
+    """Train ``config`` on every scenario of ``traces`` in one XLA dispatch.
+
+    Bit-exact against the host engine and the scalar simulator on the same
+    traces (see module docstring).  Raises for load-balanced configs.
+    """
+    from repro.experiments.convergence import ConvergenceBatchResult
+
+    if config.load_balance:
+        raise ValueError(
+            "the fused scan cannot run §6 load balancing (Algorithm 1 is "
+            "host code); use engine='host'"
+        )
+    S = traces.num_scenarios
+    T = num_iterations
+    if T > traces.horizon:
+        raise ValueError(
+            f"traces hold {traces.horizon} draws/worker but {T} iterations requested"
+        )
+    spec = _static_spec(problem, config, traces.num_workers, T, cost_scale)
+    kernels = problem.fused_kernels()
+    V0 = np.repeat(problem.init(seed)[None], S, axis=0)
+    eval_mask = np.zeros(T, dtype=bool)
+    eval_mask[::eval_every] = True
+    eval_mask[T - 1] = True
+    with enable_x64():
+        empty = jnp.zeros((S, traces.num_workers, 0))
+        has_b = traces.has_bursts
+        times, subopt, fresh, lat, rejected = _scan_jit_for(kernels)(
+            kernels,
+            spec,
+            jnp.asarray(traces.comm),
+            jnp.asarray(traces.comp_unit),
+            jnp.asarray(traces.slowdown),
+            jnp.asarray(traces.burst_start) if has_b else empty,
+            jnp.asarray(traces.burst_end) if has_b else empty,
+            jnp.asarray(traces.burst_factor) if has_b else empty,
+            jnp.asarray(V0),
+            jnp.asarray(eval_mask),
+        )
+    return ConvergenceBatchResult(
+        times=np.asarray(times),
+        suboptimality=np.asarray(subopt),
+        fresh_counts=np.asarray(fresh, dtype=np.int64),
+        per_worker_latency=np.asarray(lat),
+        repartition_events=[[] for _ in range(S)],
+        evictions=np.zeros(S, dtype=np.int64),
+        rejected_stale=np.asarray(rejected, dtype=np.int64),
+    )

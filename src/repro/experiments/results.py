@@ -214,6 +214,38 @@ def convergence_ordering(outcome, gap: float) -> Dict[str, float]:
     return out
 
 
+def convergence_payload(outcome, gap: float) -> dict:
+    """JSON-serializable summary of one convergence sweep (grid, per-method
+    time-to-gap columns, and the ordering verdict) — the building block of
+    ``BENCH_convergence.json``; extra workloads (e.g. the paper-scale PCA
+    column) nest their own payload beside the main one."""
+    methods = {}
+    for name, res in outcome.results.items():
+        ttg = res.time_to_gap(gap)
+        final_gap = res.suboptimality[:, -1]
+        methods[name] = {
+            "median_time_to_gap": float(np.median(ttg)),
+            "mean_total_time": float(res.times[:, -1].mean()),
+            "mean_final_gap": float(np.nanmean(final_gap)),
+            "mean_fresh": float(res.fresh_counts.mean()),
+            "w": outcome.methods[name].w,
+            "load_balance": bool(outcome.methods[name].load_balance),
+        }
+    return {
+        "grid": {
+            "n_workers": outcome.traces.num_workers,
+            "n_scenarios": outcome.traces.num_scenarios,
+            "num_iterations": outcome.num_iterations,
+            "problem": type(outcome.problem).__name__,
+            "num_samples": outcome.problem.num_samples,
+        },
+        "gap": gap,
+        "engine_seconds": outcome.engine_seconds,
+        "methods": methods,
+        "ordering": convergence_ordering(outcome, gap),
+    }
+
+
 def write_bench_convergence(
     outcome,
     path: str = "BENCH_convergence.json",
@@ -235,31 +267,7 @@ def write_bench_convergence(
     would be an apples-to-oranges ratio; record the like-for-like number via
     ``extra`` instead.
     """
-    methods = {}
-    for name, res in outcome.results.items():
-        ttg = res.time_to_gap(gap)
-        final_gap = res.suboptimality[:, -1]
-        methods[name] = {
-            "median_time_to_gap": float(np.median(ttg)),
-            "mean_total_time": float(res.times[:, -1].mean()),
-            "mean_final_gap": float(np.nanmean(final_gap)),
-            "mean_fresh": float(res.fresh_counts.mean()),
-            "w": outcome.methods[name].w,
-            "load_balance": bool(outcome.methods[name].load_balance),
-        }
-    payload = {
-        "grid": {
-            "n_workers": outcome.traces.num_workers,
-            "n_scenarios": outcome.traces.num_scenarios,
-            "num_iterations": outcome.num_iterations,
-            "problem": type(outcome.problem).__name__,
-            "num_samples": outcome.problem.num_samples,
-        },
-        "gap": gap,
-        "engine_seconds": outcome.engine_seconds,
-        "methods": methods,
-        "ordering": convergence_ordering(outcome, gap),
-    }
+    payload = convergence_payload(outcome, gap)
     if scalar_seconds is not None:
         payload["scalar_seconds"] = scalar_seconds
         if scalar_methods is None:

@@ -25,6 +25,18 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+def comp_latency_expr(comp_unit_draw, load, slowdown, factor):
+    """THE §3 computation-latency expression: ``unit * load * slowdown * factor``.
+
+    The multiplication order is load-bearing for bit-exact replay: every
+    consumer — :meth:`FleetTraces.task_latency_parts` (batched numpy),
+    :meth:`FleetTraces.scalar_task_latency` (scalar), and the fused-scan
+    body (:mod:`repro.experiments.fused`, jnp) — must evaluate it through
+    this one function so the grouping cannot drift.
+    """
+    return comp_unit_draw * load * slowdown * factor
+
+
 # ---------------------------------------------------------------------------
 # Gamma parameterisation
 # ---------------------------------------------------------------------------
@@ -358,11 +370,11 @@ class FleetTraces:
         n_idx = np.arange(N)[None, :]
         kk = k
         factor = self.burst_factor_at(start)
-        comp = (
-            self.comp_unit[s_idx, n_idx, kk]
-            * np.asarray(loads, dtype=np.float64)
-            * self.slowdown[None, :]
-            * factor
+        comp = comp_latency_expr(
+            self.comp_unit[s_idx, n_idx, kk],
+            np.asarray(loads, dtype=np.float64),
+            self.slowdown[None, :],
+            factor,
         )
         return self.comm[s_idx, n_idx, kk], comp
 
@@ -380,8 +392,8 @@ class FleetTraces:
         Every scalar consumer (``scalar_latency_provider``,
         ``TraceLatencySource``) must go through this method: replay
         bit-exactness depends on the multiplication order matching the
-        batched path, so the formula lives in exactly two places — here and
-        in :meth:`task_latency_parts` — kept textually parallel.
+        batched path, which is why the formula itself lives in exactly one
+        place (:func:`comp_latency_expr`).
 
         Raises when a worker's draw stream is exhausted; silently reusing
         the last draw would fake a deterministic worker.
@@ -392,11 +404,8 @@ class FleetTraces:
                 f"(horizon {self.horizon}); sample a longer fleet"
             )
         factor = self._scalar_burst_factor(scenario, worker, start)
-        comp = (
-            self.comp_unit[scenario, worker, k]
-            * load
-            * self.slowdown[worker]
-            * factor
+        comp = comp_latency_expr(
+            self.comp_unit[scenario, worker, k], load, self.slowdown[worker], factor
         )
         return self.comm[scenario, worker, k], comp
 

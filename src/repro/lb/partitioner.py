@@ -11,6 +11,17 @@ changes p -> p', find (k, k') such that the k'-th of p' partitions starts at
 the same sample as the k-th of p partitions, starting the search from the
 worker's next cyclic index so the first few subpartitions are not
 over-processed.  Termination is guaranteed because k = k' = 1 always aligns.
+
+Example — 10 samples, repartitioned 2 -> 5 after processing partition 1:
+
+>>> from repro.lb.partitioner import align_partitions, p_start, p_stop
+>>> p_start(10, 2, 2), p_stop(10, 2, 2)    # old partition 2 covers [6, 10]
+(6, 10)
+>>> k, k_new = align_partitions(10, 2, 5, 1)  # k=1 processed last
+>>> (k, k_new)
+(1, 1)
+>>> p_start(10, 5, k_new) == p_start(10, 2, k)  # boundaries align
+True
 """
 
 from __future__ import annotations

@@ -1,0 +1,46 @@
+"""The docs subsystem stays truthful: links resolve and examples execute.
+
+CI runs the same checks as a dedicated job (`docs` in
+``.github/workflows/ci.yml``); this tier-1 copy catches broken links and
+doctest rot locally before a push.
+"""
+
+import doctest
+import importlib
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+#: modules with executable docstring examples (mirrored in the CI docs job)
+DOCTEST_MODULES = ["repro.core.gradient_cache", "repro.lb.partitioner"]
+
+
+def test_docs_links_resolve():
+    sys.path.insert(0, str(REPO_ROOT / "docs"))
+    try:
+        check_docs = importlib.import_module("check_docs")
+    finally:
+        sys.path.pop(0)
+    errors = []
+    files = sorted((REPO_ROOT / "docs").glob("*.md")) + [REPO_ROOT / "README.md"]
+    assert len(files) >= 4  # ARCHITECTURE, BENCHMARKS, PAPER_MAP, README
+    for f in files:
+        errors.extend(check_docs.check_file(f, REPO_ROOT))
+    assert not errors, "\n".join(errors)
+
+
+def test_required_docs_exist():
+    for name in ("ARCHITECTURE.md", "PAPER_MAP.md", "BENCHMARKS.md"):
+        assert (REPO_ROOT / "docs" / name).is_file(), name
+    readme = (REPO_ROOT / "README.md").read_text()
+    for name in ("ARCHITECTURE.md", "PAPER_MAP.md", "BENCHMARKS.md"):
+        assert f"docs/{name}" in readme, f"README does not link docs/{name}"
+
+
+def test_doctest_modules_pass():
+    for modname in DOCTEST_MODULES:
+        mod = importlib.import_module(modname)
+        result = doctest.testmod(mod)
+        assert result.attempted > 0, f"{modname} lost its doctest examples"
+        assert result.failed == 0, f"{modname}: {result.failed} doctest failures"
