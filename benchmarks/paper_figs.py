@@ -309,6 +309,29 @@ def fig10_12_convergence_sweep() -> None:
     pca_payload = convergence_payload(pca_out, pca_gap)
 
     gap = 0.2
+    # §6 lb_scan column: DSAG with the load balancer in the loop, through
+    # the fused scan AND the host engine on the same traces — the fused LB
+    # path must stay bit-exact and (warm) faster, at unchanged orderings
+    import dataclasses as _dc
+
+    from benchmarks.bench_regression import run_lb_scan_column
+
+    lb_schedule = {"lb_startup_delay": 0.05, "lb_interval": 0.1}
+    base_medians = {
+        name: float(np.median(res.time_to_gap(gap)))
+        for name, res in out.results.items()
+    }
+    lb_payload = run_lb_scan_column(
+        prob,
+        out.traces,
+        _dc.replace(methods["dsag"], **lb_schedule),
+        num_iterations=60,
+        eval_every=5,
+        seed=0,
+        gap=gap,
+        base_medians=base_medians,
+    )
+
     payload = write_bench_convergence(
         out, "BENCH_convergence.json", gap=gap,
         scalar_seconds=extrapolated,
@@ -325,6 +348,24 @@ def fig10_12_convergence_sweep() -> None:
                 "speedup": extrapolated / max(batched_pair, 1e-12),
             },
             "pca_paper_scale": pca_payload,
+            "lb_scan": lb_payload,
+            # everything the regression gate needs to re-execute this grid
+            # (benchmarks/bench_regression.py rerun_convergence)
+            "recipe": {
+                "problem": "logreg_higgs",
+                "num_samples": 16384,
+                "n_workers": N,
+                "subpartitions": sp,
+                "w": 80,
+                "eta": 0.25,
+                "n_scenarios": 10,
+                "num_iterations": 60,
+                "eval_every": 5,
+                "regime": "heavy_bursts",
+                "seed": 0,
+                "gap": gap,
+                "lb": lb_schedule,
+            },
         },
     )
     o = payload["ordering"]
@@ -344,6 +385,14 @@ def fig10_12_convergence_sweep() -> None:
         f"sag_over_dsag={po['sag_over_dsag']:.2f};"
         f"coded_over_dsag={po['coded_over_dsag']:.2f};"
         f"ordering_dsag_sag_coded={bool(po['ordering_dsag_sag_coded'])}",
+    )
+    record(
+        "fig10_12_lb_scan",
+        lb_payload["scan_seconds"] * 1e6,
+        f"speedup_scan_over_host={lb_payload['speedup_scan_over_host']:.2f};"
+        f"bitexact={lb_payload['bitexact_scan_vs_host']};"
+        f"dsag_lb_fastest={bool(lb_payload['ordering'].get('dsag_lb_fastest_to_gap', 0))};"
+        f"repartitions_mean={lb_payload['repartitions_mean']:.1f}",
     )
 
 

@@ -76,7 +76,8 @@ def main() -> None:
                     "numpy-driven batched host loop")
     ap.add_argument("--load-balance", action="store_true",
                     help="run DSAG with the §6 load balancer in the loop "
-                    "(routes DSAG to the host engine)")
+                    "(runs inside the fused scan; oversized slot universes "
+                    "fall back to the host engine under --engine auto)")
     ap.add_argument("--out", default=None, help="write BENCH-style JSON here")
     ap.add_argument(
         "--check-scalar",

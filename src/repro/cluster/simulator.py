@@ -25,9 +25,9 @@ import numpy as np
 from repro.core.gradient_cache import GradientCache
 from repro.core.problems import FiniteSumProblem
 from repro.latency.model import ClusterLatencyModel, FleetTraces
-from repro.latency.profiler import LatencyProfiler, LatencySample
+from repro.latency.profiler import LatencyProfiler, LatencySample, MomentBuffer
 from repro.lb.optimizer import LoadBalanceOptimizer, OptimizerInputs
-from repro.lb.partitioner import Subpartitioner, p_start, p_stop
+from repro.lb.partitioner import Subpartitioner, build_p_ladder, p_start, p_stop
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +60,17 @@ def effective_w(config: "MethodConfig", num_workers: int) -> int:
     if config.name == "coded":
         return int(math.ceil(config.code_rate * num_workers))
     return min(config.w if config.w > 0 else num_workers, num_workers)
+
+
+def lb_ladder_for(config: "MethodConfig", n_local) -> tuple:
+    """The §6 p-ladder of a run: every engine must climb the same rungs.
+
+    Built from the configured initial subpartition count and the largest
+    per-worker sample count; the scalar simulator, the batched host
+    engine, and the fused scan all construct their optimizer (and, for the
+    scan, the pre-allocated cache slot universe) from this one function.
+    """
+    return build_p_ladder(max(int(config.subpartitions), 1), int(np.max(n_local)))
 
 
 def make_optimizer_inputs(
@@ -304,8 +315,15 @@ class TrainingSimulator:
             for i in range(N)
         ]
         self.profiler = LatencyProfiler(N, window=10.0)
-        self.lb_optimizer = LoadBalanceOptimizer(seed=seed) if config.load_balance else None
+        if config.load_balance:
+            n_local = np.array([w.sub.n_local for w in self.workers])
+            self.lb_optimizer = LoadBalanceOptimizer(
+                seed=seed, ladder=lb_ladder_for(config, n_local)
+            )
+        else:
+            self.lb_optimizer = None
         self._next_lb_time = config.lb_startup_delay if config.load_balance else math.inf
+        self._lb_buffer: Optional[MomentBuffer] = None  # allocated per run()
 
     # -- per-method gradient-estimate assembly -----------------------------
     def _effective_w(self) -> int:
@@ -329,6 +347,9 @@ class TrainingSimulator:
             else None
         )
 
+        self._lb_buffer = (
+            MomentBuffer(1, N, num_iterations) if cfg.load_balance else None
+        )
         now = 0.0
         heap: List[Tuple[float, int, Tuple]] = []  # (finish, seq, result)
         seq = 0
@@ -382,6 +403,13 @@ class TrainingSimulator:
                         load=problem.compute_cost(*interval) * comp_scale,
                     )
                 )
+                if self._lb_buffer is not None:
+                    # task-slot twin of the sample above: the §6 optimizer
+                    # reads its moments from here via the shared jittable
+                    # kernel (same slots in every engine)
+                    self._lb_buffer.record(
+                        0, widx, titer, now, now - assigned_at, comp_lat
+                    )
                 # start queued task immediately (FILO queue of length 1)
                 if wk.queued is not None:
                     qt = wk.queued
@@ -462,23 +490,31 @@ class TrainingSimulator:
     def _run_load_balancer(
         self, now: float, current_p: np.ndarray, w_wait: int
     ) -> Optional[np.ndarray]:
-        moments = self.profiler.moment_arrays(now)
-        if moments is None:
+        e_comm, v_comm, e_comp, v_comp, cnt = self._lb_buffer.moments(
+            np.array([now])
+        )
+        if (cnt[0] < 1).any():
             return None  # need at least one window sample per worker
         n_i = np.array([w.sub.n_local for w in self.workers], dtype=np.float64)
         inputs = make_optimizer_inputs(
-            moments.e_comm,
-            moments.v_comm,
-            moments.e_comp,
-            moments.v_comp,
+            e_comm[0],
+            v_comm[0],
+            e_comp[0],
+            v_comp[0],
             n_i,
             w_wait,
             self.config.margin,
         )
-        p_new = self.lb_optimizer.optimize(current_p, inputs)
-        if not self.lb_optimizer.should_publish(current_p, p_new, inputs):
+        lb = self.lb_optimizer
+        hm = np.array([np.nan if lb.h_min is None else lb.h_min])
+        p_new, h_min, last_h, publish = lb.update_batch(
+            np.asarray(current_p, np.int64)[None, :], inputs.as_batch(), hm
+        )
+        lb.h_min = float(h_min[0])
+        lb.last_h = float(last_h[0])
+        if not publish[0]:
             return None
         for i, wk in enumerate(self.workers):
-            if p_new[i] != current_p[i]:
-                wk.pending_p = int(p_new[i])
-        return p_new
+            if p_new[0, i] != current_p[i]:
+                wk.pending_p = int(p_new[0, i])
+        return p_new[0]

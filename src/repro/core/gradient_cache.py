@@ -67,6 +67,96 @@ def scenario_ranks(ev_s: np.ndarray) -> np.ndarray:
     return ranks
 
 
+@dataclasses.dataclass(frozen=True)
+class SlotUniverse:
+    """The pre-allocated interval universe of a fused §6 run.
+
+    With Algorithm 1 restricted to the p-ladder
+    (:func:`repro.lb.partitioner.build_p_ladder`), the set of intervals a
+    repartition can ever produce is finite and known before the run:
+    every (worker, ladder entry, cyclic index) triple.  The fused scan
+    keeps its per-scenario cache state dense over these ``E`` slots, so a
+    §6 repartition flips masks over static shapes instead of growing the
+    slot table mid-scan — the memory trade-off is ``E ≈ N * sum(ladder)``
+    value buffers up front (documented in docs/ARCHITECTURE.md).
+
+    ``slot_table[i, l, k-1]`` maps worker ``i``'s k-th subpartition at
+    ladder entry ``l`` to its slot; ``overlap_idx[e]`` lists the other
+    slots of the same worker whose intervals intersect slot ``e``'s,
+    sorted by interval start and padded with -1 — the static form of the
+    scalar cache's sorted eviction walk.
+    """
+
+    starts: np.ndarray  # [E] 1-based inclusive
+    stops: np.ndarray  # [E]
+    widths: np.ndarray  # [E]
+    slot_table: np.ndarray  # [N, L, Pmax] int64, -1 where k > p
+    overlap_idx: np.ndarray  # [E, Omax] int64, -1 padding
+
+    @property
+    def num_slots(self) -> int:
+        return int(self.starts.size)
+
+
+def build_slot_universe(
+    base_start, base_stop, ladder: Tuple[int, ...]
+) -> SlotUniverse:
+    """Enumerate the p-ladder's reachable intervals (see :class:`SlotUniverse`)."""
+    from repro.lb.partitioner import p_start, p_stop
+
+    base_start = np.asarray(base_start, dtype=np.int64)
+    base_stop = np.asarray(base_stop, dtype=np.int64)
+    N, L = base_start.size, len(ladder)
+    n_local = base_stop - base_start + 1
+    pmax = int(min(max(ladder), int(n_local.max())))
+    slot_of: dict = {}
+    starts: List[int] = []
+    stops: List[int] = []
+    owner: List[int] = []
+    slot_table = np.full((N, L, pmax), -1, dtype=np.int64)
+    for i in range(N):
+        nl = int(n_local[i])
+        for li, raw in enumerate(ladder):
+            p = min(int(raw), nl)
+            for k in range(1, p + 1):
+                lo = int(base_start[i]) + p_start(nl, p, k) - 1
+                hi = int(base_start[i]) + p_stop(nl, p, k) - 1
+                slot = slot_of.get((lo, hi))
+                if slot is None:
+                    slot = len(starts)
+                    slot_of[(lo, hi)] = slot
+                    starts.append(lo)
+                    stops.append(hi)
+                    owner.append(i)
+                slot_table[i, li, k - 1] = slot
+    starts_a = np.asarray(starts, dtype=np.int64)
+    stops_a = np.asarray(stops, dtype=np.int64)
+    owner_a = np.asarray(owner, dtype=np.int64)
+    E = starts_a.size
+    per_slot: List[np.ndarray] = [np.empty(0, np.int64)] * E
+    omax = 1
+    for i in range(N):
+        sl = np.flatnonzero(owner_a == i)
+        a, b = starts_a[sl], stops_a[sl]
+        inter = (a[:, None] <= b[None, :]) & (a[None, :] <= b[:, None])
+        np.fill_diagonal(inter, False)
+        for row, sid in enumerate(sl):
+            ov = sl[inter[row]]
+            ov = ov[np.argsort(starts_a[ov], kind="stable")]
+            per_slot[int(sid)] = ov
+            omax = max(omax, ov.size)
+    overlap_idx = np.full((E, omax), -1, dtype=np.int64)
+    for e, ov in enumerate(per_slot):
+        overlap_idx[e, : ov.size] = ov
+    return SlotUniverse(
+        starts=starts_a,
+        stops=stops_a,
+        widths=stops_a - starts_a + 1,
+        slot_table=slot_table,
+        overlap_idx=overlap_idx,
+    )
+
+
 @dataclasses.dataclass
 class CacheEntry:
     start: int  # i (inclusive, 1-based)

@@ -46,6 +46,7 @@ from repro.cluster.simulator import (
     TraceLatencySource,
     TrainingSimulator,
     effective_w,
+    lb_ladder_for,
     make_optimizer_inputs,
     margin_deadline,
     task_finish_time,
@@ -53,7 +54,7 @@ from repro.cluster.simulator import (
 from repro.core.gradient_cache import BatchedGradientCache, scenario_ranks
 from repro.core.problems import FiniteSumProblem
 from repro.latency.model import ClusterLatencyModel, FleetTraces, sample_fleet
-from repro.latency.profiler import LatencyProfiler
+from repro.latency.profiler import MomentBuffer
 from repro.lb.optimizer import LoadBalanceOptimizer
 from repro.lb.partitioner import _align, p_start, p_stop
 
@@ -125,22 +126,28 @@ def run_convergence_batch(
     * ``"scan"`` — the fused ``jax.lax.scan`` engine
       (:func:`repro.experiments.fused.run_convergence_scan`): the whole
       iteration body (event algebra, subgradients, cache scatter, iterate
-      update, suboptimality) is one jittable function scanned over
-      iterations.  Load-balanced configs are rejected (§6 Algorithm 1 is
-      host code).
+      update, suboptimality, and the §6 load balancer with its
+      pre-allocated slot universe) is one jittable function scanned over
+      iterations.  Raises ``ValueError`` for the one unsupported case —
+      a §6 slot universe above ``fused.LB_MAX_SLOTS``.
     * ``"host"`` — the numpy-driven batched loop below (one Python
-      iteration per training iteration, batched kernels inside).  Required
-      for ``config.load_balance``.
-    * ``"auto"`` (default) — ``"scan"`` unless the config load-balances.
+      iteration per training iteration, batched kernels inside).
+    * ``"auto"`` (default) — ``"scan"``, except for the documented
+      slot-universe escape hatch
+      (:func:`repro.experiments.fused.scan_unsupported_reason`), which
+      routes to ``"host"``.
 
     All engines are bit-exact against each other and against the scalar
     simulator (pinned by ``tests/test_convergence.py`` /
-    ``tests/test_fused.py``).
+    ``tests/test_fused.py`` / ``tests/test_lb_scan.py``).
     """
     if engine not in ("auto", "scan", "host"):
         raise ValueError(f"unknown engine {engine!r}")
     if engine == "auto":
-        engine = "host" if config.load_balance else "scan"
+        from repro.experiments.fused import scan_unsupported_reason
+
+        reason = scan_unsupported_reason(problem, config, traces.num_workers)
+        engine = "host" if reason else "scan"
     if engine == "scan":
         from repro.experiments.fused import run_convergence_scan
 
@@ -200,7 +207,6 @@ def run_convergence_batch(
     flight_comp = np.zeros((S, N))
     flight_comm = np.zeros((S, N))
     flight_assigned = np.zeros((S, N))
-    flight_cost = np.zeros((S, N))
 
     times = np.zeros((S, T))
     subopt = np.full((S, T), np.nan)
@@ -209,12 +215,12 @@ def run_convergence_batch(
     repartition_events: List[List[float]] = [[] for _ in range(S)]
 
     needs_values = cfg.name in ("gd", "sgd", "sag", "dsag")
-    profilers = (
-        [LatencyProfiler(N, window=10.0) for _ in range(S)]
+    lbbuf = MomentBuffer(S, N, T) if cfg.load_balance else None
+    lb = (
+        LoadBalanceOptimizer(seed=seed, ladder=lb_ladder_for(cfg, n_local))
         if cfg.load_balance
         else None
     )
-    lb = LoadBalanceOptimizer(seed=seed) if cfg.load_balance else None
     h_min = np.full(S, np.nan)
     next_lb = np.full(S, cfg.lb_startup_delay if cfg.load_balance else np.inf)
     current_p = np.full((S, N), cfg.subpartitions, dtype=np.int64)
@@ -278,25 +284,26 @@ def run_convergence_batch(
         )
         lat_matrix[f_s, t, f_w] = comp_d[f_s, f_w] + comm_d[f_s, f_w]
 
-        # -- §6.1 profiler feed (before flight state is overwritten) -------
+        # -- §6.1 profiler feed (before flight state is overwritten): one
+        # task-slot sample per observed completion, read back through the
+        # shared jittable window-moments kernel -----------------------------
         if cfg.load_balance:
-            rec_s = np.concatenate([st_s, f_s])
-            rec_w = np.concatenate([st_w, f_w])
-            rec_t = np.concatenate([free_at[st_s, st_w], finish[f_s, f_w]])
-            rec_rt = np.concatenate(
-                [
-                    free_at[st_s, st_w] - flight_assigned[st_s, st_w],
-                    finish[f_s, f_w] - assign[f_s],
-                ]
+            lbbuf.record(
+                st_s,
+                st_w,
+                flight_titer[st_s, st_w],
+                free_at[st_s, st_w],
+                free_at[st_s, st_w] - flight_assigned[st_s, st_w],
+                flight_comp[st_s, st_w],
             )
-            rec_comp = np.concatenate([flight_comp[st_s, st_w], comp_d[f_s, f_w]])
-            rec_load = np.concatenate([flight_cost[st_s, st_w], cost[f_s, f_w]])
-            for s in range(S):
-                m = rec_s == s
-                if m.any():
-                    profilers[s].record_batch(
-                        rec_w[m], rec_t[m], rec_rt[m], rec_comp[m], rec_load[m]
-                    )
+            lbbuf.record(
+                f_s,
+                f_w,
+                np.full(f_s.size, t, np.int64),
+                finish[f_s, f_w],
+                finish[f_s, f_w] - assign[f_s],
+                comp_d[f_s, f_w],
+            )
 
         # -- batched subgradient evaluation --------------------------------
         # dsag integrates stale results, so every started task's value is
@@ -383,7 +390,6 @@ def run_convergence_batch(
         flight_comp = np.where(started, comp_d, flight_comp)
         flight_comm = np.where(started, comm_d, flight_comm)
         flight_assigned = np.where(started, assign[:, None], flight_assigned)
-        flight_cost = np.where(started, cost, flight_cost)
         if cfg.name == "dsag" and vals is not None:
             if flight_val is None:
                 flight_val = np.zeros((S, N) + vshape, dtype=vals.dtype)
@@ -413,35 +419,26 @@ def run_convergence_batch(
 
         # -- load balancing (batched §6 background loop) --------------------
         if cfg.load_balance:
-            due = np.flatnonzero(iter_end >= next_lb)
-            ready: List[int] = []
-            moments = []
-            for s in due:
-                mom = profilers[s].moment_arrays(float(iter_end[s]))
-                next_lb[s] = iter_end[s] + cfg.lb_interval
-                if mom is not None:
-                    ready.append(s)
-                    moments.append(mom)
-            if ready:
-                ridx = np.asarray(ready)
-                inputs = make_optimizer_inputs(
-                    np.stack([m.e_comm for m in moments]),
-                    np.stack([m.v_comm for m in moments]),
-                    np.stack([m.e_comp for m in moments]),
-                    np.stack([m.v_comp for m in moments]),
-                    np.broadcast_to(n_i, (len(ready), N)),
-                    w_wait,
-                    cfg.margin,
-                )
-                p_cur = current_p[ridx]
-                p_new, h_min_out, _ = lb.optimize_batch(p_cur, inputs, h_min[ridx])
-                h_min[ridx] = h_min_out
-                publish = lb.should_publish_batch(p_cur, p_new, inputs)
-                for row, s in enumerate(ready):
-                    if publish[row]:
-                        changed = p_new[row] != current_p[s]
-                        pending_p[s, changed] = p_new[row, changed]
-                        current_p[s] = p_new[row]
+            due = iter_end >= next_lb
+            if due.any():
+                e_cm, v_cm, e_cp, v_cp, cnt = lbbuf.moments(iter_end)
+                ready = (cnt >= 1).all(axis=1)
+                next_lb = np.where(due, iter_end + cfg.lb_interval, next_lb)
+                act = due & ready
+                if act.any():
+                    inputs = make_optimizer_inputs(
+                        e_cm, v_cm, e_cp, v_cp,
+                        np.broadcast_to(n_i, (S, N)),
+                        w_wait,
+                        cfg.margin,
+                    )
+                    p_new, h_min, _, publish = lb.update_batch(
+                        current_p, inputs, h_min, active=act
+                    )
+                    for s in np.flatnonzero(publish):
+                        changed = p_new[s] != current_p[s]
+                        pending_p[s, changed] = p_new[s, changed]
+                        current_p[s] = p_new[s]
                         repartition_events[s].append(float(iter_end[s]))
 
     return ConvergenceBatchResult(

@@ -29,16 +29,24 @@ trace.  Three ingredients make that possible:
   masked scatter, sequenced per scenario in event-time order by an inner
   ``fori_loop`` (float accumulation order preserved).
 
-Load-balanced configs are rejected: §6 Algorithm 1 (profiler moments +
-hill-climbing) is host code, and a repartition would grow the slot
-universe mid-scan.  ``run_convergence_batch`` routes those to the host
-engine, which shares all the kernels above.
+§6 load-balanced configs run inside the scan too (``_run_scan_lb``): the
+carry additionally holds the profiler's task-slot sample buffers, the
+per-worker ladder index of the current subpartition count, the optimizer's
+``h_min``/schedule state, and pending repartitions; Algorithm 1 itself is
+the jittable :mod:`repro.lb.jit_optimizer` (the same traceable functions
+the host optimizer jits), and the cache's slot universe is pre-allocated
+over every interval the p-ladder can reach
+(:func:`repro.core.gradient_cache.build_slot_universe`), so a repartition
+is a mask flip over static shapes.  The one genuinely unsupported case —
+a slot universe larger than :data:`LB_MAX_SLOTS` — raises a
+``ValueError`` here; ``engine="auto"`` routes only that case to the host
+engine (the documented escape hatch).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,12 +56,20 @@ from jax.experimental import enable_x64
 from repro.cluster.simulator import (
     MethodConfig,
     effective_w,
+    lb_ladder_for,
     margin_deadline,
     task_finish_time,
 )
+from repro.core.gradient_cache import SlotUniverse, build_slot_universe
 from repro.core.problems import FiniteSumProblem, FusedKernels, width_bucket
 from repro.latency.model import FleetTraces, comp_latency_expr
+from repro.lb import jit_optimizer as jlb
 from repro.lb.partitioner import p_start, p_stop
+
+#: ceiling on the pre-allocated §6 slot universe (per-slot float64 value
+#: buffers are the fused engine's memory trade-off); configs above it are
+#: the documented host-engine escape hatch of ``engine="auto"``
+LB_MAX_SLOTS = 250_000
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +91,13 @@ class _StaticSpec:
     buckets: Tuple[int, ...]  # static width_bucket ladder, ascending
     slot_offsets: Tuple[int, ...]  # per-worker first slot (cache methods)
     num_slots: int
+    # §6 load balancing (empty/zero for non-LB specs)
+    load_balance: bool = False
+    ladder: Tuple[int, ...] = ()  # the p-ladder Algorithm 1 climbs
+    lb_interval: float = 0.0
+    lb_startup_delay: float = 0.0
+    lb_margin: float = 0.0  # optimizer-input margin (= config.margin)
+    lb_p0: int = 0  # the optimizer-facing initial p (config.subpartitions)
 
 
 def _possible_widths(n_local: int, p: int, full: bool) -> set:
@@ -89,6 +112,7 @@ def _static_spec(
     num_workers: int,
     num_iterations: int,
     cost_scale: float,
+    universe: Optional[SlotUniverse] = None,
 ) -> _StaticSpec:
     n = problem.num_samples
     N = num_workers
@@ -101,11 +125,25 @@ def _static_spec(
     widths = set()
     for nl, p in zip(n_local, sub_p):
         widths |= _possible_widths(nl, p, process_full)
+    ladder: Tuple[int, ...] = ()
+    if cfg.load_balance:
+        ladder = lb_ladder_for(cfg, np.asarray(n_local))
+        if not process_full:
+            # any ladder interval's width can appear once repartitions start
+            for a, b in zip(base_start, base_stop):
+                nl = b - a + 1
+                for raw in ladder:
+                    widths |= _possible_widths(nl, min(raw, nl), False)
     buckets = tuple(sorted({width_bucket(m, n) for m in widths}))
     if cfg.uses_cache:
-        offsets = np.concatenate([[0], np.cumsum(sub_p)])
-        slot_offsets = tuple(int(o) for o in offsets[:-1])
-        num_slots = int(offsets[-1])
+        if cfg.load_balance:
+            assert universe is not None
+            slot_offsets = (0,) * N  # slots come from the universe table
+            num_slots = universe.num_slots
+        else:
+            offsets = np.concatenate([[0], np.cumsum(sub_p)])
+            slot_offsets = tuple(int(o) for o in offsets[:-1])
+            num_slots = int(offsets[-1])
     else:
         slot_offsets = (0,) * N
         num_slots = 0
@@ -128,6 +166,12 @@ def _static_spec(
         buckets=buckets,
         slot_offsets=slot_offsets,
         num_slots=num_slots,
+        load_balance=bool(cfg.load_balance),
+        ladder=ladder,
+        lb_interval=float(cfg.lb_interval),
+        lb_startup_delay=float(cfg.lb_startup_delay),
+        lb_margin=float(cfg.margin),
+        lb_p0=int(cfg.subpartitions),
     )
 
 
@@ -221,6 +265,141 @@ def _apply_cache_events(
     return jax.lax.fori_loop(
         0, E_ev, rank_body, (sums, values, iters, covered, rejected)
     )
+
+
+def _apply_cache_events_lb(
+    spec: _StaticSpec,
+    slot_width,
+    overlap_idx,
+    cache_state,
+    ev_valid,
+    ev_time,
+    ev_slot,
+    ev_tag,
+    ev_vals,
+):
+    """The full §5 update over the pre-allocated §6 slot universe.
+
+    Like :func:`_apply_cache_events`, but once repartitions are possible an
+    event's interval can overlap *other* active slots.  ``overlap_idx[e]``
+    statically lists the same-worker slots intersecting slot ``e``
+    (sorted by interval start, -1 padded); per event rank the update is
+    the scalar cache's walk verbatim: staleness dominance over all active
+    overlaps, sequential eviction subtraction in start order (a masked
+    ``fori_loop``, preserving the scalar float grouping), then the insert
+    — the SAG-style in-place delta when the event's own slot is active
+    (disjointness makes it the only possible overlap), a plain add
+    otherwise.  Also maintains the eviction counter the host caches track.
+
+    Performance shape (load-bearing — the first implementation was ~100x
+    slower than the host engine): inside the rank loop the big ``[S, E,
+    ...]`` value table is **write-only**.  Reading it there (for eviction
+    subtraction or the in-place delta) defeats XLA's in-place aliasing of
+    the loop carry under ``lax.scan`` and copies the whole table once per
+    event rank (~minutes per 100-worker run); ``lax.cond`` is no escape
+    (~9 ms per rank on the CPU thunk runtime).  Instead, the live value
+    of any slot is *reconstructed* from small read-only buffers: ``wmap``
+    maps each slot to the rank of its last accepted write this iteration
+    (so the value is a row of the ranked event table), and slots not yet
+    written this iteration read from ``values0``, the frozen loop-entry
+    buffer — one table copy per iteration instead of one per rank.  Both
+    sources hold bit-identical float64 values to what the table itself
+    would return.  The rank loop and the eviction sub-loop run to
+    *dynamic* trip counts (deepest valid rank / last evicted overlap), so
+    empty ranks and the no-eviction common case cost nothing.
+    """
+    sums, values, iters, covered, rejected, evictions = cache_state
+    S, E_ev = ev_time.shape
+    E = spec.num_slots
+    Omax = overlap_idx.shape[1]
+    vdim = values.ndim - 2
+    order = jnp.argsort(jnp.where(ev_valid, ev_time, jnp.inf), axis=1, stable=True)
+    s_idx = jnp.arange(S)
+    # event tables in rank order: one gather each, outside the rank loop
+    valid_r = jnp.take_along_axis(ev_valid, order, axis=1)
+    slot_r = jnp.clip(jnp.take_along_axis(ev_slot, order, axis=1), 0, E - 1)
+    tag_r = jnp.take_along_axis(ev_tag, order, axis=1)
+    vals_r = jnp.take_along_axis(
+        ev_vals, order.reshape(order.shape + (1,) * vdim), axis=1
+    ).astype(jnp.float64)
+    values0 = values  # frozen pre-iteration table (read-only below)
+    wmap0 = jnp.full((S, E), -1, jnp.int32)
+    # ranks beyond every scenario's valid events are exact no-ops: skip
+    n_ranks = jnp.max(jnp.sum(valid_r, axis=1))
+
+    def rank_body(j, state):
+        sums, values, iters, covered, rejected, evictions, wmap = state
+        valid = valid_r[:, j]
+        slot = slot_r[:, j]
+        tag = tag_r[:, j]
+        v64 = vals_r[:, j]
+        ov = overlap_idx[slot]  # [S, Omax]
+        ov_safe = jnp.clip(ov, 0, E - 1)
+        ov_iters = iters[s_idx[:, None], ov_safe]
+        ov_active = (ov >= 0) & (ov_iters >= 0)
+        own_it = iters[s_idx, slot]
+        own_active = own_it >= 0
+        # staleness dominance over every active overlapping entry
+        dom = (own_active & (own_it >= tag)) | jnp.any(
+            ov_active & (ov_iters >= tag[:, None]), axis=1
+        )
+        acc = valid & ~dom
+        rej = valid & dom
+        evict = ov_active & acc[:, None]
+        # live values of the overlap candidates, reconstructed (see above)
+        widx = wmap[s_idx[:, None], ov_safe]  # [S, Omax]
+        v_new = vals_r[s_idx[:, None], jnp.clip(widx, 0, E_ev - 1)]
+        v_old = values0[s_idx[:, None], ov_safe]
+        v_sub = jnp.where(_bcast(widx >= 0, vdim), v_new, v_old)
+
+        def sub_body(o, acc_sm):
+            return jnp.where(
+                _bcast(evict[:, o], vdim), acc_sm - v_sub[:, o], acc_sm
+            )
+
+        # masked sequential subtraction in start order (overlap lists are
+        # pre-sorted); trip count = last evicted overlap, usually 0
+        n_sub = jnp.max(jnp.where(evict, jnp.arange(Omax) + 1, 0))
+        sums = jax.lax.fori_loop(0, n_sub, sub_body, sums)
+        # deactivate evicted slots via an O(S*Omax) scatter-min: evicted
+        # slots get -1, padding writes a huge sentinel (a no-op under
+        # min), so duplicate indices from the -1 padding clip cannot
+        # corrupt real slots
+        upd = jnp.where(evict, jnp.int64(-1), jnp.iinfo(jnp.int64).max)
+        iters = iters.at[s_idx[:, None], ov_safe].min(upd)
+        removed = jnp.sum(jnp.where(evict, slot_width[ov_safe], 0), axis=1)
+        evictions = evictions + jnp.sum(evict, axis=1)
+        # insert: exact-active match -> in-place delta (degrades to SAG);
+        # otherwise v - 0.0 == v, the scalar slow path's plain add.  The
+        # old value is reconstructed, never read from the live table.
+        own_wi = wmap[s_idx, slot]
+        own_live = jnp.where(
+            _bcast(own_wi >= 0, vdim),
+            vals_r[s_idx, jnp.clip(own_wi, 0, E_ev - 1)],
+            values0[s_idx, slot],
+        )
+        delta = v64 - jnp.where(_bcast(own_active, vdim), own_live, 0.0)
+        sums = jnp.where(_bcast(acc, vdim), sums + delta, sums)
+        values = values.at[s_idx, slot].set(
+            jnp.where(_bcast(acc, vdim), v64, own_live)
+        )
+        # the event's own slot is never in its own overlap list, so the
+        # scatter-min above cannot have touched own_it
+        iters = iters.at[s_idx, slot].set(jnp.where(acc, tag, own_it))
+        wmap = wmap.at[s_idx, slot].set(jnp.where(acc, jnp.int32(j), own_wi))
+        covered = covered + jnp.where(
+            acc, jnp.where(own_active, 0, slot_width[slot]) - removed, 0
+        )
+        rejected = rejected + rej.astype(rejected.dtype)
+        return sums, values, iters, covered, rejected, evictions, wmap
+
+    out = jax.lax.fori_loop(
+        0,
+        n_ranks,
+        rank_body,
+        (sums, values, iters, covered, rejected, evictions, wmap0),
+    )
+    return out[:6]
 
 
 def _fresh_accumulate(kernels, fresh, finish, vals):
@@ -323,6 +502,15 @@ def _run_scan(
         comp_d = comp_latency_expr(
             unit, cost, slowdown[None, :], burst_factor_at(start)
         )
+        # finalize the §3 product before the event algebra consumes it: the
+        # LLVM backend otherwise contracts the last multiply into the
+        # task_finish_time add as an FMA (skipping the intermediate
+        # rounding the host engine's numpy performs), which changes the
+        # final ULP whenever slowdown/burst factors are not exactly 1.0.
+        # max(x, 0) is exact for the positive latencies and is a pattern
+        # the contraction cannot see through (lax.optimization_barrier is
+        # erased before LLVM and does NOT prevent this).
+        comp_d = jnp.maximum(comp_d, 0.0)
 
         # -- event resolution (the shared method-semantics helpers) ---------
         finish = task_finish_time(start, comp_d, comm_d)
@@ -472,7 +660,389 @@ def _run_scan(
     )
 
 
-def _scan_jit_for(kernels: FusedKernels):
+def _run_scan_lb(
+    kernels: FusedKernels,
+    spec: _StaticSpec,
+    slot_table,
+    slot_width,
+    overlap_idx,
+    comm,
+    comp_unit,
+    slowdown,
+    burst_start,
+    burst_end,
+    burst_factor,
+    V0,
+    eval_mask,
+    lb_key,
+):
+    """The jitted driver for §6 load-balanced configs.
+
+    The :func:`_run_scan` body plus the load-balancer in the carry:
+    task-slot profiler buffers, ladder indices of each worker's current
+    subpartition count, pending/published p vectors, ``h_min`` and the
+    publication schedule.  Algorithm 1 runs inside the scan via
+    :mod:`repro.lb.jit_optimizer` (behind ``lax.cond`` so iterations with
+    no due scenario skip it), repartitions resolve with the vectorized
+    Algorithm-2 walk, and cache slots come from the pre-allocated ladder
+    universe (``slot_table``), so every shape stays static.
+    """
+    S, N, _K = comm.shape
+    T = spec.num_iterations
+    n = kernels.num_samples
+    vshape = kernels.value_shape
+    vdim = len(vshape)
+    base_start = jnp.asarray(spec.base_start, dtype=jnp.int64)
+    base_stop = jnp.asarray(spec.base_stop, dtype=jnp.int64)
+    n_local = base_stop - base_start + 1
+    E = max(spec.num_slots, 1)
+    L = len(spec.ladder)
+    raw = jnp.asarray(spec.ladder, dtype=jnp.int64)
+    # per-worker effective ladder (int twin of jlb.ladder_tables)
+    eff = jnp.minimum(raw[None, :], n_local[:, None])  # [N, L]
+    idx_cap = jnp.minimum(jnp.sum(raw[None, :] < n_local[:, None], axis=1), L - 1)
+    n_j_b = jnp.broadcast_to(n_local.astype(jnp.float64), (S, N))
+
+    s_idx2 = jnp.arange(S)[:, None]
+    w_idx2 = jnp.arange(N)[None, :]
+
+    def snap_int(p_vals):
+        """Ladder index of exact-member p values ([S, N] int)."""
+        cnt = jnp.sum(eff[None, :, :] <= p_vals[:, :, None], axis=-1)
+        return jnp.clip(cnt - 1, 0, idx_cap[None, :])
+
+    def burst_factor_at(start):
+        if burst_start.shape[2] == 0:
+            return jnp.ones_like(start)
+        tt = start[:, :, None]
+        active = (burst_start <= tt) & (tt < burst_end)
+        return jnp.where(active, burst_factor, 1.0).max(axis=2)
+
+    def body(carry, xs):
+        (
+            V,
+            free_at,
+            iter_end,
+            draw_idx,
+            sub_idx,
+            sub_k,
+            pending_p,
+            current_p,
+            h_min,
+            next_lb,
+            flight_slot,
+            flight_titer,
+            flight_comp,
+            flight_comm,
+            flight_assigned,
+            flight_val,
+            cache_state,
+            lat_matrix,
+            prof,
+        ) = carry
+        prof_t, prof_comm, prof_comp, prof_valid = prof
+        t, do_eval = xs
+        assign = iter_end
+        idle = free_at <= assign[:, None]
+
+        # -- Algorithm-2 alignment for pending repartitions (tentative) -----
+        cur_p = eff[w_idx2, sub_idx]
+        p_req = jnp.clip(pending_p, 1, n_local[None, :])
+        needs = (pending_p >= 0) & (p_req != cur_p)
+        _, k_new = jlb.align_batch(n_local[None, :], cur_p, p_req, sub_k, needs)
+        cand_idx = jnp.where(needs, snap_int(p_req), sub_idx)
+        cand_k = jnp.where(needs, k_new, sub_k)
+        cand_p = jnp.where(needs, p_req, cur_p)
+
+        if spec.process_full:
+            lo = jnp.broadcast_to(base_start, (S, N))
+            hi = jnp.broadcast_to(base_stop, (S, N))
+        else:
+            lo = base_start[None, :] + (cand_k - 1) * n_local[None, :] // cand_p
+            hi = base_start[None, :] + cand_k * n_local[None, :] // cand_p - 1
+        cost = (kernels.cost_per_row * (hi - lo + 1)) * spec.comp_scale
+
+        # -- §3 trace replay (THE shared latency expression) ----------------
+        start = jnp.where(idle, assign[:, None], free_at)
+        comm_d = jnp.take_along_axis(comm, draw_idx[:, :, None], axis=2)[:, :, 0]
+        unit = jnp.take_along_axis(comp_unit, draw_idx[:, :, None], axis=2)[:, :, 0]
+        comp_d = comp_latency_expr(
+            unit, cost, slowdown[None, :], burst_factor_at(start)
+        )
+        # finalize the §3 product before the event algebra consumes it: the
+        # LLVM backend otherwise contracts the last multiply into the
+        # task_finish_time add as an FMA (skipping the intermediate
+        # rounding the host engine's numpy performs), which changes the
+        # final ULP whenever slowdown/burst factors are not exactly 1.0.
+        # max(x, 0) is exact for the positive latencies and is a pattern
+        # the contraction cannot see through (lax.optimization_barrier is
+        # erased before LLVM and does NOT prevent this).
+        comp_d = jnp.maximum(comp_d, 0.0)
+
+        # -- event resolution (the shared method-semantics helpers) ---------
+        finish = task_finish_time(start, comp_d, comm_d)
+        tau_w = jnp.sort(finish, axis=1)[:, spec.w_wait - 1]
+        if spec.margin > 0.0:
+            deadline = margin_deadline(tau_w, assign, spec.margin)
+        else:
+            deadline = tau_w
+        started = idle | (free_at <= deadline[:, None])
+        fresh = started & (finish <= deadline[:, None])
+        stale_done = (~idle) & (free_at <= deadline[:, None])
+        fresh_cnt = fresh.sum(axis=1)
+        stale_ev = jnp.where(stale_done, free_at, -jnp.inf)
+        fresh_ev = jnp.where(fresh, finish, -jnp.inf)
+        iter_end_new = jnp.maximum(
+            jnp.maximum(stale_ev.max(axis=1), fresh_ev.max(axis=1)), tau_w
+        )
+
+        # -- latency attribution by the task's own iteration ----------------
+        titer_safe = jnp.clip(flight_titer, 0, T - 1)
+        cur = lat_matrix[s_idx2, titer_safe, w_idx2]
+        lat_matrix = lat_matrix.at[s_idx2, titer_safe, w_idx2].set(
+            jnp.where(stale_done, flight_comp + flight_comm, cur)
+        )
+        lat_matrix = lat_matrix.at[:, t, :].set(
+            jnp.where(fresh, comp_d + comm_d, lat_matrix[:, t, :])
+        )
+
+        # -- §6.1 profiler feed: one task-slot sample per observed
+        # completion (same slots and float expressions as MomentBuffer) -----
+        stale_rt = free_at - flight_assigned
+        stale_comm = jnp.maximum(stale_rt - flight_comp, 0.0)
+        prof_t = prof_t.at[s_idx2, w_idx2, titer_safe].set(
+            jnp.where(stale_done, free_at, prof_t[s_idx2, w_idx2, titer_safe])
+        )
+        prof_comm = prof_comm.at[s_idx2, w_idx2, titer_safe].set(
+            jnp.where(stale_done, stale_comm, prof_comm[s_idx2, w_idx2, titer_safe])
+        )
+        prof_comp = prof_comp.at[s_idx2, w_idx2, titer_safe].set(
+            jnp.where(stale_done, flight_comp, prof_comp[s_idx2, w_idx2, titer_safe])
+        )
+        prof_valid = prof_valid.at[s_idx2, w_idx2, titer_safe].set(
+            prof_valid[s_idx2, w_idx2, titer_safe] | stale_done
+        )
+        fresh_rt = finish - assign[:, None]
+        fresh_comm = jnp.maximum(fresh_rt - comp_d, 0.0)
+        prof_t = prof_t.at[:, :, t].set(jnp.where(fresh, finish, prof_t[:, :, t]))
+        prof_comm = prof_comm.at[:, :, t].set(
+            jnp.where(fresh, fresh_comm, prof_comm[:, :, t])
+        )
+        prof_comp = prof_comp.at[:, :, t].set(
+            jnp.where(fresh, comp_d, prof_comp[:, :, t])
+        )
+        prof_valid = prof_valid.at[:, :, t].set(prof_valid[:, :, t] | fresh)
+
+        # -- batched subgradients (skipped entirely for coded) --------------
+        if spec.name != "coded":
+            vals = _subgradients(kernels, spec, V, lo, hi)
+        else:
+            vals = None
+
+        # -- §5 cache / gradient accumulation over the slot universe --------
+        if spec.uses_cache:
+            slot_cur = slot_table[w_idx2, cand_idx, cand_k - 1]
+            if spec.accepts_stale:  # dsag: stale half then fresh half
+                ev_valid = jnp.concatenate([stale_done, fresh], axis=1)
+                ev_time = jnp.concatenate([free_at, finish], axis=1)
+                ev_slot = jnp.concatenate([flight_slot, slot_cur], axis=1)
+                ev_tag = jnp.concatenate(
+                    [flight_titer, jnp.full((S, N), 1, jnp.int64) * t], axis=1
+                )
+                ev_vals = jnp.concatenate([flight_val, vals], axis=1)
+            else:  # sag: fresh results only
+                ev_valid, ev_time = fresh, finish
+                ev_slot = slot_cur
+                ev_tag = jnp.full((S, N), 1, jnp.int64) * t
+                ev_vals = vals
+            cache_state = _apply_cache_events_lb(
+                spec, slot_width, overlap_idx, cache_state, ev_valid, ev_time,
+                ev_slot, ev_tag, ev_vals,
+            )
+            sums, _, _, covered, _, _ = cache_state
+            xi = jnp.maximum(covered / n, 1e-12)
+            grad = sums / _bcast(xi, vdim) + kernels.regularizer_grad(V)
+        elif spec.name == "coded":
+            slot_cur = None
+            g = kernels.sub_blocks(
+                V,
+                jnp.ones((S,), jnp.int64),
+                jnp.full((S,), n, jnp.int64),
+                n,
+            ).astype(jnp.float64)
+            grad = g + kernels.regularizer_grad(V)
+        elif spec.name == "gd":
+            slot_cur = None
+            grad = _fresh_accumulate(kernels, fresh, finish, vals) + (
+                kernels.regularizer_grad(V)
+            )
+        else:  # sgd: scale the partial sum by observed coverage
+            slot_cur = None
+            grad_acc = _fresh_accumulate(kernels, fresh, finish, vals)
+            covered_f = jnp.sum(jnp.where(fresh, hi - lo + 1, 0), axis=1)
+            xi = jnp.maximum(covered_f / n, 1e-12)
+            grad = grad_acc / _bcast(xi, vdim) + kernels.regularizer_grad(V)
+
+        # -- iterate update + suboptimality ---------------------------------
+        V_new = kernels.project((V - spec.eta * grad).astype(V.dtype))
+        subopt_t = jax.lax.cond(
+            do_eval,
+            lambda v: kernels.suboptimality(v),
+            lambda v: jnp.full((S,), jnp.nan, dtype=jnp.float64),
+            V_new,
+        )
+
+        # -- commit worker state for started tasks --------------------------
+        sub_idx = jnp.where(started, cand_idx, sub_idx)
+        if spec.process_full:
+            sub_k = jnp.where(started, cand_k, sub_k)
+        else:
+            sub_k = jnp.where(started, cand_k % cand_p + 1, sub_k)
+        pending_p = jnp.where(started, -1, pending_p)
+        free_at = jnp.where(started, finish, free_at)
+        draw_idx = draw_idx + started.astype(jnp.int64)
+        if spec.uses_cache:
+            flight_slot = jnp.where(started, slot_cur, flight_slot)
+        flight_titer = jnp.where(started, t, flight_titer)
+        flight_comp = jnp.where(started, comp_d, flight_comp)
+        flight_comm = jnp.where(started, comm_d, flight_comm)
+        flight_assigned = jnp.where(started, assign[:, None], flight_assigned)
+        if spec.accepts_stale:
+            flight_val = jnp.where(_bcast(started, vdim), vals, flight_val)
+
+        # -- §6 background load balancer (Algorithm 1, jittable) ------------
+        due = iter_end_new >= next_lb
+        prof_new = (prof_t, prof_comm, prof_comp, prof_valid)
+
+        def lb_block(args):
+            pending_p, current_p, h_min, next_lb = args
+            e_cm, v_cm, e_cp, v_cp, cnt = jlb.window_moments(
+                prof_t, prof_comm, prof_comp, prof_valid, iter_end_new,
+                jlb.PROFILER_WINDOW,
+            )
+            ready = jnp.all(cnt >= 1, axis=1)
+            next_lb2 = jnp.where(due, iter_end_new + spec.lb_interval, next_lb)
+            act = due & ready
+
+            def run_opt(_):
+                # the make_optimizer_inputs variance floors, verbatim
+                p_new, h_min2, _, publish = jlb.lb_update(
+                    current_p.astype(jnp.float64),
+                    e_cm,
+                    jnp.maximum(v_cm, 1e-18),
+                    e_cp,
+                    jnp.maximum(v_cp, 1e-18),
+                    n_j_b,
+                    h_min,
+                    act,
+                    ladder=spec.ladder,
+                    w=spec.w_wait,
+                    margin=spec.lb_margin,
+                    key=lb_key,
+                )
+                changed = publish[:, None] & (p_new != current_p)
+                return (
+                    jnp.where(changed, p_new, pending_p),
+                    jnp.where(publish[:, None], p_new, current_p),
+                    h_min2,
+                    publish,
+                )
+
+            def no_opt(_):
+                return pending_p, current_p, h_min, jnp.zeros((S,), bool)
+
+            pending2, current2, h_min2, publish = jax.lax.cond(
+                jnp.any(act), run_opt, no_opt, None
+            )
+            return pending2, current2, h_min2, next_lb2, publish
+
+        def no_lb(args):
+            pending_p, current_p, h_min, next_lb = args
+            return pending_p, current_p, h_min, next_lb, jnp.zeros((S,), bool)
+
+        pending_p, current_p, h_min, next_lb, published = jax.lax.cond(
+            jnp.any(due), lb_block, no_lb, (pending_p, current_p, h_min, next_lb)
+        )
+
+        carry = (
+            V_new,
+            free_at,
+            iter_end_new,
+            draw_idx,
+            sub_idx,
+            sub_k,
+            pending_p,
+            current_p,
+            h_min,
+            next_lb,
+            flight_slot,
+            flight_titer,
+            flight_comp,
+            flight_comm,
+            flight_assigned,
+            flight_val,
+            cache_state,
+            lat_matrix,
+            prof_new,
+        )
+        return carry, (iter_end_new, subopt_t, fresh_cnt, published)
+
+    val_dtype = jnp.dtype(kernels.value_dtype)
+    cache0 = (
+        jnp.zeros((S,) + vshape, dtype=jnp.float64),  # sums
+        jnp.zeros((S, E) + vshape, dtype=jnp.float64),  # values
+        jnp.full((S, E), -1, dtype=jnp.int64),  # iters
+        jnp.zeros((S,), dtype=jnp.int64),  # covered
+        jnp.zeros((S,), dtype=jnp.int64),  # rejected_stale
+        jnp.zeros((S,), dtype=jnp.int64),  # evictions
+    )
+    sub_p0 = jnp.asarray(spec.sub_p, dtype=jnp.int64)
+    idx0 = jnp.clip(
+        jnp.sum(eff <= sub_p0[:, None], axis=1) - 1, 0, idx_cap
+    )
+    prof0 = (
+        jnp.zeros((S, N, T)),
+        jnp.zeros((S, N, T)),
+        jnp.zeros((S, N, T)),
+        jnp.zeros((S, N, T), dtype=bool),
+    )
+    carry0 = (
+        V0,
+        jnp.zeros((S, N)),  # free_at
+        jnp.zeros((S,)),  # iter_end
+        jnp.zeros((S, N), dtype=jnp.int64),  # draw_idx
+        jnp.broadcast_to(idx0, (S, N)),  # sub_idx
+        jnp.ones((S, N), dtype=jnp.int64),  # sub_k
+        jnp.full((S, N), -1, dtype=jnp.int64),  # pending_p
+        jnp.full((S, N), spec.lb_p0, dtype=jnp.int64),  # current_p (optimizer view)
+        jnp.full((S,), jnp.nan),  # h_min
+        jnp.full((S,), spec.lb_startup_delay),  # next_lb
+        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_slot
+        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_titer
+        jnp.zeros((S, N)),  # flight_comp
+        jnp.zeros((S, N)),  # flight_comm
+        jnp.zeros((S, N)),  # flight_assigned
+        jnp.zeros((S, N) + vshape, dtype=val_dtype),  # flight_val
+        cache0,
+        jnp.full((S, T, N), jnp.nan),  # lat_matrix
+        prof0,
+    )
+    xs = (jnp.arange(T, dtype=jnp.int64), eval_mask)
+    carry, ys = jax.lax.scan(body, carry0, xs)
+    times, subopt, fresh_counts, published = ys
+    cache_state = carry[16]
+    return (
+        times.T,
+        subopt.T,
+        fresh_counts.T,
+        carry[17],  # lat_matrix
+        cache_state[4],  # rejected_stale
+        cache_state[5],  # evictions
+        published.T,  # [S, T] publication schedule
+    )
+
+
+def _scan_jit_for(kernels: FusedKernels, *, lb: bool = False):
     """Per-kernels jitted driver.
 
     The jit cache is owned by the kernels object rather than a module-level
@@ -481,11 +1051,40 @@ def _scan_jit_for(kernels: FusedKernels):
     process lifetime; this way the compiled executables are garbage
     collected with the problem.
     """
-    jitted = getattr(kernels, "_scan_driver_jit", None)
+    attr = "_scan_driver_jit_lb" if lb else "_scan_driver_jit"
+    jitted = getattr(kernels, attr, None)
     if jitted is None:
-        jitted = jax.jit(_run_scan, static_argnums=(0, 1))
-        kernels._scan_driver_jit = jitted
+        jitted = jax.jit(_run_scan_lb if lb else _run_scan, static_argnums=(0, 1))
+        setattr(kernels, attr, jitted)
     return jitted
+
+
+def scan_unsupported_reason(
+    problem: FiniteSumProblem, config: MethodConfig, num_workers: int
+) -> Optional[str]:
+    """Why the fused scan cannot run this config (None = it can).
+
+    The only remaining limitation is a §6 slot universe larger than
+    :data:`LB_MAX_SLOTS`: the pre-allocated ladder universe would need
+    more per-slot value buffers than the memory budget allows.
+    ``engine="auto"`` routes exactly this case to the host engine."""
+    if not (config.load_balance and config.uses_cache):
+        return None
+    n = problem.num_samples
+    N = num_workers
+    n_local = np.array(
+        [p_stop(n, N, i + 1) - p_start(n, N, i + 1) + 1 for i in range(N)]
+    )
+    ladder = lb_ladder_for(config, n_local)
+    upper = int(sum(min(r, int(n_local.max())) for r in ladder)) * N
+    if upper > LB_MAX_SLOTS:
+        return (
+            f"§6 ladder slot universe needs up to {upper} slots "
+            f"(> LB_MAX_SLOTS={LB_MAX_SLOTS}): the fused scan pre-allocates "
+            "per-slot cache value buffers and cannot hold this config; "
+            "use engine='host'"
+        )
+    return None
 
 
 def run_convergence_scan(
@@ -501,22 +1100,34 @@ def run_convergence_scan(
     """Train ``config`` on every scenario of ``traces`` in one XLA dispatch.
 
     Bit-exact against the host engine and the scalar simulator on the same
-    traces (see module docstring).  Raises for load-balanced configs.
-    """
+    traces (see module docstring), §6 load-balanced configs included.
+    Raises ``ValueError`` for the one unsupported case
+    (:func:`scan_unsupported_reason`)."""
     from repro.experiments.convergence import ConvergenceBatchResult
 
-    if config.load_balance:
-        raise ValueError(
-            "the fused scan cannot run §6 load balancing (Algorithm 1 is "
-            "host code); use engine='host'"
-        )
+    reason = scan_unsupported_reason(problem, config, traces.num_workers)
+    if reason is not None:
+        raise ValueError(reason)
     S = traces.num_scenarios
     T = num_iterations
     if T > traces.horizon:
         raise ValueError(
             f"traces hold {traces.horizon} draws/worker but {T} iterations requested"
         )
-    spec = _static_spec(problem, config, traces.num_workers, T, cost_scale)
+    lb = bool(config.load_balance)
+    universe = None
+    if lb and config.uses_cache:
+        n = problem.num_samples
+        N = traces.num_workers
+        base_start = [p_start(n, N, i + 1) for i in range(N)]
+        base_stop = [p_stop(n, N, i + 1) for i in range(N)]
+        n_local = np.asarray(base_stop) - np.asarray(base_start) + 1
+        universe = build_slot_universe(
+            base_start, base_stop, lb_ladder_for(config, n_local)
+        )
+    spec = _static_spec(
+        problem, config, traces.num_workers, T, cost_scale, universe=universe
+    )
     kernels = problem.fused_kernels()
     V0 = np.repeat(problem.init(seed)[None], S, axis=0)
     eval_mask = np.zeros(T, dtype=bool)
@@ -525,9 +1136,7 @@ def run_convergence_scan(
     with enable_x64():
         empty = jnp.zeros((S, traces.num_workers, 0))
         has_b = traces.has_bursts
-        times, subopt, fresh, lat, rejected = _scan_jit_for(kernels)(
-            kernels,
-            spec,
+        trace_args = (
             jnp.asarray(traces.comm),
             jnp.asarray(traces.comp_unit),
             jnp.asarray(traces.slowdown),
@@ -537,12 +1146,49 @@ def run_convergence_scan(
             jnp.asarray(V0),
             jnp.asarray(eval_mask),
         )
+        if lb:
+            if universe is not None:
+                slot_table = jnp.asarray(universe.slot_table)
+                slot_width = jnp.asarray(universe.widths)
+                overlap_idx = jnp.asarray(universe.overlap_idx)
+            else:  # non-cache methods: no slots, keep shapes minimal
+                N = traces.num_workers
+                L = max(len(spec.ladder), 1)
+                pmax = max(spec.ladder) if spec.ladder else 1
+                slot_table = jnp.zeros((N, L, pmax), dtype=jnp.int64)
+                slot_width = jnp.zeros((1,), dtype=jnp.int64)
+                overlap_idx = jnp.full((1, 1), -1, dtype=jnp.int64)
+            times, subopt, fresh, lat, rejected, evictions, published = (
+                _scan_jit_for(kernels, lb=True)(
+                    kernels,
+                    spec,
+                    slot_table,
+                    slot_width,
+                    overlap_idx,
+                    *trace_args,
+                    jax.random.PRNGKey(seed),
+                )
+            )
+            published = np.asarray(published)
+            times_np = np.asarray(times)
+            repartition_events = [
+                [float(times_np[s, t]) for t in np.flatnonzero(published[s])]
+                for s in range(S)
+            ]
+            evictions_np = np.asarray(evictions, dtype=np.int64)
+        else:
+            times, subopt, fresh, lat, rejected = _scan_jit_for(kernels)(
+                kernels, spec, *trace_args
+            )
+            times_np = np.asarray(times)
+            repartition_events = [[] for _ in range(S)]
+            evictions_np = np.zeros(S, dtype=np.int64)
     return ConvergenceBatchResult(
-        times=np.asarray(times),
+        times=times_np,
         suboptimality=np.asarray(subopt),
         fresh_counts=np.asarray(fresh, dtype=np.int64),
         per_worker_latency=np.asarray(lat),
-        repartition_events=[[] for _ in range(S)],
-        evictions=np.zeros(S, dtype=np.int64),
+        repartition_events=repartition_events,
+        evictions=evictions_np,
         rejected_stale=np.asarray(rejected, dtype=np.int64),
     )

@@ -67,6 +67,61 @@ class ProfilerMoments:
     num_samples: np.ndarray
 
 
+class MomentBuffer:
+    """Task-slot sample buffers behind the engines' §6.1 profiler view.
+
+    Dense ``[S, N, T]`` arrays indexed by the *iteration that started the
+    task* (each (scenario, worker, iteration) starts at most one task and
+    its completion is observed at most once, so the slot is unique).  The
+    moments are computed by the shared jittable kernel
+    (:func:`repro.lb.jit_optimizer.window_moments`), which every engine —
+    the scalar ``TrainingSimulator`` at ``S = 1``, the batched host
+    convergence loop, and the fused scan (tracing the same function
+    inline) — uses with identical slot layouts, so the §6 optimizer sees
+    bit-identical moments in all three.  This replaces the deque-based
+    :class:`LatencyProfiler` in the load-balancing loop; the deque
+    profiler remains the general-purpose telemetry view.
+    """
+
+    def __init__(self, num_scenarios: int, num_workers: int, capacity: int):
+        shape = (num_scenarios, num_workers, capacity)
+        self.t_rec = np.zeros(shape)
+        self.comm = np.zeros(shape)
+        self.comp = np.zeros(shape)
+        self.valid = np.zeros(shape, dtype=bool)
+
+    def record(self, s, workers, titers, t_recorded, round_trip, compute) -> None:
+        """Record observed completions (parallel arrays; ``s`` broadcastable).
+
+        The communication sample is ``max(round_trip - compute, 0)`` —
+        the §6.1 split of coordinator-observed round-trip time into the
+        worker-reported compute part and the rest."""
+        self.t_rec[s, workers, titers] = t_recorded
+        self.comm[s, workers, titers] = np.maximum(
+            np.asarray(round_trip, np.float64) - np.asarray(compute, np.float64), 0.0
+        )
+        self.comp[s, workers, titers] = compute
+        self.valid[s, workers, titers] = True
+
+    def moments(self, now: np.ndarray, *, window: Optional[float] = None):
+        """(e_comm, v_comm, e_comp, v_comp, counts) at per-scenario ``now``.
+
+        Delegates to the shared jitted window-moments kernel; a worker
+        with zero in-window samples reports count 0 (callers gate on it
+        like ``LatencyProfiler.moment_arrays`` returning None)."""
+        from jax.experimental import enable_x64
+
+        from repro.lb.jit_optimizer import PROFILER_WINDOW, _window_moments_jitted
+
+        fn = _window_moments_jitted(
+            float(PROFILER_WINDOW if window is None else window)
+        )
+        with enable_x64():
+            out = fn(self.t_rec, self.comm, self.comp, self.valid, np.asarray(now))
+        e_comm, v_comm, e_comp, v_comp, cnt = (np.asarray(a) for a in out)
+        return e_comm, v_comm, e_comp, v_comp, cnt
+
+
 class LatencyProfiler:
     """Per-worker moving-window mean/variance of comm and comp latency."""
 

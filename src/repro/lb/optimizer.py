@@ -1,28 +1,29 @@
-"""Load-balancing optimizer (paper §6.2, Algorithm 1).
+"""Load-balancing optimizer (paper §6.2, Algorithm 1) — host entry points.
 
 Given per-worker latency statistics from the profiler, produce an updated
 subpartition-count vector p' that (i) equalizes expected total per-iteration
 latency across workers and (ii) respects the contribution constraint
 h(p') >= h_min, where h is estimated by replaying pre-sampled what-if
-latency traces through the batched §4.2 event dynamics
-(:func:`repro.experiments.sweep.replay_batch`) — the same dynamics the old
-event-driven estimate simulated one heap event at a time, resolved with
-array operations instead.
+latency traces through the batched §4.2 event dynamics.
 
-The optimizer works on the §6.2 linearisation:
+Since the fused-scan engine learned to run §6 configs, **all numerical
+work lives in** :mod:`repro.lb.jit_optimizer` as traceable JAX functions:
+the hill-climb moves on the finite p-ladder
+(:func:`repro.lb.partitioner.build_p_ladder`), the what-if traces are
+``jax.random.gamma`` draws, and every phase operates on masked ``[S, N]``
+arrays.  This class is the numpy-facing wrapper those host callers (the
+scalar :class:`~repro.cluster.simulator.TrainingSimulator`, the batched
+host convergence engine, and the standalone tests) share; the fused scan
+traces the very same functions inline, which is what makes the three
+engines bit-exact on §6 configs (pinned by ``tests/test_lb_scan.py``).
+
+The §6.2 linearisation is unchanged:
 
     e'_{Z,i} = e_{Z,i} * p_i / p'_i        (computation mean)
     v'_{Z,i} = v_{Z,i} * p_i^2 / p'_i^2    (computation variance)
     e'_{X,i} = e_{Y,i} + e'_{Z,i}          (total)
 
-and evaluates h with a 1% tolerance (the paper's noise allowance).
-
-Every phase (equalize / restore / slack) operates on ``[S, N]`` arrays so a
-whole batch of scenarios is balanced in one call
-(:meth:`LoadBalanceOptimizer.optimize_batch`); the scalar
-:meth:`~LoadBalanceOptimizer.optimize` entry point is the S = 1 special
-case of the batched path, so the scalar training simulator and the batched
-convergence engine cannot drift apart.
+and h is evaluated with a 1% tolerance (the paper's noise allowance).
 """
 
 from __future__ import annotations
@@ -30,7 +31,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
+
+from repro.lb import jit_optimizer as jlb
+from repro.lb.partitioner import build_p_ladder
 
 
 @dataclasses.dataclass
@@ -38,7 +45,7 @@ class OptimizerInputs:
     """Latest profiler statistics.
 
     Arrays are ``[N]`` for a single scenario (the scalar simulator) or
-    ``[S, N]`` for a batch (the vectorized convergence engine); ``w`` and
+    ``[S, N]`` for a batch (the vectorized convergence engines); ``w`` and
     ``margin`` are shared across the batch (one method configuration).
     """
 
@@ -66,16 +73,24 @@ class OptimizerInputs:
 
 
 class LoadBalanceOptimizer:
-    """Iterative small-step solver for paper Eq. (7) / Algorithm 1."""
+    """Iterative ladder solver for paper Eq. (7) / Algorithm 1.
+
+    ``ladder`` fixes the candidate subpartition counts; when omitted it is
+    built from the first ``optimize*`` call's current p and sample counts
+    (:func:`build_p_ladder`).  The convergence engines pass their ladder
+    explicitly so the host optimizer and the fused scan climb the exact
+    same rungs.
+    """
 
     def __init__(
         self,
         *,
-        h_tolerance: float = 0.01,
-        sim_iterations: int = 100,
-        max_rounds: int = 200,
-        improvement_threshold: float = 0.10,
+        h_tolerance: float = jlb.H_TOLERANCE,
+        sim_iterations: int = jlb.SIM_ITERATIONS,
+        max_rounds: int = jlb.MAX_ROUNDS,
+        improvement_threshold: float = jlb.IMPROVEMENT_THRESHOLD,
         seed: int = 0,
+        ladder: Optional[Tuple[int, ...]] = None,
     ):
         self.h_tolerance = h_tolerance
         self.sim_iterations = sim_iterations
@@ -84,200 +99,116 @@ class LoadBalanceOptimizer:
         #: (paper §6.3 first mitigation strategy, default 10%)
         self.improvement_threshold = improvement_threshold
         self.seed = seed
+        self.ladder = tuple(ladder) if ladder is not None else None
         self.h_min: Optional[float] = None
         #: h at the *returned* p' of the last optimize() call — kept
         #: consistent with the returned vector even when the slack phase
-        #: backs a violating step out (see optimize_batch)
+        #: backs a violating step out
         self.last_h: Optional[float] = None
 
-    # -- objective -------------------------------------------------------
-    @staticmethod
-    def _e_total(inputs: OptimizerInputs, p: np.ndarray, p_new: np.ndarray) -> np.ndarray:
-        e_z = inputs.e_comp * p / p_new
-        return inputs.e_comm + e_z
+    # -- shared pieces -----------------------------------------------------
+    def _ladder_for(self, p: np.ndarray, n_j: np.ndarray) -> Tuple[int, ...]:
+        if self.ladder is None:
+            self.ladder = build_p_ladder(int(np.max(p)), int(np.max(n_j)))
+        return self.ladder
+
+    def _key(self):
+        return jax.random.PRNGKey(self.seed)
 
     @staticmethod
     def objective(e_x: np.ndarray):
-        """max/min ratio of expected per-worker total latency (Eq. 7).
-
-        Reduces over the worker axis: returns a float for ``[N]`` input and
-        an ``[S]`` array for ``[S, N]`` input.
-        """
+        """max/min ratio of expected per-worker total latency (Eq. 7)."""
         lo = np.maximum(e_x.min(axis=-1), 1e-12)
         ratio = e_x.max(axis=-1) / lo
         return float(ratio) if np.ndim(ratio) == 0 else ratio
 
-    # -- h(p) via batched trace replay ------------------------------------
-    def _estimate_h_batch(
-        self,
-        inputs: OptimizerInputs,
-        p: np.ndarray,
-        p_new: np.ndarray,
-        active: Optional[np.ndarray] = None,
-    ) -> np.ndarray:
-        """h(p') for every active scenario (NaN elsewhere).
-
-        Builds the linearised what-if gamma parameters per scenario, draws
-        ``sim_iterations`` latency traces per worker (each scenario from its
-        own ``default_rng(seed)`` stream, so a scenario's draws do not
-        depend on which other scenarios share the batch), and replays all
-        scenarios at once through :func:`replay_batch`.
-        """
-        # deferred: repro.cluster.simulator -> repro.lb.optimizer at import
-        # time, and the experiments package imports the cluster simulator
-        from repro.experiments.sweep import replay_batch
-        from repro.latency.model import FleetTraces
-
-        S, N = p_new.shape
-        if active is None:
-            active = np.ones(S, dtype=bool)
-        idx = np.flatnonzero(active)
-        out = np.full(S, np.nan)
-        if idx.size == 0:
-            return out
-        K = self.sim_iterations
-        comm = np.empty((idx.size, N, K))
-        comp = np.empty((idx.size, N, K))
-        for row, s in enumerate(idx):
-            e_y = np.maximum(inputs.e_comm[s], 1e-12)
-            v_y = np.maximum(inputs.v_comm[s], 1e-18)
-            # linearised what-if computation latency at p'_i
-            e_z = np.maximum(inputs.e_comp[s] * p[s] / p_new[s], 1e-12)
-            v_z = np.maximum(inputs.v_comp[s] * (p[s] / p_new[s]) ** 2, 1e-18)
-            rng = np.random.default_rng(self.seed)
-            comm[row] = rng.gamma(
-                (e_y * e_y / v_y)[:, None], (v_y / e_y)[:, None], size=(N, K)
-            )
-            comp[row] = rng.gamma(
-                (e_z * e_z / v_z)[:, None], (v_z / e_z)[:, None], size=(N, K)
-            )
-        empty = np.zeros((idx.size, N, 0))
-        traces = FleetTraces(
-            comm=comm,
-            comp_unit=comp,
-            slowdown=np.ones(N),
-            burst_start=empty,
-            burst_end=empty.copy(),
-            burst_factor=empty.copy(),
-            seed=self.seed,
-        )
-        res = replay_batch(traces, inputs.w, K, margin=inputs.margin)
-        u = res.participation  # [S_active, N]
-        n_i = inputs.samples_per_worker[idx]
-        n = n_i.sum(axis=1)
-        out[idx] = np.sum(u * n_i / (p_new[idx] * n[:, None]), axis=1)
-        return out
-
+    # -- h(p) via batched what-if trace replay ------------------------------
     def estimate_h(
         self, inputs: OptimizerInputs, p: Sequence[int], p_new: Sequence[int]
     ) -> float:
-        """Scalar convenience: h(p') for one scenario's inputs."""
-        b = inputs.as_batch()
-        p2 = np.asarray(p, np.float64)[None, :]
-        p2n = np.asarray(p_new, np.float64)[None, :]
-        return float(self._estimate_h_batch(b, p2, p2n)[0])
+        """Scalar convenience: h(p') for one scenario's inputs.
 
-    # -- Algorithm 1 (batched) ---------------------------------------------
+        Deterministic given (seed, inputs, p, p') — the same jitted
+        estimator Algorithm 1 calls internally, so re-estimating at a
+        returned vector reproduces ``last_h`` exactly.
+        """
+        b = inputs.as_batch()
+        fn = jlb._estimate_h_jitted(
+            int(b.w), int(self.sim_iterations), float(b.margin)
+        )
+        with enable_x64():
+            h = fn(
+                jnp.asarray(b.e_comm, jnp.float64),
+                jnp.asarray(b.v_comm, jnp.float64),
+                jnp.asarray(b.e_comp, jnp.float64),
+                jnp.asarray(b.v_comp, jnp.float64),
+                jnp.asarray(b.samples_per_worker, jnp.float64),
+                jnp.asarray(p, jnp.float64)[None, :],
+                jnp.asarray(p_new, jnp.float64)[None, :],
+                self._key(),
+            )
+        return float(np.asarray(h)[0])
+
+    # -- Algorithm 1 + publication gate (batched) ---------------------------
+    def update_batch(
+        self,
+        p: np.ndarray,
+        inputs: OptimizerInputs,
+        h_min: Optional[np.ndarray] = None,
+        active: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Run Algorithm 1 + the §6.3 publish gate for S scenarios at once.
+
+        ``p`` is ``[S, N]`` int, ``inputs`` holds ``[S, N]`` arrays,
+        ``h_min`` the per-scenario contribution floor carried across calls
+        (NaN = not yet established), and ``active`` masks which scenarios
+        actually balance this round (inactive rows pass through).  Returns
+        ``(p_new [S, N] int64, h_min [S], last_h [S], publish [S])``.
+        """
+        p = np.asarray(p, dtype=np.int64)
+        S, N = p.shape
+        if h_min is None:
+            h_min = np.full(S, np.nan)
+        if active is None:
+            active = np.ones(S, dtype=bool)
+        ladder = self._ladder_for(p, inputs.samples_per_worker)
+        fn = jlb._lb_update_jitted(
+            ladder,
+            int(inputs.w),
+            int(self.sim_iterations),
+            float(self.h_tolerance),
+            int(self.max_rounds),
+            float(self.improvement_threshold),
+            float(inputs.margin),
+        )
+        with enable_x64():
+            p_new, h_min_out, last_h, publish = fn(
+                jnp.asarray(p, jnp.float64),
+                jnp.asarray(inputs.e_comm, jnp.float64),
+                jnp.asarray(inputs.v_comm, jnp.float64),
+                jnp.asarray(inputs.e_comp, jnp.float64),
+                jnp.asarray(inputs.v_comp, jnp.float64),
+                jnp.asarray(inputs.samples_per_worker, jnp.float64),
+                jnp.asarray(h_min, jnp.float64),
+                jnp.asarray(active, bool),
+                self._key(),
+            )
+        return (
+            np.asarray(p_new, np.int64),
+            np.asarray(h_min_out, np.float64),
+            np.asarray(last_h, np.float64),
+            np.asarray(publish, bool),
+        )
+
     def optimize_batch(
         self,
         p: np.ndarray,
         inputs: OptimizerInputs,
         h_min: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Run Algorithm 1 for S scenarios at once.
-
-        ``p`` is ``[S, N]`` int, ``inputs`` holds ``[S, N]`` arrays, and
-        ``h_min`` is the per-scenario contribution floor carried across
-        calls (NaN = not yet established; it is then set to h(p_0)).
-        Returns ``(p_new [S, N] int64, h_min [S], last_h [S])`` where
-        ``last_h`` is h at the returned vector.
-        """
-        p = np.asarray(p, dtype=np.int64)
-        S, N = p.shape
-        rows = np.arange(S)
-        n_j = inputs.samples_per_worker
-        if h_min is None:
-            h_min = np.full(S, np.nan)
-        h_min = np.asarray(h_min, dtype=np.float64).copy()
-        unset = np.isnan(h_min)
-        p_f = p.astype(np.float64)
-        if unset.any():
-            # h_min = h(p_0): the contribution of the baseline partitioning
-            h0 = self._estimate_h_batch(inputs, p_f, p_f, active=unset)
-            h_min[unset] = h0[unset]
-        p_new = p_f.copy()
-
-        # --- equalize total latency against the slowest worker ---
-        e_x = self._e_total(inputs, p_f, p_new)
-        slowest = np.argmax(e_x, axis=1)
-        target = (
-            inputs.e_comm[rows, slowest]
-            + inputs.e_comp[rows, slowest] * p_f[rows, slowest] / p_new[rows, slowest]
-        )
-        denom = target[:, None] - inputs.e_comm
-        safe = np.where(denom > 0, denom, 1.0)
-        balanced = np.maximum(np.floor(inputs.e_comp * p_f / safe), 1.0)
-        # comm-bound workers (denom <= 0) get minimal work: one sample/task
-        p_new = np.where(denom <= 0, n_j, balanced)
-        # a worker cannot be split finer than its own sample count — without
-        # this cap the equalization could emit p'_j > n_j for very slow
-        # fleets (only the comm-bound branch used to respect the bound)
-        p_new = np.clip(p_new, 1.0, n_j)
-
-        # --- restore contribution: give the fastest workers more work ---
-        h = self._estimate_h_batch(inputs, p_f, p_new)
-        active = h < h_min * (1.0 - self.h_tolerance)
-        rounds = 0
-        while active.any() and rounds < self.max_rounds:
-            e_x = self._e_total(inputs, p_f, p_new)
-            reduced = np.floor(0.99 * p_new)
-            valid = (reduced >= 1.0) & (reduced != p_new)
-            # the fastest worker whose load can still be increased (i.e.
-            # whose p can be reduced); scenarios with no such worker stop
-            order = np.argsort(e_x, axis=1)
-            valid_ord = np.take_along_axis(valid, order, axis=1)
-            movable = valid_ord.any(axis=1)
-            pick = order[rows, np.argmax(valid_ord, axis=1)]
-            active = active & movable
-            if not active.any():
-                break
-            p_new[active, pick[active]] = reduced[active, pick[active]]
-            h_step = self._estimate_h_batch(inputs, p_f, p_new, active=active)
-            h[active] = h_step[active]
-            rounds += 1
-            active = active & (h < h_min * (1.0 - self.h_tolerance))
-
-        # --- spend slack: reduce the slowest workers' load while h holds ---
-        active = h >= 0.99 * h_min
-        rounds = 0
-        while active.any() and rounds < self.max_rounds:
-            e_x = self._e_total(inputs, p_f, p_new)
-            slowest = np.argmax(e_x, axis=1)
-            cur = p_new[rows, slowest]
-            cap = n_j[rows, slowest]
-            increased = np.ceil(1.01 * cur)
-            fallback = (increased > cap) | (increased == cur)
-            increased = np.where(fallback, cur + 1.0, increased)
-            active = active & ~(increased > cap)  # cannot increase: stop
-            if not active.any():
-                break
-            prev_p = cur
-            prev_h = h.copy()
-            p_new[active, slowest[active]] = increased[active]
-            h_step = self._estimate_h_batch(inputs, p_f, p_new, active=active)
-            h[active] = h_step[active]
-            rounds += 1
-            violating = active & (h < 0.99 * h_min)
-            if violating.any():
-                # back out the violating step — and restore the pre-step h
-                # with it, so the reported h describes the returned p', not
-                # the rejected candidate
-                p_new[violating, slowest[violating]] = prev_p[violating]
-                h[violating] = prev_h[violating]
-            active = active & ~violating
-
-        p_out = np.maximum(p_new, 1.0).astype(np.int64)
-        return p_out, h_min, h
+        """Algorithm 1 for S scenarios (no publish gate): see update_batch."""
+        p_new, h_min_out, last_h, _ = self.update_batch(p, inputs, h_min)
+        return p_new, h_min_out, last_h
 
     def optimize(self, p: Sequence[int], inputs: OptimizerInputs) -> np.ndarray:
         """Scalar entry point: Algorithm 1 for one scenario (S = 1 batch)."""
@@ -294,11 +225,15 @@ class LoadBalanceOptimizer:
         self, p: np.ndarray, p_new: np.ndarray, inputs: OptimizerInputs
     ) -> np.ndarray:
         """[S] bool: Eq.-(7) objective improves by > improvement_threshold."""
-        p = np.asarray(p, dtype=np.float64)
-        p_new_arr = np.asarray(p_new, dtype=np.float64)
-        cur = self.objective(self._e_total(inputs, p, p))
-        new = self.objective(self._e_total(inputs, p, p_new_arr))
-        return new < cur * (1.0 - self.improvement_threshold)
+        fn = jlb._should_publish_jitted(float(self.improvement_threshold))
+        with enable_x64():
+            out = fn(
+                jnp.asarray(p, jnp.float64),
+                jnp.asarray(p_new, jnp.float64),
+                jnp.asarray(inputs.e_comm, jnp.float64),
+                jnp.asarray(inputs.e_comp, jnp.float64),
+            )
+        return np.asarray(out, bool)
 
     def should_publish(
         self, p: Sequence[int], p_new: Sequence[int], inputs: OptimizerInputs

@@ -2,7 +2,14 @@
 
 import copy
 
-from benchmarks.bench_regression import compare_sweep, method_ranking
+import pytest
+
+from benchmarks.bench_regression import (
+    compare_convergence,
+    compare_sweep,
+    convergence_ranking,
+    method_ranking,
+)
 
 
 def make_payload():
@@ -100,3 +107,117 @@ def test_rerun_refuses_unreconstructable_cells():
     }
     with pytest.raises(GridMismatch, match="different grid cells"):
         rerun_grid(committed)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_convergence.json gate
+# ---------------------------------------------------------------------------
+
+
+def make_convergence_payload():
+    return {
+        "methods": {
+            "dsag": {"median_time_to_gap": 0.1},
+            "sgd": {"median_time_to_gap": None},  # never reaches the gap
+            "sag": {"median_time_to_gap": 0.3},
+            "coded": {"median_time_to_gap": 0.6},
+        },
+        "ordering": {
+            "dsag_fastest_to_gap": 1.0,
+            "ordering_dsag_sag_coded": 1.0,
+            "sag_over_dsag": 3.0,
+            "coded_over_dsag": 6.0,
+        },
+        "lb_scan": {
+            "bitexact_scan_vs_host": True,
+            "speedup_scan_over_host": 2.0,
+            "lb_scan_faster_than_host": True,
+            "ordering": {"dsag_lb_fastest_to_gap": 1.0},
+        },
+    }
+
+
+def test_convergence_identical_payloads_pass():
+    committed = make_convergence_payload()
+    failures, warnings = compare_convergence(committed, copy.deepcopy(committed))
+    assert failures == [] and warnings == []
+
+
+def test_convergence_ranking_puts_unreached_methods_last():
+    assert convergence_ranking(make_convergence_payload()["methods"]) == [
+        "dsag", "sag", "coded", "sgd",
+    ]
+
+
+def test_convergence_ranking_flip_fails():
+    fresh = make_convergence_payload()
+    fresh["methods"]["sag"]["median_time_to_gap"] = 0.05  # overtakes dsag
+    fresh["ordering"]["dsag_fastest_to_gap"] = 0.0
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("ranking flipped" in f for f in failures)
+    assert any("dsag_fastest_to_gap" in f for f in failures)
+
+
+def test_convergence_speedup_drift_only_warns():
+    fresh = make_convergence_payload()
+    fresh["ordering"]["sag_over_dsag"] = 3.6  # +20%
+    failures, warnings = compare_convergence(make_convergence_payload(), fresh)
+    assert failures == []
+    assert any("sag_over_dsag" in w for w in warnings)
+
+
+def test_lb_scan_bitexactness_loss_fails():
+    fresh = make_convergence_payload()
+    fresh["lb_scan"]["bitexact_scan_vs_host"] = False
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("bit-exact" in f for f in failures)
+
+
+def test_lb_scan_ordering_flip_fails():
+    fresh = make_convergence_payload()
+    fresh["lb_scan"]["ordering"]["dsag_lb_fastest_to_gap"] = 0.0
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("dsag_lb_fastest_to_gap" in f for f in failures)
+
+
+def test_lb_scan_wall_clock_flip_only_warns():
+    """The scan-vs-host speedup is wall clock: a noisy runner flipping the
+    faster-than-host bit (or drifting the ratio) must not block CI."""
+    fresh = make_convergence_payload()
+    fresh["lb_scan"]["lb_scan_faster_than_host"] = False
+    fresh["lb_scan"]["speedup_scan_over_host"] = 0.9
+    failures, warnings = compare_convergence(make_convergence_payload(), fresh)
+    assert failures == []
+    assert any("lb_scan_faster_than_host" in w for w in warnings)
+    assert any("speedup_scan_over_host" in w for w in warnings)
+
+
+def test_rerun_convergence_refuses_missing_recipe():
+    from benchmarks.bench_regression import GridMismatch, rerun_convergence
+
+    committed = make_convergence_payload()  # no recipe section
+    with pytest.raises(GridMismatch, match="recipe"):
+        rerun_convergence(committed)
+
+
+def test_convergence_ranking_ties_break_by_name_not_dict_order():
+    # two methods that never reach the gap: order must not depend on dict
+    # insertion (committed JSON is key-sorted, fresh payloads are not)
+    methods = {
+        "sgd": {"median_time_to_gap": None},
+        "coded": {"median_time_to_gap": None},
+        "dsag": {"median_time_to_gap": 0.1},
+    }
+    assert convergence_ranking(methods) == ["dsag", "coded", "sgd"]
+    reordered = {k: methods[k] for k in ("coded", "dsag", "sgd")}
+    assert convergence_ranking(reordered) == ["dsag", "coded", "sgd"]
+
+
+def test_gate_mode_rerun_without_wall_clock_fields_is_quiet():
+    """The single-run gate rerun omits warm wall-clock fields; comparing it
+    against a full committed artifact must neither fail nor warn."""
+    fresh = make_convergence_payload()
+    for key in ("speedup_scan_over_host", "lb_scan_faster_than_host"):
+        del fresh["lb_scan"][key]
+    failures, warnings = compare_convergence(make_convergence_payload(), fresh)
+    assert failures == [] and warnings == []

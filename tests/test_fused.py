@@ -200,18 +200,19 @@ class TestScanVsHost:
             )
             assert h.rejected_stale == scan.rejected_stale[s]
 
-    def test_load_balance_rejected_and_routed(self, logreg_small):
-        """§6 configs: the scan refuses (Algorithm 1 is host code) and the
-        auto dispatcher routes them to the host engine, which stays
-        bit-exact vs the scalar simulator on the same traces."""
+    def test_load_balance_runs_in_scan(self, logreg_small):
+        """§6 configs now run inside the scan: engine='auto' keeps them on
+        the fused path and the result stays bit-exact vs the scalar
+        simulator on the same traces (the full cross-engine §6 suite lives
+        in tests/test_lb_scan.py)."""
         cluster, traces = small_fleet(horizon=30)
         cfg = MethodConfig(
             name="dsag", w=2, eta=0.25, subpartitions=3,
             load_balance=True, lb_startup_delay=0.005, lb_interval=0.01,
         )
-        with pytest.raises(ValueError, match="load balancing"):
-            run_convergence_scan(logreg_small, traces, cfg, 30, seed=0)
+        scan = run_convergence_scan(logreg_small, traces, cfg, 30, seed=0)
         auto = run_convergence_batch(logreg_small, traces, cfg, 30, seed=0)
+        np.testing.assert_array_equal(scan.times, auto.times)
         sim = TrainingSimulator(
             logreg_small, cluster, cfg, seed=0,
             latency_source=TraceLatencySource(traces, 0),

@@ -8,7 +8,9 @@ from repro.lb.partitioner import (
     Subpartitioner,
     _align,
     align_partitions,
+    build_p_ladder,
     cyclic_increment,
+    ladder_intervals,
     p_start,
     p_stop,
     p_trans,
@@ -102,6 +104,115 @@ def test_repartition_alignment_minimizes_evictions():
     lo, hi = sub.current_interval()
     # old boundaries start at {1, 6}; new partition starts at an old boundary
     assert lo in (1, 6)
+
+
+# ---------------------------------------------------------------------------
+# p-ladder property tests (full-coverage / no-overlap / index-monotonicity
+# across arbitrary p -> p' repartition chains on the ladder)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(n=st.integers(min_value=1, max_value=5000), p0=st.integers(min_value=1, max_value=64))
+def test_ladder_is_sorted_valid_and_contains_p0(n, p0):
+    ladder = build_p_ladder(p0, n)
+    assert list(ladder) == sorted(set(ladder))
+    assert all(1 <= v <= n for v in ladder)
+    # the (clipped) initial subpartition count is always a rung
+    assert min(max(p0, ladder[0]), ladder[-1]) in ladder
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    p0=st.integers(min_value=1, max_value=64),
+    data=st.data(),
+)
+def test_ladder_partitions_tile_without_overlap(n, p0, data):
+    """Every ladder rung's partition grid covers [1, n] exactly once, with
+    monotone boundaries — the §6.3 arithmetic the slot universe is built on."""
+    ladder = build_p_ladder(p0, n)
+    p = data.draw(st.sampled_from(ladder))
+    starts = [p_start(n, p, k) for k in range(1, p + 1)]
+    stops = [p_stop(n, p, k) for k in range(1, p + 1)]
+    assert starts[0] == 1 and stops[-1] == n  # full coverage
+    for k in range(p - 1):
+        assert stops[k] + 1 == starts[k + 1]  # no overlap, no gap
+        assert starts[k] < starts[k + 1]  # index-monotone boundaries
+    assert all(a <= b for a, b in zip(starts, stops))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    p=st.integers(min_value=1, max_value=64),
+    p_new=st.integers(min_value=1, max_value=64),
+)
+def test_p_trans_is_monotone_and_identity(n, p, p_new):
+    p, p_new = min(p, n), min(p_new, n)
+    trans = [p_trans(n, p, p_new, k) for k in range(1, p + 1)]
+    assert all(a <= b for a, b in zip(trans, trans[1:]))  # index-monotone
+    assert all(1 <= t <= p_new for t in trans)
+    # p' = p maps every index to itself
+    assert [p_trans(n, p, p, k) for k in range(1, p + 1)] == list(range(1, p + 1))
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    base=st.integers(min_value=1, max_value=1000),
+    width=st.integers(min_value=1, max_value=200),
+    p0=st.integers(min_value=1, max_value=32),
+    data=st.data(),
+)
+def test_repartition_chains_on_the_ladder_preserve_invariants(
+    base, width, p0, data
+):
+    """Arbitrary p -> p' chains restricted to the ladder: every repartition
+    aligns the next subpartition to an *old* boundary (Algorithm 2), and a
+    full cycle after any repartition still covers the worker's local range
+    exactly once."""
+    ladder = build_p_ladder(p0, width)
+    sub = Subpartitioner(base_start=base, base_stop=base + width - 1, p=min(p0, width))
+    chain = data.draw(st.lists(st.sampled_from(ladder), min_size=1, max_size=5))
+    for p_new in chain:
+        old_p = sub.p
+        old_boundaries = {p_start(sub.n_local, old_p, k) for k in range(1, old_p + 1)}
+        sub.advance()  # mid-cycle, like a worker between tasks
+        sub.repartition(p_new)
+        lo, hi = sub.current_interval()
+        assert base <= lo <= hi <= base + width - 1
+        # Algorithm-2 alignment: the next interval starts at an old boundary
+        assert (lo - base + 1) in old_boundaries
+        # one full cycle covers the local range exactly once (no overlap)
+        seen = []
+        for _ in range(sub.p):
+            a, b = sub.next_interval_and_advance()
+            seen.extend(range(a, b + 1))
+        assert sorted(seen) == list(range(base, base + width))
+        assert len(seen) == width
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    base=st.integers(min_value=1, max_value=500),
+    width=st.integers(min_value=1, max_value=120),
+    p0=st.integers(min_value=1, max_value=32),
+)
+def test_ladder_intervals_enumerate_every_reachable_interval(base, width, p0):
+    """The slot universe really is a superset of anything a ladder chain can
+    produce: every (rung, cyclic index) interval appears exactly once, in
+    sorted order, inside the worker's range."""
+    ladder = build_p_ladder(p0, width)
+    ivs = ladder_intervals(base, base + width - 1, ladder)
+    assert ivs == sorted(set(ivs))
+    assert all(base <= a <= b <= base + width - 1 for a, b in ivs)
+    universe = set(ivs)
+    for raw in ladder:
+        p = min(raw, width)
+        for k in range(1, p + 1):
+            lo = base + p_start(width, p, k) - 1
+            hi = base + p_stop(width, p, k) - 1
+            assert (lo, hi) in universe
 
 
 # ---------------------------------------------------------------------------
