@@ -19,7 +19,13 @@ semantic change to an engine or the latency model.  The gate:
 
 The convergence artifact's ``pca_paper_scale`` column is *not* re-run
 here (it takes minutes by design); its orderings are covered at reduced
-scale by the slow-marked tests.
+scale by the slow-marked tests.  The ``pca_grid_sharded`` column *is*
+re-run: the 10x scenario grid goes through the sharded scan (however many
+devices the runner exposes — CI sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and through the
+single-device scan; ordering flips and any sharded-vs-unsharded
+bit-exactness break fail, while the wall-clock device-scaling ratio only
+warns (fake host devices timeslice a single core).
 
 Run from the repo root:
 
@@ -226,6 +232,12 @@ def compare_convergence(committed: dict, fresh: dict) -> Tuple[List[str], List[s
                     f"lb_scan: speedup_scan_over_host drifted {drift:.0%} "
                     f"({os_:.2f} -> {ns_:.2f})"
                 )
+    old_ps = committed.get("pca_grid_sharded")
+    new_ps = fresh.get("pca_grid_sharded")
+    if old_ps is not None and new_ps is not None:
+        ps_failures, ps_warnings = compare_pca_grid_sharded(old_ps, new_ps)
+        failures.extend(ps_failures)
+        warnings.extend(ps_warnings)
     return failures, warnings
 
 
@@ -256,15 +268,15 @@ def run_lb_scan_column(
     """
     import numpy as np
 
-    from repro.experiments import run_convergence_batch
+    from repro.experiments import EngineConfig, run_convergence_batch
 
     cfg = dataclasses.replace(dsag_config, load_balance=True)
 
-    def run(engine: str):
+    def run(kind: str):
         t0 = time.perf_counter()
         res = run_convergence_batch(
             problem, traces, cfg, num_iterations,
-            eval_every=eval_every, seed=seed, engine=engine,
+            eval_every=eval_every, seed=seed, engine=EngineConfig(kind=kind),
         )
         return res, time.perf_counter() - t0
 
@@ -327,6 +339,111 @@ def run_lb_scan_column(
             lb_scan_faster_than_host=bool(scan_s < host_s),
         )
     return out
+
+
+def run_pca_grid_sharded_column(
+    *,
+    n_scenarios: int = 40,
+    num_devices: Optional[int] = None,
+    seed: int = 0,
+) -> dict:
+    """10x the calibrated paper-scale PCA grid through the *sharded* scan.
+
+    Runs the grid twice — once on a ``num_devices``-wide scenario mesh
+    (clamped to the devices actually present; CPU demo via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and once on the
+    single-device scan — and records per-method bit-exactness between the
+    two plus the wall-clock device-scaling ratio.  Orderings and
+    bit-exactness are deterministic (gate failures); the scaling ratio is
+    wall clock and only ever warns (a single-core runner timeslices its
+    fake host devices, so ~1x there is expected).
+    """
+    import jax
+    import numpy as np
+
+    from repro.experiments import (
+        EngineConfig,
+        convergence_payload,
+        paper_scale_pca_sweep,
+    )
+
+    avail = len(jax.devices())
+    D = min(num_devices if num_devices is not None else 4, avail)
+    sharded_out, gap = paper_scale_pca_sweep(
+        seed=seed,
+        n_scenarios=n_scenarios,
+        engine=EngineConfig(kind="scan", num_devices=D),
+    )
+    plain_out, _ = paper_scale_pca_sweep(
+        seed=seed, n_scenarios=n_scenarios, engine=EngineConfig(kind="scan")
+    )
+    bitexact = all(
+        np.array_equal(
+            sharded_out.results[m].times, plain_out.results[m].times
+        )
+        and np.array_equal(
+            sharded_out.results[m].suboptimality,
+            plain_out.results[m].suboptimality,
+            equal_nan=True,
+        )
+        for m in sharded_out.results
+    )
+    payload = convergence_payload(sharded_out, gap)
+    payload.update(
+        num_devices=D,
+        seed=seed,
+        bitexact_sharded_vs_unsharded=bool(bitexact),
+        sharded_seconds=sharded_out.engine_seconds,
+        unsharded_seconds=plain_out.engine_seconds,
+        device_scaling=plain_out.engine_seconds
+        / max(sharded_out.engine_seconds, 1e-12),
+    )
+    return payload
+
+
+def compare_pca_grid_sharded(committed: dict, fresh: dict) -> Tuple[List[str], List[str]]:
+    """Diff the ``pca_grid_sharded`` columns; returns (failures, warnings)."""
+    failures: List[str] = []
+    warnings: List[str] = []
+    if not fresh.get("bitexact_sharded_vs_unsharded", False):
+        failures.append(
+            "pca_grid_sharded: sharded grid no longer bit-exact vs the "
+            "single-device scan"
+        )
+    old_rank = convergence_ranking(committed["methods"])
+    new_rank = convergence_ranking(fresh["methods"])
+    if old_rank != new_rank:
+        failures.append(
+            f"pca_grid_sharded: time-to-gap ranking flipped "
+            f"{old_rank} -> {new_rank}"
+        )
+    old_o, new_o = committed["ordering"], fresh["ordering"]
+    for verdict in ("dsag_fastest_to_gap", "ordering_dsag_sag_coded"):
+        if old_o.get(verdict) != new_o.get(verdict):
+            failures.append(
+                f"pca_grid_sharded: {verdict} flipped "
+                f"{old_o.get(verdict)} -> {new_o.get(verdict)}"
+            )
+    for key in CONV_SPEEDUP_KEYS:
+        if key in old_o and key in new_o and old_o[key] and old_o[key] > 0:
+            drift = abs(new_o[key] / old_o[key] - 1.0)
+            if drift > SPEEDUP_DRIFT_TOLERANCE:
+                warnings.append(
+                    f"pca_grid_sharded: {key} drifted {drift:.0%} "
+                    f"({old_o[key]:.2f} -> {new_o[key]:.2f})"
+                )
+    # the device-scaling ratio is wall clock (and ~1x on a single-core
+    # runner timeslicing fake host devices) — drift only warns
+    os_, ns_ = committed.get("device_scaling"), fresh.get("device_scaling")
+    if os_ and ns_ and os_ > 0:
+        drift = abs(ns_ / os_ - 1.0)
+        if drift > SPEEDUP_DRIFT_TOLERANCE:
+            warnings.append(
+                f"pca_grid_sharded: device_scaling drifted {drift:.0%} "
+                f"({os_:.2f} -> {ns_:.2f}) on "
+                f"{fresh.get('num_devices')} device(s) (wall clock)"
+            )
+    return failures, warnings
 
 
 def rerun_convergence(committed: dict) -> dict:
@@ -406,6 +523,13 @@ def rerun_convergence(committed: dict) -> dict:
             # the warn-only wall-clock fields are left out
             warm_timings=False,
         )
+    if "pca_grid_sharded" in committed:
+        ps = committed["pca_grid_sharded"]
+        payload["pca_grid_sharded"] = run_pca_grid_sharded_column(
+            n_scenarios=ps["grid"]["n_scenarios"],
+            num_devices=ps.get("num_devices"),
+            seed=ps.get("seed", 0),
+        )
     return payload
 
 
@@ -428,6 +552,8 @@ def main(argv: List[str]) -> int:
             fresh = rerun_convergence(committed)
             failures, warnings = compare_convergence(committed, fresh)
             scope = "convergence grid + lb_scan column"
+            if "pca_grid_sharded" in committed:
+                scope += " + pca_grid_sharded column"
         else:
             fresh = rerun_grid(committed)
             failures, warnings = compare_sweep(committed, fresh)

@@ -265,7 +265,9 @@ def fig10_12_convergence_sweep() -> None:
     10-scenario heavy-burst fleet via the fused-scan engine, with the scalar
     TrainingSimulator timed on a subset for the speedup claim, plus the
     paper-scale PCA column (n=50k genomics-like matrix, the paper's actual
-    workload size); emits the BENCH_convergence.json artifact."""
+    workload size) and the pca_grid_sharded column (10x that scenario grid
+    through the shard_map scenario mesh, bit-exact vs the single-device
+    scan); emits the BENCH_convergence.json artifact."""
     from repro.experiments import (
         convergence_payload,
         default_convergence_methods,
@@ -308,6 +310,16 @@ def fig10_12_convergence_sweep() -> None:
     pca_out, pca_gap = paper_scale_pca_sweep(seed=0)
     pca_payload = convergence_payload(pca_out, pca_gap)
 
+    # pca_grid_sharded column: 10x that scenario grid in one dispatch
+    # through the shard_map scenario mesh, checked bit-exact against the
+    # single-device scan (CPU demo: run under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=4)
+    from benchmarks.bench_regression import run_pca_grid_sharded_column
+
+    sharded_payload = run_pca_grid_sharded_column(
+        n_scenarios=10 * pca_out.traces.num_scenarios, seed=0
+    )
+
     gap = 0.2
     # §6 lb_scan column: DSAG with the load balancer in the loop, through
     # the fused scan AND the host engine on the same traces — the fused LB
@@ -348,6 +360,7 @@ def fig10_12_convergence_sweep() -> None:
                 "speedup": extrapolated / max(batched_pair, 1e-12),
             },
             "pca_paper_scale": pca_payload,
+            "pca_grid_sharded": sharded_payload,
             "lb_scan": lb_payload,
             # everything the regression gate needs to re-execute this grid
             # (benchmarks/bench_regression.py rerun_convergence)
@@ -385,6 +398,17 @@ def fig10_12_convergence_sweep() -> None:
         f"sag_over_dsag={po['sag_over_dsag']:.2f};"
         f"coded_over_dsag={po['coded_over_dsag']:.2f};"
         f"ordering_dsag_sag_coded={bool(po['ordering_dsag_sag_coded'])}",
+    )
+    so = sharded_payload["ordering"]
+    record(
+        "fig10_12_pca_grid_sharded",
+        sharded_payload["sharded_seconds"] * 1e6,
+        f"scenarios={sharded_payload['grid']['n_scenarios']};"
+        f"devices={sharded_payload['num_devices']};"
+        f"bitexact={sharded_payload['bitexact_sharded_vs_unsharded']};"
+        f"device_scaling={sharded_payload['device_scaling']:.2f};"
+        f"sag_over_dsag={so['sag_over_dsag']:.2f};"
+        f"ordering_dsag_sag_coded={bool(so['ordering_dsag_sag_coded'])}",
     )
     record(
         "fig10_12_lb_scan",

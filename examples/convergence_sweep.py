@@ -14,7 +14,9 @@ shared heavy-burst trace draw — all scenarios resolved at once by the fused
 ``jax.lax.scan`` convergence engine (``--engine host`` selects the
 numpy-driven batched loop instead), which is bit-exact against the scalar
 ``TrainingSimulator`` (``--check-scalar`` verifies one scenario end to end
-and times the scalar loop for the speedup report).
+and times the scalar loop for the speedup report).  ``--devices D`` shards
+the scenario axis over a D-device mesh (bit-exact vs the single-device
+scan); on CPU demo with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
 
 ``--problem pca`` switches the workload to PCA of a synthetic genomics-like
 matrix (paper §2); ``--paper-scale`` applies the calibrated paper-scale
@@ -37,6 +39,7 @@ from repro.core.problems import (
 )
 from repro.experiments import (
     PAPER_SCALE_PCA,
+    EngineConfig,
     convergence_ordering,
     default_convergence_methods,
     paper_scale_pca_sweep,
@@ -74,10 +77,17 @@ def main() -> None:
     ap.add_argument("--engine", choices=("auto", "scan", "host"), default="auto",
                     help="fused jax.lax.scan engine (auto/scan) or the "
                     "numpy-driven batched host loop")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the scenario axis of the fused scan over "
+                    "this many devices (CPU demo: set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    ap.add_argument("--slot-budget", type=int, default=None,
+                    help="override the fused engine's §6 slot budget "
+                    "(default repro.experiments.fused.LB_MAX_SLOTS)")
     ap.add_argument("--load-balance", action="store_true",
                     help="run DSAG with the §6 load balancer in the loop "
-                    "(runs inside the fused scan; oversized slot universes "
-                    "fall back to the host engine under --engine auto)")
+                    "(runs inside the fused scan; slot universes above the "
+                    "budget use the tiled active-slot cache)")
     ap.add_argument("--out", default=None, help="write BENCH-style JSON here")
     ap.add_argument(
         "--check-scalar",
@@ -88,9 +98,15 @@ def main() -> None:
     args = ap.parse_args()
     if args.paper_scale:
         args.problem = "pca"
+    engine = EngineConfig(
+        kind=args.engine,
+        num_devices=args.devices,
+        slot_budget=args.slot_budget,
+        eval_every=args.eval_every,
+    )
 
     if args.paper_scale:
-        out, default_gap = paper_scale_pca_sweep(seed=0, engine=args.engine)
+        out, default_gap = paper_scale_pca_sweep(seed=0, engine=engine)
         N = out.traces.num_workers
         print(
             f"paper-scale PCA: n={out.problem.num_samples} rows, {N} workers, "
@@ -123,13 +139,15 @@ def main() -> None:
             prob, cluster, methods,
             n_scenarios=args.scenarios, num_iterations=args.iters,
             eval_every=args.eval_every, regime=HEAVY_BURSTS, seed=0,
-            engine=args.engine,
+            engine=engine,
         )
     gap = default_gap if args.gap is None else args.gap
     print(
         f"{len(out.methods)} methods x {out.traces.num_scenarios} scenarios x "
         f"{out.num_iterations} iterations in {out.engine_seconds:.2f}s "
-        f"({args.engine} engine)"
+        f"({args.engine} engine"
+        + (f", {args.devices}-device grid" if args.devices else "")
+        + ")"
     )
 
     scalar_s = measured = None

@@ -99,9 +99,17 @@ class SlotUniverse:
 
 
 def build_slot_universe(
-    base_start, base_stop, ladder: Tuple[int, ...]
+    base_start, base_stop, ladder: Tuple[int, ...], *, with_overlaps: bool = True
 ) -> SlotUniverse:
-    """Enumerate the p-ladder's reachable intervals (see :class:`SlotUniverse`)."""
+    """Enumerate the p-ladder's reachable intervals (see :class:`SlotUniverse`).
+
+    ``with_overlaps=False`` skips the per-worker pairwise overlap tables
+    (quadratic in per-worker slot count, and the dominant build cost for
+    large universes): the fused engine's *tiled* cache computes overlaps
+    against its small active entry set at runtime instead, so it only
+    needs ``starts``/``stops``/``widths`` and the ``slot_table``.
+    ``overlap_idx`` is then a ``[E, 1]`` all ``-1`` placeholder.
+    """
     from repro.lb.partitioner import p_start, p_stop
 
     base_start = np.asarray(base_start, dtype=np.int64)
@@ -133,21 +141,24 @@ def build_slot_universe(
     stops_a = np.asarray(stops, dtype=np.int64)
     owner_a = np.asarray(owner, dtype=np.int64)
     E = starts_a.size
-    per_slot: List[np.ndarray] = [np.empty(0, np.int64)] * E
-    omax = 1
-    for i in range(N):
-        sl = np.flatnonzero(owner_a == i)
-        a, b = starts_a[sl], stops_a[sl]
-        inter = (a[:, None] <= b[None, :]) & (a[None, :] <= b[:, None])
-        np.fill_diagonal(inter, False)
-        for row, sid in enumerate(sl):
-            ov = sl[inter[row]]
-            ov = ov[np.argsort(starts_a[ov], kind="stable")]
-            per_slot[int(sid)] = ov
-            omax = max(omax, ov.size)
-    overlap_idx = np.full((E, omax), -1, dtype=np.int64)
-    for e, ov in enumerate(per_slot):
-        overlap_idx[e, : ov.size] = ov
+    if with_overlaps:
+        per_slot: List[np.ndarray] = [np.empty(0, np.int64)] * E
+        omax = 1
+        for i in range(N):
+            sl = np.flatnonzero(owner_a == i)
+            a, b = starts_a[sl], stops_a[sl]
+            inter = (a[:, None] <= b[None, :]) & (a[None, :] <= b[:, None])
+            np.fill_diagonal(inter, False)
+            for row, sid in enumerate(sl):
+                ov = sl[inter[row]]
+                ov = ov[np.argsort(starts_a[ov], kind="stable")]
+                per_slot[int(sid)] = ov
+                omax = max(omax, ov.size)
+        overlap_idx = np.full((E, omax), -1, dtype=np.int64)
+        for e, ov in enumerate(per_slot):
+            overlap_idx[e, : ov.size] = ov
+    else:
+        overlap_idx = np.full((max(E, 1), 1), -1, dtype=np.int64)
     return SlotUniverse(
         starts=starts_a,
         stops=stops_a,
@@ -155,6 +166,37 @@ def build_slot_universe(
         slot_table=slot_table,
         overlap_idx=overlap_idx,
     )
+
+
+def active_slot_capacity(universe: SlotUniverse) -> np.ndarray:
+    """Per-worker hard cap on simultaneously *active* cache entries.
+
+    A worker's active entries are pairwise-disjoint intervals drawn from
+    its slot universe, so no run can ever hold more of them than the
+    largest disjoint subset of that universe — the classic greedy
+    interval-scheduling count (sort by stop, take every interval starting
+    after the last taken stop).  The fused engine's tiled cache sizes its
+    per-worker entry tables with this bound, which also guarantees a free
+    entry always exists at insert time: after evictions the active set
+    plus the incoming interval is again disjoint, hence within the cap.
+    """
+    slot_table = universe.slot_table
+    N = slot_table.shape[0]
+    caps = np.zeros(N, dtype=np.int64)
+    for i in range(N):
+        sl = np.unique(slot_table[i][slot_table[i] >= 0])
+        if sl.size == 0:
+            continue
+        a, b = universe.starts[sl], universe.stops[sl]
+        order = np.argsort(b, kind="stable")
+        count = 0
+        last = np.iinfo(np.int64).min
+        for j in order:
+            if a[j] > last:
+                count += 1
+                last = b[j]
+        caps[i] = count
+    return caps
 
 
 @dataclasses.dataclass

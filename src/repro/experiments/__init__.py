@@ -12,7 +12,8 @@ relate to the scalar simulators):
   once, bit-exact against the scalar ``TrainingSimulator``;
 * :mod:`repro.experiments.fused` — the fused ``jax.lax.scan`` convergence
   engine: the whole iteration body as one jittable function, bit-exact
-  against the host engine (the default for non-load-balanced configs);
+  against the host engine, optionally sharded over the scenario axis
+  (execution selected by :class:`~repro.experiments.engine.EngineConfig`);
 * :mod:`repro.experiments.grid` — the (seeds x methods x w x regimes) driver
   with common-random-number trace sharing per regime;
 * :mod:`repro.experiments.results` — ordering verdicts, the profiler feed,
@@ -57,7 +58,16 @@ from repro.experiments.convergence import (
     scalar_convergence_run,
     scalar_convergence_seconds,
 )
-from repro.experiments.fused import run_convergence_scan
+from repro.experiments.engine import (
+    CAP_ACTIVE_SET,
+    CAP_OK,
+    CAP_TILED,
+    EngineCapability,
+    EngineCapabilityError,
+    EngineConfig,
+    as_engine_config,
+)
+from repro.experiments.fused import run_convergence_scan, scan_capability
 from repro.experiments.results import (
     convergence_ordering,
     convergence_payload,
@@ -68,15 +78,22 @@ __all__ = [
     "BatchedRunResult",
     "BurstRegime",
     "CALM",
+    "CAP_ACTIVE_SET",
+    "CAP_OK",
+    "CAP_TILED",
     "ConvergenceBatchResult",
     "ConvergenceSweepOutcome",
     "DEFAULT_REGIMES",
+    "EngineCapability",
+    "EngineCapabilityError",
+    "EngineConfig",
     "HEAVY_BURSTS",
     "MethodSpec",
     "PAPER_BURSTS",
     "PAPER_SCALE_PCA",
     "SweepOutcome",
     "SweepRow",
+    "as_engine_config",
     "convergence_ordering",
     "convergence_payload",
     "default_convergence_methods",
@@ -90,6 +107,7 @@ __all__ = [
     "run_convergence_batch",
     "run_convergence_scan",
     "run_convergence_sweep",
+    "scan_capability",
     "run_sweep",
     "scalar_convergence_run",
     "scalar_convergence_seconds",

@@ -53,6 +53,7 @@ from repro.cluster.simulator import (
 )
 from repro.core.gradient_cache import BatchedGradientCache, scenario_ranks
 from repro.core.problems import FiniteSumProblem
+from repro.experiments.engine import EngineConfig, as_engine_config
 from repro.latency.model import ClusterLatencyModel, FleetTraces, sample_fleet
 from repro.latency.profiler import MomentBuffer
 from repro.lb.optimizer import LoadBalanceOptimizer
@@ -110,9 +111,9 @@ def run_convergence_batch(
     num_iterations: int,
     *,
     cost_scale: float = 1.0,
-    eval_every: int = 1,
+    eval_every: Optional[int] = None,
     seed: int = 0,
-    engine: str = "auto",
+    engine: Optional[EngineConfig] = None,
 ) -> ConvergenceBatchResult:
     """Train ``config`` on every scenario of ``traces`` simultaneously.
 
@@ -121,34 +122,47 @@ def run_convergence_batch(
     for each scenario ``s`` — resolved with ``[S, N]`` array operations and
     batched JAX subgradient evaluation instead of a per-event Python loop.
 
-    ``engine`` selects the implementation:
+    ``engine`` is an :class:`~repro.experiments.engine.EngineConfig`
+    selecting the implementation (default: ``EngineConfig()``):
 
-    * ``"scan"`` — the fused ``jax.lax.scan`` engine
+    * ``kind="scan"`` — the fused ``jax.lax.scan`` engine
       (:func:`repro.experiments.fused.run_convergence_scan`): the whole
       iteration body (event algebra, subgradients, cache scatter, iterate
-      update, suboptimality, and the §6 load balancer with its
-      pre-allocated slot universe) is one jittable function scanned over
-      iterations.  Raises ``ValueError`` for the one unsupported case —
-      a §6 slot universe above ``fused.LB_MAX_SLOTS``.
-    * ``"host"`` — the numpy-driven batched loop below (one Python
-      iteration per training iteration, batched kernels inside).
-    * ``"auto"`` (default) — ``"scan"``, except for the documented
-      slot-universe escape hatch
-      (:func:`repro.experiments.fused.scan_unsupported_reason`), which
-      routes to ``"host"``.
+      update, suboptimality, and the §6 load balancer) is one jittable
+      function scanned over iterations; §6 slot universes above the
+      config's ``slot_budget`` run with the tiled active-slot cache, and
+      ``mesh`` / ``num_devices`` shard the scenario axis over devices.
+      Raises :class:`~repro.experiments.engine.EngineCapabilityError` for
+      the one genuinely unsupported case
+      (:func:`repro.experiments.fused.scan_capability`).
+    * ``kind="host"`` — the numpy-driven batched loop below (one Python
+      iteration per training iteration, batched kernels inside; the
+      device mesh does not apply here).
+    * ``kind="auto"`` (default) — ``"scan"`` unless the capability report
+      says unsupported, which routes to ``"host"``.
+
+    Legacy ``engine="auto"|"scan"|"host"`` strings still work as
+    deprecated aliases (``DeprecationWarning``).  ``eval_every`` defaults
+    to the engine config's cadence (itself defaulting to 1); passing it
+    explicitly overrides both.
 
     All engines are bit-exact against each other and against the scalar
     simulator (pinned by ``tests/test_convergence.py`` /
-    ``tests/test_fused.py`` / ``tests/test_lb_scan.py``).
+    ``tests/test_fused.py`` / ``tests/test_lb_scan.py`` /
+    ``tests/test_sharded.py``).
     """
-    if engine not in ("auto", "scan", "host"):
-        raise ValueError(f"unknown engine {engine!r}")
-    if engine == "auto":
-        from repro.experiments.fused import scan_unsupported_reason
+    eng = as_engine_config(engine)
+    if eval_every is None:
+        eval_every = eng.eval_every
+    kind = eng.kind
+    if kind == "auto":
+        from repro.experiments.fused import scan_capability
 
-        reason = scan_unsupported_reason(problem, config, traces.num_workers)
-        engine = "host" if reason else "scan"
-    if engine == "scan":
+        cap = scan_capability(
+            problem, config, traces.num_workers, slot_budget=eng.slot_budget
+        )
+        kind = "scan" if cap.supported else "host"
+    if kind == "scan":
         from repro.experiments.fused import run_convergence_scan
 
         return run_convergence_scan(
@@ -159,6 +173,7 @@ def run_convergence_batch(
             cost_scale=cost_scale,
             eval_every=eval_every,
             seed=seed,
+            engine=eng,
         )
     S, N = traces.num_scenarios, traces.num_workers
     n = problem.num_samples
@@ -515,7 +530,7 @@ def run_convergence_sweep(
     burst_factor_mean: Optional[float] = None,
     burst_duration_mean: Optional[float] = None,
     seed: int = 0,
-    engine: str = "auto",
+    engine: Optional[EngineConfig] = None,
 ) -> ConvergenceSweepOutcome:
     """Run every method over one shared scenario batch (common random
     numbers: all methods see the same latency draws, like the paper's
@@ -523,8 +538,9 @@ def run_convergence_sweep(
 
     ``regime`` is an optional :class:`~repro.experiments.grid.BurstRegime`
     (the iteration-time grid's burst environments); explicit ``burst_*``
-    keywords override its fields.  ``engine`` is forwarded to
-    :func:`run_convergence_batch` per method.
+    keywords override its fields.  ``engine`` (an
+    :class:`~repro.experiments.engine.EngineConfig` or a deprecated legacy
+    string) is forwarded to :func:`run_convergence_batch` per method.
     """
     if regime is not None:
         burst_rate = regime.rate if burst_rate is None else burst_rate
@@ -543,6 +559,7 @@ def run_convergence_sweep(
         burst_duration_mean=burst_duration_mean,
         seed=seed + 1,
     )
+    eng = as_engine_config(engine)
     results: Dict[str, ConvergenceBatchResult] = {}
     t0 = time.perf_counter()
     for name, cfg in methods.items():
@@ -554,7 +571,7 @@ def run_convergence_sweep(
             cost_scale=cost_scale,
             eval_every=eval_every,
             seed=seed,
-            engine=engine,
+            engine=eng,
         )
     engine_seconds = time.perf_counter() - t0
     return ConvergenceSweepOutcome(
@@ -609,13 +626,17 @@ def paper_scale_pca_sweep(
     scale: float = 1.0,
     seed: int = 0,
     regime=None,
-    engine: str = "auto",
+    engine: Optional[EngineConfig] = None,
+    n_scenarios: Optional[int] = None,
 ) -> Tuple[ConvergenceSweepOutcome, float]:
     """Run the calibrated paper-scale PCA convergence sweep.
 
     ``scale`` shrinks the grid uniformly (rows, iterations, scenarios) for
-    smoke tests; 1.0 is the benchmark configuration.  Returns
-    ``(outcome, gap)`` with ``gap`` the calibrated time-to-gap threshold.
+    smoke tests; 1.0 is the benchmark configuration.  ``n_scenarios``
+    overrides the scenario count alone (the ``pca_grid_sharded`` bench
+    column runs 10x the calibrated grid through the sharded scan).
+    Returns ``(outcome, gap)`` with ``gap`` the calibrated time-to-gap
+    threshold.
     """
     from repro.experiments.grid import HEAVY_BURSTS
     from repro.latency.model import make_heterogeneous_cluster
@@ -623,7 +644,11 @@ def paper_scale_pca_sweep(
     p = PAPER_SCALE_PCA
     n_rows = max(int(p["n_rows"] * scale), 512)
     n_iter = max(int(p["num_iterations"] * scale), 10)
-    n_scen = max(int(p["n_scenarios"] * scale), 2)
+    n_scen = (
+        int(n_scenarios)
+        if n_scenarios is not None
+        else max(int(p["n_scenarios"] * scale), 2)
+    )
     prob = make_paper_scale_pca(n_rows=n_rows, seed=seed)
     N, sp = p["n_workers"], p["subpartitions"]
     c_task = prob.compute_cost(1, max(prob.num_samples // (N * sp), 1))

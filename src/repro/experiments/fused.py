@@ -1,13 +1,13 @@
 """Fused ``jax.lax.scan`` convergence engine.
 
 The host engine (:func:`repro.experiments.convergence.run_convergence_batch`
-with ``engine="host"``) runs one Python iteration per training iteration and
-dispatches batched kernels from it.  This module compiles the *entire*
-iteration body — §4.2 event algebra, §3 trace replay, block subgradients,
-the §5 cache update as masked scatters, the iterate update, and the
-suboptimality evaluation — into one jittable function and scans it over the
-whole run: a single XLA dispatch for a complete ``[S]``-scenario training
-sweep, ready for accelerators.
+with ``EngineConfig(kind="host")``) runs one Python iteration per training
+iteration and dispatches batched kernels from it.  This module compiles the
+*entire* iteration body — §4.2 event algebra, §3 trace replay, block
+subgradients, the §5 cache update as masked scatters, the iterate update,
+and the suboptimality evaluation — into one jittable function and scans it
+over the whole run: a single XLA dispatch for a complete ``[S]``-scenario
+training sweep, ready for accelerators.
 
 Bit-exactness contract (pinned by ``tests/test_fused.py``): for every
 scenario, the scan produces the same bits as the host engine and the scalar
@@ -23,35 +23,66 @@ trace.  Three ingredients make that possible:
   :func:`~repro.core.problems.width_bucket` ladder — one kernel call per
   possible bucket, rows selected by their actual width — so a given
   (iterate, interval) is always computed at the same static shape;
-* the §5 cache is a *fixed slot universe*: without §6 repartitioning the
-  interval set is exactly the initial subpartition grid, so per-scenario
-  cache state is dense ``[S, E]`` arrays and each event rank applies as one
-  masked scatter, sequenced per scenario in event-time order by an inner
-  ``fori_loop`` (float accumulation order preserved).
+* the §5 cache applies events rank by rank in per-scenario event-time
+  order (an inner ``fori_loop``), preserving the host cache's float
+  accumulation order bit for bit.
 
-§6 load-balanced configs run inside the scan too (``_run_scan_lb``): the
-carry additionally holds the profiler's task-slot sample buffers, the
-per-worker ladder index of the current subpartition count, the optimizer's
-``h_min``/schedule state, and pending repartitions; Algorithm 1 itself is
-the jittable :mod:`repro.lb.jit_optimizer` (the same traceable functions
-the host optimizer jits), and the cache's slot universe is pre-allocated
-over every interval the p-ladder can reach
-(:func:`repro.core.gradient_cache.build_slot_universe`), so a repartition
-is a mask flip over static shapes.  The one genuinely unsupported case —
-a slot universe larger than :data:`LB_MAX_SLOTS` — raises a
-``ValueError`` here; ``engine="auto"`` routes only that case to the host
-engine (the documented escape hatch).
+There is ONE per-iteration scan body (:func:`_run_scan`), parameterized by
+the static :class:`_StaticSpec` along two axes:
+
+* the **(lo, hi, slot) source** — the fixed subpartition grid for plain
+  configs, or the §6 candidate after the Algorithm-2 alignment walk for
+  load-balanced ones (which also carry the profiler buffers, ladder
+  indices, ``h_min``/schedule state, and run the jittable Algorithm 1 of
+  :mod:`repro.lb.jit_optimizer` inside the scan);
+* the **cache layout** (``spec.cache_mode``):
+
+  - ``"grid"`` — no §6: the interval set is exactly the initial
+    subpartition grid, state is dense ``[S, E]``, an active exact-match
+    slot is the only possible overlap (the SAG fast path).
+  - ``"universe"`` — §6 with the pre-allocated ladder universe
+    (:func:`repro.core.gradient_cache.build_slot_universe`): dense
+    ``[S, E]`` state over every interval the p-ladder can reach, with
+    the statically tabulated overlap lists driving the scalar cache's
+    eviction walk.
+  - ``"tiled"`` — §6 universes above the slot budget: per-worker
+    *active-entry* tables of capacity
+    :func:`repro.core.gradient_cache.active_slot_capacity` (the greedy
+    interval-scheduling bound on simultaneously active disjoint
+    intervals).  Overlaps are computed against the small active set at
+    runtime from the universe's start/stop tables, so memory drops from
+    ``E ≈ N * sum(ladder)`` to ``N * A`` value buffers while keeping the
+    scalar walk's float order.  This is how arbitrarily large §6 configs
+    stay on the scan path instead of tripping :data:`LB_MAX_SLOTS`.
+
+Multi-device: :func:`run_convergence_scan` shards the scenario axis over a
+1-D ``"data"`` mesh (:func:`repro.launch.mesh.make_scenario_mesh`) with
+``shard_map`` when the :class:`~repro.experiments.engine.EngineConfig`
+names devices.  Every per-scenario quantity is row-independent; the only
+cross-scenario values are dynamic trip counts and ``lax.cond`` decisions
+whose skipped work is an exact no-op, so per-device shards produce the
+same bits as the single-device scan (pinned by ``tests/test_sharded.py``).
+Uneven ``S % num_devices`` batches are edge-padded and sliced back.
+
+Capability: :func:`scan_capability` reports whether a config runs (and
+with which cache layout) as a structured
+:class:`~repro.experiments.engine.EngineCapability` with stable reason
+codes; the one genuinely unsupported case — an *active-entry* footprint
+above the slot budget — raises
+:class:`~repro.experiments.engine.EngineCapabilityError`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
+from jax.sharding import PartitionSpec as P
 
 from repro.cluster.simulator import (
     MethodConfig,
@@ -60,15 +91,30 @@ from repro.cluster.simulator import (
     margin_deadline,
     task_finish_time,
 )
-from repro.core.gradient_cache import SlotUniverse, build_slot_universe
+from repro.core.gradient_cache import (
+    SlotUniverse,
+    active_slot_capacity,
+    build_slot_universe,
+)
 from repro.core.problems import FiniteSumProblem, FusedKernels, width_bucket
+from repro.experiments.engine import (
+    CAP_ACTIVE_SET,
+    CAP_OK,
+    CAP_TILED,
+    EngineCapability,
+    EngineCapabilityError,
+    EngineConfig,
+    as_engine_config,
+)
 from repro.latency.model import FleetTraces, comp_latency_expr
 from repro.lb import jit_optimizer as jlb
 from repro.lb.partitioner import p_start, p_stop
 
-#: ceiling on the pre-allocated §6 slot universe (per-slot float64 value
-#: buffers are the fused engine's memory trade-off); configs above it are
-#: the documented host-engine escape hatch of ``engine="auto"``
+#: default budget on densely resident §6 slot-universe entries (per-slot
+#: float64 value buffers are the fused engine's memory trade-off).
+#: Universes above it run with the tiled active-slot cache; only configs
+#: whose *active-entry* footprint also exceeds the budget are unsupported.
+#: Override per run via ``EngineConfig(slot_budget=...)``.
 LB_MAX_SLOTS = 250_000
 
 
@@ -89,8 +135,10 @@ class _StaticSpec:
     base_stop: Tuple[int, ...]
     sub_p: Tuple[int, ...]  # initial (and, without §6, permanent) p_i
     buckets: Tuple[int, ...]  # static width_bucket ladder, ascending
-    slot_offsets: Tuple[int, ...]  # per-worker first slot (cache methods)
+    slot_offsets: Tuple[int, ...]  # per-worker first slot (grid cache)
     num_slots: int
+    cache_mode: str = "none"  # "none" | "grid" | "universe" | "tiled"
+    active_cap: int = 0  # per-worker entry capacity of the tiled cache
     # §6 load balancing (empty/zero for non-LB specs)
     load_balance: bool = False
     ladder: Tuple[int, ...] = ()  # the p-ladder Algorithm 1 climbs
@@ -113,6 +161,8 @@ def _static_spec(
     num_iterations: int,
     cost_scale: float,
     universe: Optional[SlotUniverse] = None,
+    tiled: bool = False,
+    active_cap: int = 0,
 ) -> _StaticSpec:
     n = problem.num_samples
     N = num_workers
@@ -140,13 +190,16 @@ def _static_spec(
             assert universe is not None
             slot_offsets = (0,) * N  # slots come from the universe table
             num_slots = universe.num_slots
+            cache_mode = "tiled" if tiled else "universe"
         else:
             offsets = np.concatenate([[0], np.cumsum(sub_p)])
             slot_offsets = tuple(int(o) for o in offsets[:-1])
             num_slots = int(offsets[-1])
+            cache_mode = "grid"
     else:
         slot_offsets = (0,) * N
         num_slots = 0
+        cache_mode = "none"
     margin_eff = cfg.margin if (cfg.uses_margin and cfg.margin > 0) else 0.0
     return _StaticSpec(
         name=cfg.name,
@@ -166,6 +219,8 @@ def _static_spec(
         buckets=buckets,
         slot_offsets=slot_offsets,
         num_slots=num_slots,
+        cache_mode=cache_mode,
+        active_cap=int(active_cap),
         load_balance=bool(cfg.load_balance),
         ladder=ladder,
         lb_interval=float(cfg.lb_interval),
@@ -176,7 +231,7 @@ def _static_spec(
 
 
 def _bcast(mask, value_ndim: int):
-    """Reshape an [S] mask so it broadcasts over value dimensions."""
+    """Reshape a mask so it broadcasts over trailing value dimensions."""
     return mask.reshape(mask.shape + (1,) * value_ndim)
 
 
@@ -229,13 +284,13 @@ def _apply_cache_events(
     holds at most one event per scenario, so its updates are a single
     vectorized masked scatter, and the per-scenario float accumulation
     order of the running sums matches the host cache's time-ordered
-    inserts bit for bit.  With a fixed slot universe an active exact-match
+    inserts bit for bit.  With a fixed slot grid an active exact-match
     slot is the only possible overlap, so the scalar cache's eviction walk
     reduces to staleness dominance + in-place update (the SAG fast path).
     """
-    sums, values, iters, covered, rejected = cache_state
+    st = cache_state
     S, E_ev = ev_time.shape
-    vdim = values.ndim - 2
+    vdim = st["values"].ndim - 2
     order = jnp.argsort(jnp.where(ev_valid, ev_time, jnp.inf), axis=1, stable=True)
     s_idx = jnp.arange(S)
     flat_vals = ev_vals.reshape((S * E_ev,) + ev_vals.shape[2:])
@@ -262,8 +317,14 @@ def _apply_cache_events(
         rejected = rejected + rej.astype(rejected.dtype)
         return sums, values, iters, covered, rejected
 
-    return jax.lax.fori_loop(
-        0, E_ev, rank_body, (sums, values, iters, covered, rejected)
+    sums, values, iters, covered, rejected = jax.lax.fori_loop(
+        0,
+        E_ev,
+        rank_body,
+        (st["sums"], st["values"], st["iters"], st["covered"], st["rejected"]),
+    )
+    return dict(
+        sums=sums, values=values, iters=iters, covered=covered, rejected=rejected
     )
 
 
@@ -308,11 +369,11 @@ def _apply_cache_events_lb(
     *dynamic* trip counts (deepest valid rank / last evicted overlap), so
     empty ranks and the no-eviction common case cost nothing.
     """
-    sums, values, iters, covered, rejected, evictions = cache_state
+    st = cache_state
     S, E_ev = ev_time.shape
     E = spec.num_slots
     Omax = overlap_idx.shape[1]
-    vdim = values.ndim - 2
+    vdim = st["values"].ndim - 2
     order = jnp.argsort(jnp.where(ev_valid, ev_time, jnp.inf), axis=1, stable=True)
     s_idx = jnp.arange(S)
     # event tables in rank order: one gather each, outside the rank loop
@@ -322,7 +383,7 @@ def _apply_cache_events_lb(
     vals_r = jnp.take_along_axis(
         ev_vals, order.reshape(order.shape + (1,) * vdim), axis=1
     ).astype(jnp.float64)
-    values0 = values  # frozen pre-iteration table (read-only below)
+    values0 = st["values"]  # frozen pre-iteration table (read-only below)
     wmap0 = jnp.full((S, E), -1, jnp.int32)
     # ranks beyond every scenario's valid events are exact no-ops: skip
     n_ranks = jnp.max(jnp.sum(valid_r, axis=1))
@@ -397,9 +458,177 @@ def _apply_cache_events_lb(
         0,
         n_ranks,
         rank_body,
-        (sums, values, iters, covered, rejected, evictions, wmap0),
+        (
+            st["sums"],
+            st["values"],
+            st["iters"],
+            st["covered"],
+            st["rejected"],
+            st["evictions"],
+            wmap0,
+        ),
     )
-    return out[:6]
+    return dict(
+        sums=out[0],
+        values=out[1],
+        iters=out[2],
+        covered=out[3],
+        rejected=out[4],
+        evictions=out[5],
+    )
+
+
+def _apply_cache_events_tiled(
+    spec: _StaticSpec,
+    slot_width,
+    slot_starts,
+    slot_stops,
+    ev_worker,
+    cache_state,
+    ev_valid,
+    ev_time,
+    ev_slot,
+    ev_tag,
+    ev_vals,
+):
+    """The §5 update over per-worker *active-entry* tables (tiled §6 cache).
+
+    Same scalar-cache walk as :func:`_apply_cache_events_lb`, but instead
+    of dense ``[S, E]`` state over the whole ladder universe, each worker
+    owns ``A = spec.active_cap`` entry rows (``slots``/``iters``/values),
+    where ``A`` is the greedy interval-scheduling bound on simultaneously
+    active disjoint intervals (:func:`~repro.core.gradient_cache.
+    active_slot_capacity`).  Overlap candidates are the event worker's own
+    ``A`` entries, tested at runtime against the universe's start/stop
+    tables — within-worker overlap is the only kind the partitioner can
+    produce, so the candidate set is complete.  Eviction subtraction is
+    sorted by interval start to reproduce the scalar walk's float order,
+    and the insert lands in the exact active entry (in-place delta) or the
+    first free row (a free row always exists: active set ∪ new interval is
+    disjoint, hence within ``A``).
+
+    The same write-only value-table discipline as the dense path applies:
+    inside the rank loop ``values`` (``[S, N, A, ...]``) is only ever
+    scattered to; live entry values are reconstructed from the ranked
+    event table via ``wmap`` or from ``values0``, the frozen loop-entry
+    copy.
+    """
+    st = cache_state
+    S, E_ev = ev_time.shape
+    E = spec.num_slots
+    values = st["values"]  # [S, N, A, *vshape]
+    N, A = values.shape[1], values.shape[2]
+    vdim = values.ndim - 3
+    order = jnp.argsort(jnp.where(ev_valid, ev_time, jnp.inf), axis=1, stable=True)
+    s_idx = jnp.arange(S)
+    a_idx = jnp.arange(A)
+    valid_r = jnp.take_along_axis(ev_valid, order, axis=1)
+    slot_r = jnp.clip(jnp.take_along_axis(ev_slot, order, axis=1), 0, E - 1)
+    tag_r = jnp.take_along_axis(ev_tag, order, axis=1)
+    vals_r = jnp.take_along_axis(
+        ev_vals, order.reshape(order.shape + (1,) * vdim), axis=1
+    ).astype(jnp.float64)
+    worker_r = jnp.take_along_axis(
+        jnp.broadcast_to(ev_worker[None, :], (S, E_ev)), order, axis=1
+    )
+    values0 = values  # frozen pre-iteration table (read-only below)
+    wmap0 = jnp.full((S, N, A), -1, jnp.int32)
+    n_ranks = jnp.max(jnp.sum(valid_r, axis=1))
+
+    def rank_body(j, state):
+        sums, values, iters, slots, covered, rejected, evictions, wmap = state
+        valid = valid_r[:, j]
+        slot = slot_r[:, j]
+        tag = tag_r[:, j]
+        v64 = vals_r[:, j]
+        w_e = worker_r[:, j]
+        # the event worker's entry rows: [S, A] gathers of small tables
+        es = slots[s_idx, w_e]
+        ei = iters[s_idx, w_e]
+        wm = wmap[s_idx, w_e]
+        active = ei >= 0
+        es_safe = jnp.clip(es, 0, E - 1)
+        e_lo = slot_starts[es_safe]
+        e_hi = slot_stops[es_safe]
+        ev_lo = slot_starts[slot][:, None]
+        ev_hi = slot_stops[slot][:, None]
+        ovl = active & (e_lo <= ev_hi) & (ev_lo <= e_hi)
+        exact = ovl & (es == slot[:, None])
+        dom = jnp.any(ovl & (ei >= tag[:, None]), axis=1)
+        acc = valid & ~dom
+        rej = valid & dom
+        evict = ovl & ~exact & acc[:, None]
+        # live entry values, reconstructed (write-only table discipline)
+        v_new = vals_r[s_idx[:, None], jnp.clip(wm, 0, E_ev - 1)]
+        v_old = values0[s_idx[:, None], w_e[:, None], a_idx[None, :]]
+        v_live = jnp.where(_bcast(wm >= 0, vdim), v_new, v_old)  # [S, A, ...]
+
+        def sub_body(o, acc_sm):
+            eidx = ord_e[:, o]
+            m = evict[s_idx, eidx]
+            return jnp.where(
+                _bcast(m, vdim), acc_sm - v_live[s_idx, eidx], acc_sm
+            )
+
+        # eviction subtraction in interval-start order (the scalar walk's
+        # order; active disjoint intervals have distinct starts, so the
+        # order is unique); trip count = number evicted, usually 0
+        big = jnp.iinfo(jnp.int64).max
+        ord_e = jnp.argsort(jnp.where(evict, e_lo, big), axis=1, stable=True)
+        n_sub = jnp.max(jnp.sum(evict, axis=1))
+        sums = jax.lax.fori_loop(0, n_sub, sub_body, sums)
+        ei = jnp.where(evict, jnp.int64(-1), ei)
+        removed = jnp.sum(jnp.where(evict, slot_width[es_safe], 0), axis=1)
+        evictions = evictions + jnp.sum(evict, axis=1)
+        # insert target: the exact active entry (in-place delta; by
+        # disjointness it is then the only overlap and nothing was
+        # evicted), else the first free row post-eviction
+        exact_any = jnp.any(exact, axis=1)
+        tgt = jnp.where(
+            exact_any, jnp.argmax(exact, axis=1), jnp.argmax(ei < 0, axis=1)
+        )
+        own_live = v_live[s_idx, tgt]
+        delta = v64 - jnp.where(_bcast(exact_any, vdim), own_live, 0.0)
+        sums = jnp.where(_bcast(acc, vdim), sums + delta, sums)
+        values = values.at[s_idx, w_e, tgt].set(
+            jnp.where(_bcast(acc, vdim), v64, own_live)
+        )
+        ei = ei.at[s_idx, tgt].set(jnp.where(acc, tag, ei[s_idx, tgt]))
+        es = es.at[s_idx, tgt].set(jnp.where(acc, slot, es[s_idx, tgt]))
+        wm = wm.at[s_idx, tgt].set(jnp.where(acc, jnp.int32(j), wm[s_idx, tgt]))
+        iters = iters.at[s_idx, w_e].set(ei)
+        slots = slots.at[s_idx, w_e].set(es)
+        wmap = wmap.at[s_idx, w_e].set(wm)
+        covered = covered + jnp.where(
+            acc, jnp.where(exact_any, 0, slot_width[slot]) - removed, 0
+        )
+        rejected = rejected + rej.astype(rejected.dtype)
+        return sums, values, iters, slots, covered, rejected, evictions, wmap
+
+    out = jax.lax.fori_loop(
+        0,
+        n_ranks,
+        rank_body,
+        (
+            st["sums"],
+            values,
+            st["iters"],
+            st["slots"],
+            st["covered"],
+            st["rejected"],
+            st["evictions"],
+            wmap0,
+        ),
+    )
+    return dict(
+        sums=out[0],
+        values=out[1],
+        iters=out[2],
+        slots=out[3],
+        covered=out[4],
+        rejected=out[5],
+        evictions=out[6],
+    )
 
 
 def _fresh_accumulate(kernels, fresh, finish, vals):
@@ -424,247 +653,10 @@ def _fresh_accumulate(kernels, fresh, finish, vals):
 def _run_scan(
     kernels: FusedKernels,
     spec: _StaticSpec,
-    comm,
-    comp_unit,
-    slowdown,
-    burst_start,
-    burst_end,
-    burst_factor,
-    V0,
-    eval_mask,
-):
-    """The jitted driver: precompute static tables, scan the fused body."""
-    S, N, _K = comm.shape
-    T = spec.num_iterations
-    n = kernels.num_samples
-    vshape = kernels.value_shape
-    vdim = len(vshape)
-    base_start = jnp.asarray(spec.base_start, dtype=jnp.int64)
-    base_stop = jnp.asarray(spec.base_stop, dtype=jnp.int64)
-    n_local = base_stop - base_start + 1
-    sub_p = jnp.asarray(spec.sub_p, dtype=jnp.int64)
-    offsets = jnp.asarray(spec.slot_offsets, dtype=jnp.int64)
-    E = spec.num_slots
-    if spec.uses_cache:
-        # static slot universe: slot (i, k) -> interval width
-        sw = []
-        for i in range(N):
-            nl, p = spec.base_stop[i] - spec.base_start[i] + 1, spec.sub_p[i]
-            if spec.process_full:
-                sw.extend([nl] * p)
-            else:
-                sw.extend([k * nl // p - (k - 1) * nl // p for k in range(1, p + 1)])
-        slot_width = jnp.asarray(sw, dtype=jnp.int64)
-    else:
-        slot_width = jnp.zeros((0,), dtype=jnp.int64)
-
-    s_idx2 = jnp.arange(S)[:, None]
-    w_idx2 = jnp.arange(N)[None, :]
-
-    def burst_factor_at(start):
-        if burst_start.shape[2] == 0:
-            return jnp.ones_like(start)
-        tt = start[:, :, None]
-        active = (burst_start <= tt) & (tt < burst_end)
-        return jnp.where(active, burst_factor, 1.0).max(axis=2)
-
-    def body(carry, xs):
-        (
-            V,
-            free_at,
-            iter_end,
-            draw_idx,
-            sub_k,
-            flight_slot,
-            flight_titer,
-            flight_comp,
-            flight_comm,
-            flight_val,
-            cache_state,
-            lat_matrix,
-        ) = carry
-        t, do_eval = xs
-        assign = iter_end
-        idle = free_at <= assign[:, None]
-
-        if spec.process_full:
-            lo = jnp.broadcast_to(base_start, (S, N))
-            hi = jnp.broadcast_to(base_stop, (S, N))
-        else:
-            lo = base_start[None, :] + (sub_k - 1) * n_local[None, :] // sub_p[None, :]
-            hi = base_start[None, :] + sub_k * n_local[None, :] // sub_p[None, :] - 1
-        cost = (kernels.cost_per_row * (hi - lo + 1)) * spec.comp_scale
-
-        # -- §3 trace replay (THE shared latency expression) ----------------
-        start = jnp.where(idle, assign[:, None], free_at)
-        comm_d = jnp.take_along_axis(comm, draw_idx[:, :, None], axis=2)[:, :, 0]
-        unit = jnp.take_along_axis(comp_unit, draw_idx[:, :, None], axis=2)[:, :, 0]
-        comp_d = comp_latency_expr(
-            unit, cost, slowdown[None, :], burst_factor_at(start)
-        )
-        # finalize the §3 product before the event algebra consumes it: the
-        # LLVM backend otherwise contracts the last multiply into the
-        # task_finish_time add as an FMA (skipping the intermediate
-        # rounding the host engine's numpy performs), which changes the
-        # final ULP whenever slowdown/burst factors are not exactly 1.0.
-        # max(x, 0) is exact for the positive latencies and is a pattern
-        # the contraction cannot see through (lax.optimization_barrier is
-        # erased before LLVM and does NOT prevent this).
-        comp_d = jnp.maximum(comp_d, 0.0)
-
-        # -- event resolution (the shared method-semantics helpers) ---------
-        finish = task_finish_time(start, comp_d, comm_d)
-        tau_w = jnp.sort(finish, axis=1)[:, spec.w_wait - 1]
-        if spec.margin > 0.0:
-            deadline = margin_deadline(tau_w, assign, spec.margin)
-        else:
-            deadline = tau_w
-        started = idle | (free_at <= deadline[:, None])
-        fresh = started & (finish <= deadline[:, None])
-        stale_done = (~idle) & (free_at <= deadline[:, None])
-        fresh_cnt = fresh.sum(axis=1)
-        stale_ev = jnp.where(stale_done, free_at, -jnp.inf)
-        fresh_ev = jnp.where(fresh, finish, -jnp.inf)
-        iter_end_new = jnp.maximum(
-            jnp.maximum(stale_ev.max(axis=1), fresh_ev.max(axis=1)), tau_w
-        )
-
-        # -- latency attribution by the task's own iteration ----------------
-        titer_safe = jnp.clip(flight_titer, 0, T - 1)
-        cur = lat_matrix[s_idx2, titer_safe, w_idx2]
-        lat_matrix = lat_matrix.at[s_idx2, titer_safe, w_idx2].set(
-            jnp.where(stale_done, flight_comp + flight_comm, cur)
-        )
-        lat_matrix = lat_matrix.at[:, t, :].set(
-            jnp.where(fresh, comp_d + comm_d, lat_matrix[:, t, :])
-        )
-
-        # -- batched subgradients (skipped entirely for coded) --------------
-        if spec.name != "coded":
-            vals = _subgradients(kernels, spec, V, lo, hi)
-        else:
-            vals = None
-
-        # -- §5 cache / gradient accumulation -------------------------------
-        slot_cur = offsets[None, :] + sub_k - 1 if spec.uses_cache else None
-        if spec.uses_cache:
-            if spec.accepts_stale:  # dsag: stale half then fresh half
-                ev_valid = jnp.concatenate([stale_done, fresh], axis=1)
-                ev_time = jnp.concatenate([free_at, finish], axis=1)
-                ev_slot = jnp.concatenate([flight_slot, slot_cur], axis=1)
-                ev_tag = jnp.concatenate(
-                    [flight_titer, jnp.full((S, N), 1, jnp.int64) * t], axis=1
-                )
-                ev_vals = jnp.concatenate([flight_val, vals], axis=1)
-            else:  # sag: fresh results only
-                ev_valid, ev_time = fresh, finish
-                ev_slot = slot_cur
-                ev_tag = jnp.full((S, N), 1, jnp.int64) * t
-                ev_vals = vals
-            cache_state = _apply_cache_events(
-                spec, slot_width, cache_state, ev_valid, ev_time, ev_slot,
-                ev_tag, ev_vals,
-            )
-            sums, _, _, covered, _ = cache_state
-            xi = jnp.maximum(covered / n, 1e-12)
-            grad = sums / _bcast(xi, vdim) + kernels.regularizer_grad(V)
-        elif spec.name == "coded":
-            # idealized MDS bound: exact gradient at full-range width
-            g = kernels.sub_blocks(
-                V,
-                jnp.ones((S,), jnp.int64),
-                jnp.full((S,), n, jnp.int64),
-                n,
-            ).astype(jnp.float64)
-            grad = g + kernels.regularizer_grad(V)
-        elif spec.name == "gd":
-            grad = _fresh_accumulate(kernels, fresh, finish, vals) + (
-                kernels.regularizer_grad(V)
-            )
-        else:  # sgd: scale the partial sum by observed coverage
-            grad_acc = _fresh_accumulate(kernels, fresh, finish, vals)
-            covered_f = jnp.sum(jnp.where(fresh, hi - lo + 1, 0), axis=1)
-            xi = jnp.maximum(covered_f / n, 1e-12)
-            grad = grad_acc / _bcast(xi, vdim) + kernels.regularizer_grad(V)
-
-        # -- iterate update + suboptimality ---------------------------------
-        V_new = kernels.project((V - spec.eta * grad).astype(V.dtype))
-        subopt_t = jax.lax.cond(
-            do_eval,
-            lambda v: kernels.suboptimality(v),
-            lambda v: jnp.full((S,), jnp.nan, dtype=jnp.float64),
-            V_new,
-        )
-
-        # -- commit worker state for started tasks --------------------------
-        if not spec.process_full:
-            sub_k = jnp.where(started, sub_k % sub_p[None, :] + 1, sub_k)
-        free_at = jnp.where(started, finish, free_at)
-        draw_idx = draw_idx + started.astype(jnp.int64)
-        if spec.uses_cache:
-            flight_slot = jnp.where(started, slot_cur, flight_slot)
-        flight_titer = jnp.where(started, t, flight_titer)
-        flight_comp = jnp.where(started, comp_d, flight_comp)
-        flight_comm = jnp.where(started, comm_d, flight_comm)
-        if spec.accepts_stale:
-            flight_val = jnp.where(_bcast(started, vdim), vals, flight_val)
-
-        carry = (
-            V_new,
-            free_at,
-            iter_end_new,
-            draw_idx,
-            sub_k,
-            flight_slot,
-            flight_titer,
-            flight_comp,
-            flight_comm,
-            flight_val,
-            cache_state,
-            lat_matrix,
-        )
-        return carry, (iter_end_new, subopt_t, fresh_cnt)
-
-    val_dtype = jnp.dtype(kernels.value_dtype)
-    cache0 = (
-        jnp.zeros((S,) + vshape, dtype=jnp.float64),  # sums
-        jnp.zeros((S, max(E, 1)) + vshape, dtype=jnp.float64),  # values
-        jnp.full((S, max(E, 1)), -1, dtype=jnp.int64),  # iters
-        jnp.zeros((S,), dtype=jnp.int64),  # covered
-        jnp.zeros((S,), dtype=jnp.int64),  # rejected_stale
-    )
-    carry0 = (
-        V0,
-        jnp.zeros((S, N)),  # free_at
-        jnp.zeros((S,)),  # iter_end
-        jnp.zeros((S, N), dtype=jnp.int64),  # draw_idx
-        jnp.ones((S, N), dtype=jnp.int64),  # sub_k
-        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_slot
-        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_titer
-        jnp.zeros((S, N)),  # flight_comp
-        jnp.zeros((S, N)),  # flight_comm
-        jnp.zeros((S, N) + vshape, dtype=val_dtype),  # flight_val
-        cache0,
-        jnp.full((S, T, N), jnp.nan),  # lat_matrix
-    )
-    xs = (jnp.arange(T, dtype=jnp.int64), eval_mask)
-    carry, ys = jax.lax.scan(body, carry0, xs)
-    times, subopt, fresh_counts = ys
-    cache_state = carry[10]
-    return (
-        times.T,
-        subopt.T,
-        fresh_counts.T,
-        carry[11],  # lat_matrix
-        cache_state[4],  # rejected_stale
-    )
-
-
-def _run_scan_lb(
-    kernels: FusedKernels,
-    spec: _StaticSpec,
     slot_table,
     slot_width,
+    slot_starts,
+    slot_stops,
     overlap_idx,
     comm,
     comp_unit,
@@ -676,16 +668,17 @@ def _run_scan_lb(
     eval_mask,
     lb_key,
 ):
-    """The jitted driver for §6 load-balanced configs.
+    """THE per-iteration scan body + driver, shared by every configuration.
 
-    The :func:`_run_scan` body plus the load-balancer in the carry:
-    task-slot profiler buffers, ladder indices of each worker's current
-    subpartition count, pending/published p vectors, ``h_min`` and the
-    publication schedule.  Algorithm 1 runs inside the scan via
-    :mod:`repro.lb.jit_optimizer` (behind ``lax.cond`` so iterations with
-    no due scenario skip it), repartitions resolve with the vectorized
-    Algorithm-2 walk, and cache slots come from the pre-allocated ladder
-    universe (``slot_table``), so every shape stays static.
+    ``spec`` statically selects the (lo, hi, slot) source — the fixed
+    subpartition grid, or the §6 candidate after Algorithm-2 alignment —
+    and the cache layout (``spec.cache_mode``); everything else (trace
+    replay, event algebra, subgradients, iterate update, telemetry) is
+    written once.  Under ``shard_map`` this function sees the local
+    scenario shard: every per-scenario value is row-independent, and the
+    cross-shard-varying dynamic trip counts / ``lax.cond`` decisions only
+    skip work that is an exact no-op, so shards reproduce the
+    single-device bits.
     """
     S, N, _K = comm.shape
     T = spec.num_iterations
@@ -695,21 +688,42 @@ def _run_scan_lb(
     base_start = jnp.asarray(spec.base_start, dtype=jnp.int64)
     base_stop = jnp.asarray(spec.base_stop, dtype=jnp.int64)
     n_local = base_stop - base_start + 1
-    E = max(spec.num_slots, 1)
-    L = len(spec.ladder)
-    raw = jnp.asarray(spec.ladder, dtype=jnp.int64)
-    # per-worker effective ladder (int twin of jlb.ladder_tables)
-    eff = jnp.minimum(raw[None, :], n_local[:, None])  # [N, L]
-    idx_cap = jnp.minimum(jnp.sum(raw[None, :] < n_local[:, None], axis=1), L - 1)
-    n_j_b = jnp.broadcast_to(n_local.astype(jnp.float64), (S, N))
+    sub_p = jnp.asarray(spec.sub_p, dtype=jnp.int64)
+    offsets = jnp.asarray(spec.slot_offsets, dtype=jnp.int64)
+    E = spec.num_slots
+    if spec.cache_mode == "grid":
+        # static slot grid: slot (i, k) -> interval width
+        sw = []
+        for i in range(N):
+            nl, p = spec.base_stop[i] - spec.base_start[i] + 1, spec.sub_p[i]
+            if spec.process_full:
+                sw.extend([nl] * p)
+            else:
+                sw.extend([k * nl // p - (k - 1) * nl // p for k in range(1, p + 1)])
+        slot_width = jnp.asarray(sw, dtype=jnp.int64)
 
     s_idx2 = jnp.arange(S)[:, None]
     w_idx2 = jnp.arange(N)[None, :]
 
-    def snap_int(p_vals):
-        """Ladder index of exact-member p values ([S, N] int)."""
-        cnt = jnp.sum(eff[None, :, :] <= p_vals[:, :, None], axis=-1)
-        return jnp.clip(cnt - 1, 0, idx_cap[None, :])
+    if spec.load_balance:
+        L = len(spec.ladder)
+        raw = jnp.asarray(spec.ladder, dtype=jnp.int64)
+        # per-worker effective ladder (int twin of jlb.ladder_tables)
+        eff = jnp.minimum(raw[None, :], n_local[:, None])  # [N, L]
+        idx_cap = jnp.minimum(
+            jnp.sum(raw[None, :] < n_local[:, None], axis=1), L - 1
+        )
+        n_j_b = jnp.broadcast_to(n_local.astype(jnp.float64), (S, N))
+
+        def snap_int(p_vals):
+            """Ladder index of exact-member p values ([S, N] int)."""
+            cnt = jnp.sum(eff[None, :, :] <= p_vals[:, :, None], axis=-1)
+            return jnp.clip(cnt - 1, 0, idx_cap[None, :])
+
+    if spec.accepts_stale:
+        ev_worker = jnp.concatenate([jnp.arange(N), jnp.arange(N)])
+    else:
+        ev_worker = jnp.arange(N)
 
     def burst_factor_at(start):
         if burst_start.shape[2] == 0:
@@ -719,40 +733,30 @@ def _run_scan_lb(
         return jnp.where(active, burst_factor, 1.0).max(axis=2)
 
     def body(carry, xs):
-        (
-            V,
-            free_at,
-            iter_end,
-            draw_idx,
-            sub_idx,
-            sub_k,
-            pending_p,
-            current_p,
-            h_min,
-            next_lb,
-            flight_slot,
-            flight_titer,
-            flight_comp,
-            flight_comm,
-            flight_assigned,
-            flight_val,
-            cache_state,
-            lat_matrix,
-            prof,
-        ) = carry
-        prof_t, prof_comm, prof_comp, prof_valid = prof
         t, do_eval = xs
-        assign = iter_end
+        V = carry["V"]
+        free_at = carry["free_at"]
+        sub_k = carry["sub_k"]
+        cache_state = carry["cache"]
+        lat_matrix = carry["lat"]
+        assign = carry["iter_end"]
         idle = free_at <= assign[:, None]
 
-        # -- Algorithm-2 alignment for pending repartitions (tentative) -----
-        cur_p = eff[w_idx2, sub_idx]
-        p_req = jnp.clip(pending_p, 1, n_local[None, :])
-        needs = (pending_p >= 0) & (p_req != cur_p)
-        _, k_new = jlb.align_batch(n_local[None, :], cur_p, p_req, sub_k, needs)
-        cand_idx = jnp.where(needs, snap_int(p_req), sub_idx)
-        cand_k = jnp.where(needs, k_new, sub_k)
-        cand_p = jnp.where(needs, p_req, cur_p)
+        # -- the (lo, hi, slot) source --------------------------------------
+        if spec.load_balance:
+            # Algorithm-2 alignment for pending repartitions (tentative)
+            sub_idx = carry["sub_idx"]
+            pending_p = carry["pending_p"]
+            cur_p = eff[w_idx2, sub_idx]
+            p_req = jnp.clip(pending_p, 1, n_local[None, :])
+            needs = (pending_p >= 0) & (p_req != cur_p)
+            _, k_new = jlb.align_batch(n_local[None, :], cur_p, p_req, sub_k, needs)
+            cand_idx = jnp.where(needs, snap_int(p_req), sub_idx)
+            cand_k = jnp.where(needs, k_new, sub_k)
+            cand_p = jnp.where(needs, p_req, cur_p)
+        else:
+            cand_k = sub_k
+            cand_p = sub_p[None, :]
 
         if spec.process_full:
             lo = jnp.broadcast_to(base_start, (S, N))
@@ -764,8 +768,12 @@ def _run_scan_lb(
 
         # -- §3 trace replay (THE shared latency expression) ----------------
         start = jnp.where(idle, assign[:, None], free_at)
-        comm_d = jnp.take_along_axis(comm, draw_idx[:, :, None], axis=2)[:, :, 0]
-        unit = jnp.take_along_axis(comp_unit, draw_idx[:, :, None], axis=2)[:, :, 0]
+        comm_d = jnp.take_along_axis(comm, carry["draw_idx"][:, :, None], axis=2)[
+            :, :, 0
+        ]
+        unit = jnp.take_along_axis(
+            comp_unit, carry["draw_idx"][:, :, None], axis=2
+        )[:, :, 0]
         comp_d = comp_latency_expr(
             unit, cost, slowdown[None, :], burst_factor_at(start)
         )
@@ -797,6 +805,9 @@ def _run_scan_lb(
         )
 
         # -- latency attribution by the task's own iteration ----------------
+        flight_titer = carry["flight_titer"]
+        flight_comp = carry["flight_comp"]
+        flight_comm = carry["flight_comm"]
         titer_safe = jnp.clip(flight_titer, 0, T - 1)
         cur = lat_matrix[s_idx2, titer_safe, w_idx2]
         lat_matrix = lat_matrix.at[s_idx2, titer_safe, w_idx2].set(
@@ -806,32 +817,39 @@ def _run_scan_lb(
             jnp.where(fresh, comp_d + comm_d, lat_matrix[:, t, :])
         )
 
-        # -- §6.1 profiler feed: one task-slot sample per observed
-        # completion (same slots and float expressions as MomentBuffer) -----
-        stale_rt = free_at - flight_assigned
-        stale_comm = jnp.maximum(stale_rt - flight_comp, 0.0)
-        prof_t = prof_t.at[s_idx2, w_idx2, titer_safe].set(
-            jnp.where(stale_done, free_at, prof_t[s_idx2, w_idx2, titer_safe])
-        )
-        prof_comm = prof_comm.at[s_idx2, w_idx2, titer_safe].set(
-            jnp.where(stale_done, stale_comm, prof_comm[s_idx2, w_idx2, titer_safe])
-        )
-        prof_comp = prof_comp.at[s_idx2, w_idx2, titer_safe].set(
-            jnp.where(stale_done, flight_comp, prof_comp[s_idx2, w_idx2, titer_safe])
-        )
-        prof_valid = prof_valid.at[s_idx2, w_idx2, titer_safe].set(
-            prof_valid[s_idx2, w_idx2, titer_safe] | stale_done
-        )
-        fresh_rt = finish - assign[:, None]
-        fresh_comm = jnp.maximum(fresh_rt - comp_d, 0.0)
-        prof_t = prof_t.at[:, :, t].set(jnp.where(fresh, finish, prof_t[:, :, t]))
-        prof_comm = prof_comm.at[:, :, t].set(
-            jnp.where(fresh, fresh_comm, prof_comm[:, :, t])
-        )
-        prof_comp = prof_comp.at[:, :, t].set(
-            jnp.where(fresh, comp_d, prof_comp[:, :, t])
-        )
-        prof_valid = prof_valid.at[:, :, t].set(prof_valid[:, :, t] | fresh)
+        if spec.load_balance:
+            # -- §6.1 profiler feed: one task-slot sample per observed
+            # completion (same slots and float expressions as MomentBuffer)
+            prof_t, prof_comm, prof_comp, prof_valid = carry["prof"]
+            flight_assigned = carry["flight_assigned"]
+            stale_rt = free_at - flight_assigned
+            stale_comm = jnp.maximum(stale_rt - flight_comp, 0.0)
+            prof_t = prof_t.at[s_idx2, w_idx2, titer_safe].set(
+                jnp.where(stale_done, free_at, prof_t[s_idx2, w_idx2, titer_safe])
+            )
+            prof_comm = prof_comm.at[s_idx2, w_idx2, titer_safe].set(
+                jnp.where(
+                    stale_done, stale_comm, prof_comm[s_idx2, w_idx2, titer_safe]
+                )
+            )
+            prof_comp = prof_comp.at[s_idx2, w_idx2, titer_safe].set(
+                jnp.where(
+                    stale_done, flight_comp, prof_comp[s_idx2, w_idx2, titer_safe]
+                )
+            )
+            prof_valid = prof_valid.at[s_idx2, w_idx2, titer_safe].set(
+                prof_valid[s_idx2, w_idx2, titer_safe] | stale_done
+            )
+            fresh_rt = finish - assign[:, None]
+            fresh_comm = jnp.maximum(fresh_rt - comp_d, 0.0)
+            prof_t = prof_t.at[:, :, t].set(jnp.where(fresh, finish, prof_t[:, :, t]))
+            prof_comm = prof_comm.at[:, :, t].set(
+                jnp.where(fresh, fresh_comm, prof_comm[:, :, t])
+            )
+            prof_comp = prof_comp.at[:, :, t].set(
+                jnp.where(fresh, comp_d, prof_comp[:, :, t])
+            )
+            prof_valid = prof_valid.at[:, :, t].set(prof_valid[:, :, t] | fresh)
 
         # -- batched subgradients (skipped entirely for coded) --------------
         if spec.name != "coded":
@@ -839,31 +857,48 @@ def _run_scan_lb(
         else:
             vals = None
 
-        # -- §5 cache / gradient accumulation over the slot universe --------
+        # -- §5 cache / gradient accumulation -------------------------------
         if spec.uses_cache:
-            slot_cur = slot_table[w_idx2, cand_idx, cand_k - 1]
+            if spec.load_balance:
+                slot_cur = slot_table[w_idx2, cand_idx, cand_k - 1]
+            else:
+                slot_cur = offsets[None, :] + sub_k - 1
             if spec.accepts_stale:  # dsag: stale half then fresh half
+                flight_slot = carry["flight_slot"]
                 ev_valid = jnp.concatenate([stale_done, fresh], axis=1)
                 ev_time = jnp.concatenate([free_at, finish], axis=1)
                 ev_slot = jnp.concatenate([flight_slot, slot_cur], axis=1)
                 ev_tag = jnp.concatenate(
                     [flight_titer, jnp.full((S, N), 1, jnp.int64) * t], axis=1
                 )
-                ev_vals = jnp.concatenate([flight_val, vals], axis=1)
+                ev_vals = jnp.concatenate([carry["flight_val"], vals], axis=1)
             else:  # sag: fresh results only
                 ev_valid, ev_time = fresh, finish
                 ev_slot = slot_cur
                 ev_tag = jnp.full((S, N), 1, jnp.int64) * t
                 ev_vals = vals
-            cache_state = _apply_cache_events_lb(
-                spec, slot_width, overlap_idx, cache_state, ev_valid, ev_time,
-                ev_slot, ev_tag, ev_vals,
+            if spec.cache_mode == "universe":
+                cache_state = _apply_cache_events_lb(
+                    spec, slot_width, overlap_idx, cache_state, ev_valid,
+                    ev_time, ev_slot, ev_tag, ev_vals,
+                )
+            elif spec.cache_mode == "tiled":
+                cache_state = _apply_cache_events_tiled(
+                    spec, slot_width, slot_starts, slot_stops, ev_worker,
+                    cache_state, ev_valid, ev_time, ev_slot, ev_tag, ev_vals,
+                )
+            else:
+                cache_state = _apply_cache_events(
+                    spec, slot_width, cache_state, ev_valid, ev_time, ev_slot,
+                    ev_tag, ev_vals,
+                )
+            xi = jnp.maximum(cache_state["covered"] / n, 1e-12)
+            grad = cache_state["sums"] / _bcast(xi, vdim) + (
+                kernels.regularizer_grad(V)
             )
-            sums, _, _, covered, _, _ = cache_state
-            xi = jnp.maximum(covered / n, 1e-12)
-            grad = sums / _bcast(xi, vdim) + kernels.regularizer_grad(V)
         elif spec.name == "coded":
             slot_cur = None
+            # idealized MDS bound: exact gradient at full-range width
             g = kernels.sub_blocks(
                 V,
                 jnp.ones((S,), jnp.int64),
@@ -893,170 +928,315 @@ def _run_scan_lb(
         )
 
         # -- commit worker state for started tasks --------------------------
-        sub_idx = jnp.where(started, cand_idx, sub_idx)
+        out = dict(carry)
+        if spec.load_balance:
+            out["sub_idx"] = jnp.where(started, cand_idx, sub_idx)
+            out["pending_p"] = jnp.where(started, -1, pending_p)
+            out["flight_assigned"] = jnp.where(
+                started, assign[:, None], carry["flight_assigned"]
+            )
         if spec.process_full:
-            sub_k = jnp.where(started, cand_k, sub_k)
+            if spec.load_balance:
+                sub_k = jnp.where(started, cand_k, sub_k)
         else:
             sub_k = jnp.where(started, cand_k % cand_p + 1, sub_k)
-        pending_p = jnp.where(started, -1, pending_p)
-        free_at = jnp.where(started, finish, free_at)
-        draw_idx = draw_idx + started.astype(jnp.int64)
+        out["sub_k"] = sub_k
+        out["free_at"] = jnp.where(started, finish, free_at)
+        out["draw_idx"] = carry["draw_idx"] + started.astype(jnp.int64)
         if spec.uses_cache:
-            flight_slot = jnp.where(started, slot_cur, flight_slot)
-        flight_titer = jnp.where(started, t, flight_titer)
-        flight_comp = jnp.where(started, comp_d, flight_comp)
-        flight_comm = jnp.where(started, comm_d, flight_comm)
-        flight_assigned = jnp.where(started, assign[:, None], flight_assigned)
+            out["flight_slot"] = jnp.where(started, slot_cur, carry["flight_slot"])
+        out["flight_titer"] = jnp.where(started, t, flight_titer)
+        out["flight_comp"] = jnp.where(started, comp_d, flight_comp)
+        out["flight_comm"] = jnp.where(started, comm_d, flight_comm)
         if spec.accepts_stale:
-            flight_val = jnp.where(_bcast(started, vdim), vals, flight_val)
+            out["flight_val"] = jnp.where(
+                _bcast(started, vdim), vals, carry["flight_val"]
+            )
+        out["V"] = V_new
+        out["iter_end"] = iter_end_new
+        out["cache"] = cache_state
+        out["lat"] = lat_matrix
 
         # -- §6 background load balancer (Algorithm 1, jittable) ------------
-        due = iter_end_new >= next_lb
-        prof_new = (prof_t, prof_comm, prof_comp, prof_valid)
+        if spec.load_balance:
+            current_p = carry["current_p"]
+            h_min = carry["h_min"]
+            next_lb = carry["next_lb"]
+            pending_p = out["pending_p"]
+            due = iter_end_new >= next_lb
+            out["prof"] = (prof_t, prof_comm, prof_comp, prof_valid)
 
-        def lb_block(args):
-            pending_p, current_p, h_min, next_lb = args
-            e_cm, v_cm, e_cp, v_cp, cnt = jlb.window_moments(
-                prof_t, prof_comm, prof_comp, prof_valid, iter_end_new,
-                jlb.PROFILER_WINDOW,
-            )
-            ready = jnp.all(cnt >= 1, axis=1)
-            next_lb2 = jnp.where(due, iter_end_new + spec.lb_interval, next_lb)
-            act = due & ready
-
-            def run_opt(_):
-                # the make_optimizer_inputs variance floors, verbatim
-                p_new, h_min2, _, publish = jlb.lb_update(
-                    current_p.astype(jnp.float64),
-                    e_cm,
-                    jnp.maximum(v_cm, 1e-18),
-                    e_cp,
-                    jnp.maximum(v_cp, 1e-18),
-                    n_j_b,
-                    h_min,
-                    act,
-                    ladder=spec.ladder,
-                    w=spec.w_wait,
-                    margin=spec.lb_margin,
-                    key=lb_key,
+            def lb_block(args):
+                pending_p, current_p, h_min, next_lb = args
+                e_cm, v_cm, e_cp, v_cp, cnt = jlb.window_moments(
+                    prof_t, prof_comm, prof_comp, prof_valid, iter_end_new,
+                    jlb.PROFILER_WINDOW,
                 )
-                changed = publish[:, None] & (p_new != current_p)
-                return (
-                    jnp.where(changed, p_new, pending_p),
-                    jnp.where(publish[:, None], p_new, current_p),
-                    h_min2,
-                    publish,
+                ready = jnp.all(cnt >= 1, axis=1)
+                next_lb2 = jnp.where(due, iter_end_new + spec.lb_interval, next_lb)
+                act = due & ready
+
+                def run_opt(_):
+                    # the make_optimizer_inputs variance floors, verbatim
+                    p_new, h_min2, _, publish = jlb.lb_update(
+                        current_p.astype(jnp.float64),
+                        e_cm,
+                        jnp.maximum(v_cm, 1e-18),
+                        e_cp,
+                        jnp.maximum(v_cp, 1e-18),
+                        n_j_b,
+                        h_min,
+                        act,
+                        ladder=spec.ladder,
+                        w=spec.w_wait,
+                        margin=spec.lb_margin,
+                        key=lb_key,
+                    )
+                    changed = publish[:, None] & (p_new != current_p)
+                    return (
+                        jnp.where(changed, p_new, pending_p),
+                        jnp.where(publish[:, None], p_new, current_p),
+                        h_min2,
+                        publish,
+                    )
+
+                def no_opt(_):
+                    return pending_p, current_p, h_min, jnp.zeros((S,), bool)
+
+                pending2, current2, h_min2, publish = jax.lax.cond(
+                    jnp.any(act), run_opt, no_opt, None
                 )
+                return pending2, current2, h_min2, next_lb2, publish
 
-            def no_opt(_):
-                return pending_p, current_p, h_min, jnp.zeros((S,), bool)
+            def no_lb(args):
+                pending_p, current_p, h_min, next_lb = args
+                return pending_p, current_p, h_min, next_lb, jnp.zeros((S,), bool)
 
-            pending2, current2, h_min2, publish = jax.lax.cond(
-                jnp.any(act), run_opt, no_opt, None
+            pending_p, current_p, h_min, next_lb, published = jax.lax.cond(
+                jnp.any(due), lb_block, no_lb,
+                (pending_p, current_p, h_min, next_lb),
             )
-            return pending2, current2, h_min2, next_lb2, publish
+            out["pending_p"] = pending_p
+            out["current_p"] = current_p
+            out["h_min"] = h_min
+            out["next_lb"] = next_lb
+        else:
+            published = jnp.zeros((S,), bool)
 
-        def no_lb(args):
-            pending_p, current_p, h_min, next_lb = args
-            return pending_p, current_p, h_min, next_lb, jnp.zeros((S,), bool)
-
-        pending_p, current_p, h_min, next_lb, published = jax.lax.cond(
-            jnp.any(due), lb_block, no_lb, (pending_p, current_p, h_min, next_lb)
-        )
-
-        carry = (
-            V_new,
-            free_at,
-            iter_end_new,
-            draw_idx,
-            sub_idx,
-            sub_k,
-            pending_p,
-            current_p,
-            h_min,
-            next_lb,
-            flight_slot,
-            flight_titer,
-            flight_comp,
-            flight_comm,
-            flight_assigned,
-            flight_val,
-            cache_state,
-            lat_matrix,
-            prof_new,
-        )
-        return carry, (iter_end_new, subopt_t, fresh_cnt, published)
+        return out, (iter_end_new, subopt_t, fresh_cnt, published)
 
     val_dtype = jnp.dtype(kernels.value_dtype)
-    cache0 = (
-        jnp.zeros((S,) + vshape, dtype=jnp.float64),  # sums
-        jnp.zeros((S, E) + vshape, dtype=jnp.float64),  # values
-        jnp.full((S, E), -1, dtype=jnp.int64),  # iters
-        jnp.zeros((S,), dtype=jnp.int64),  # covered
-        jnp.zeros((S,), dtype=jnp.int64),  # rejected_stale
-        jnp.zeros((S,), dtype=jnp.int64),  # evictions
+    if spec.cache_mode == "grid":
+        cache0 = dict(
+            sums=jnp.zeros((S,) + vshape, dtype=jnp.float64),
+            values=jnp.zeros((S, max(E, 1)) + vshape, dtype=jnp.float64),
+            iters=jnp.full((S, max(E, 1)), -1, dtype=jnp.int64),
+            covered=jnp.zeros((S,), dtype=jnp.int64),
+            rejected=jnp.zeros((S,), dtype=jnp.int64),
+        )
+    elif spec.cache_mode == "universe":
+        cache0 = dict(
+            sums=jnp.zeros((S,) + vshape, dtype=jnp.float64),
+            values=jnp.zeros((S, max(E, 1)) + vshape, dtype=jnp.float64),
+            iters=jnp.full((S, max(E, 1)), -1, dtype=jnp.int64),
+            covered=jnp.zeros((S,), dtype=jnp.int64),
+            rejected=jnp.zeros((S,), dtype=jnp.int64),
+            evictions=jnp.zeros((S,), dtype=jnp.int64),
+        )
+    elif spec.cache_mode == "tiled":
+        A = max(spec.active_cap, 1)
+        cache0 = dict(
+            sums=jnp.zeros((S,) + vshape, dtype=jnp.float64),
+            values=jnp.zeros((S, N, A) + vshape, dtype=jnp.float64),
+            iters=jnp.full((S, N, A), -1, dtype=jnp.int64),
+            slots=jnp.full((S, N, A), -1, dtype=jnp.int64),
+            covered=jnp.zeros((S,), dtype=jnp.int64),
+            rejected=jnp.zeros((S,), dtype=jnp.int64),
+            evictions=jnp.zeros((S,), dtype=jnp.int64),
+        )
+    else:
+        cache0 = dict(rejected=jnp.zeros((S,), dtype=jnp.int64))
+    carry0 = dict(
+        V=V0,
+        free_at=jnp.zeros((S, N)),
+        iter_end=jnp.zeros((S,)),
+        draw_idx=jnp.zeros((S, N), dtype=jnp.int64),
+        sub_k=jnp.ones((S, N), dtype=jnp.int64),
+        flight_slot=jnp.full((S, N), -1, dtype=jnp.int64),
+        flight_titer=jnp.full((S, N), -1, dtype=jnp.int64),
+        flight_comp=jnp.zeros((S, N)),
+        flight_comm=jnp.zeros((S, N)),
+        flight_val=jnp.zeros((S, N) + vshape, dtype=val_dtype),
+        cache=cache0,
+        lat=jnp.full((S, T, N), jnp.nan),
     )
-    sub_p0 = jnp.asarray(spec.sub_p, dtype=jnp.int64)
-    idx0 = jnp.clip(
-        jnp.sum(eff <= sub_p0[:, None], axis=1) - 1, 0, idx_cap
-    )
-    prof0 = (
-        jnp.zeros((S, N, T)),
-        jnp.zeros((S, N, T)),
-        jnp.zeros((S, N, T)),
-        jnp.zeros((S, N, T), dtype=bool),
-    )
-    carry0 = (
-        V0,
-        jnp.zeros((S, N)),  # free_at
-        jnp.zeros((S,)),  # iter_end
-        jnp.zeros((S, N), dtype=jnp.int64),  # draw_idx
-        jnp.broadcast_to(idx0, (S, N)),  # sub_idx
-        jnp.ones((S, N), dtype=jnp.int64),  # sub_k
-        jnp.full((S, N), -1, dtype=jnp.int64),  # pending_p
-        jnp.full((S, N), spec.lb_p0, dtype=jnp.int64),  # current_p (optimizer view)
-        jnp.full((S,), jnp.nan),  # h_min
-        jnp.full((S,), spec.lb_startup_delay),  # next_lb
-        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_slot
-        jnp.full((S, N), -1, dtype=jnp.int64),  # flight_titer
-        jnp.zeros((S, N)),  # flight_comp
-        jnp.zeros((S, N)),  # flight_comm
-        jnp.zeros((S, N)),  # flight_assigned
-        jnp.zeros((S, N) + vshape, dtype=val_dtype),  # flight_val
-        cache0,
-        jnp.full((S, T, N), jnp.nan),  # lat_matrix
-        prof0,
-    )
+    if spec.load_balance:
+        sub_p0 = jnp.asarray(spec.sub_p, dtype=jnp.int64)
+        idx0 = jnp.clip(jnp.sum(eff <= sub_p0[:, None], axis=1) - 1, 0, idx_cap)
+        carry0["sub_idx"] = jnp.broadcast_to(idx0, (S, N))
+        carry0["pending_p"] = jnp.full((S, N), -1, dtype=jnp.int64)
+        # current_p is the optimizer's view of the published p
+        carry0["current_p"] = jnp.full((S, N), spec.lb_p0, dtype=jnp.int64)
+        carry0["h_min"] = jnp.full((S,), jnp.nan)
+        carry0["next_lb"] = jnp.full((S,), spec.lb_startup_delay)
+        carry0["flight_assigned"] = jnp.zeros((S, N))
+        carry0["prof"] = (
+            jnp.zeros((S, N, T)),
+            jnp.zeros((S, N, T)),
+            jnp.zeros((S, N, T)),
+            jnp.zeros((S, N, T), dtype=bool),
+        )
     xs = (jnp.arange(T, dtype=jnp.int64), eval_mask)
     carry, ys = jax.lax.scan(body, carry0, xs)
     times, subopt, fresh_counts, published = ys
-    cache_state = carry[16]
+    evictions = carry["cache"].get(
+        "evictions", jnp.zeros((S,), dtype=jnp.int64)
+    )
     return (
         times.T,
         subopt.T,
         fresh_counts.T,
-        carry[17],  # lat_matrix
-        cache_state[4],  # rejected_stale
-        cache_state[5],  # evictions
-        published.T,  # [S, T] publication schedule
+        carry["lat"],
+        carry["cache"]["rejected"],
+        evictions,
+        published.T,  # [S, T] publication schedule (all-False without §6)
     )
 
 
-def _scan_jit_for(kernels: FusedKernels, *, lb: bool = False):
-    """Per-kernels jitted driver.
+def _scan_jit_for(kernels: FusedKernels, mesh=None):
+    """Per-kernels jitted driver, keyed by the scenario mesh.
 
     The jit cache is owned by the kernels object rather than a module-level
     callable: a module-level ``jax.jit`` would keep every problem's data
     matrices (captured by the static ``kernels`` argument) alive for the
     process lifetime; this way the compiled executables are garbage
-    collected with the problem.
+    collected with the problem.  With a mesh, the driver is wrapped in
+    ``shard_map`` over the ``"data"`` (scenario) axis: the five slot
+    tables, ``slowdown``, ``eval_mask`` and the PRNG key are replicated,
+    every ``[S, ...]`` array is sharded on its leading axis, and so is
+    every output.
     """
-    attr = "_scan_driver_jit_lb" if lb else "_scan_driver_jit"
-    jitted = getattr(kernels, attr, None)
-    if jitted is None:
-        jitted = jax.jit(_run_scan_lb if lb else _run_scan, static_argnums=(0, 1))
-        setattr(kernels, attr, jitted)
-    return jitted
+    cache = getattr(kernels, "_scan_driver_jits", None)
+    if cache is None:
+        cache = {}
+        kernels._scan_driver_jits = cache
+    key = (
+        None
+        if mesh is None
+        else (mesh.axis_names, tuple(d.id for d in mesh.devices.flat))
+    )
+    fn = cache.get(key)
+    if fn is None:
+        if mesh is None:
+            fn = jax.jit(_run_scan, static_argnums=(0, 1))
+        else:
+            from jax.experimental.shard_map import shard_map
+
+            repl, data = P(), P("data")
+            in_specs = (repl,) * 5 + (
+                data, data, repl, data, data, data, data, repl, repl,
+            )
+            out_specs = (data,) * 7
+
+            def sharded(kernels_, spec_, *arrays):
+                body = functools.partial(_run_scan, kernels_, spec_)
+                # check_rep=False: jax 0.4.x has no replication rule for
+                # while_loop (the §6 aligner), and every output here is
+                # data-sharded anyway, so the static check buys nothing.
+                return shard_map(
+                    body, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_rep=False,
+                )(*arrays)
+
+            fn = jax.jit(sharded, static_argnums=(0, 1))
+        cache[key] = fn
+    return fn
+
+
+def scan_capability(
+    problem: FiniteSumProblem,
+    config: MethodConfig,
+    num_workers: int,
+    *,
+    slot_budget: Optional[int] = None,
+) -> EngineCapability:
+    """Structured report of how the fused scan would run this config.
+
+    * :data:`~repro.experiments.engine.CAP_OK` — supported; §6 configs fit
+      the dense slot universe within ``slot_budget``.
+    * :data:`~repro.experiments.engine.CAP_TILED` — supported; the §6
+      ladder universe exceeds the budget, so the scan uses the tiled
+      active-slot cache (``slots_resident`` names its footprint).
+    * :data:`~repro.experiments.engine.CAP_ACTIVE_SET` — unsupported: even
+      the tiled cache's resident entries exceed the budget; route to the
+      host engine.
+
+    ``slot_budget`` defaults to :data:`LB_MAX_SLOTS`.  Bounds here are
+    cheap overestimates (no universe is built): the dense bound is
+    ``N * sum(min(rung, max n_local))``; the tiled bound is the
+    minimum-interval-width packing cap per worker, which the exact greedy
+    capacity (:func:`~repro.core.gradient_cache.active_slot_capacity`)
+    never exceeds.
+    """
+    budget = int(LB_MAX_SLOTS if slot_budget is None else slot_budget)
+    if not (config.load_balance and config.uses_cache):
+        return EngineCapability(
+            supported=True,
+            code=CAP_OK,
+            detail="fused scan supports this config",
+            slot_budget=budget,
+        )
+    n = problem.num_samples
+    N = num_workers
+    n_local = np.array(
+        [p_stop(n, N, i + 1) - p_start(n, N, i + 1) + 1 for i in range(N)]
+    )
+    ladder = lb_ladder_for(config, n_local)
+    total = int(sum(min(int(r), int(n_local.max())) for r in ladder)) * N
+    if total <= budget:
+        return EngineCapability(
+            supported=True,
+            code=CAP_OK,
+            detail=(
+                f"§6 ladder slot universe fits densely "
+                f"({total} slots <= budget {budget})"
+            ),
+            slots_total=total,
+            slots_resident=total,
+            slot_budget=budget,
+        )
+    p_top = max(int(r) for r in ladder)
+    cap = 0
+    for nl in n_local:
+        w_min = max(int(nl) // min(p_top, int(nl)), 1)
+        cap = max(cap, int(nl) // w_min)
+    resident = N * cap
+    if resident <= budget:
+        return EngineCapability(
+            supported=True,
+            code=CAP_TILED,
+            detail=(
+                f"§6 ladder slot universe needs up to {total} slots "
+                f"(> slot budget {budget}); running the fused scan with the "
+                f"tiled active-slot cache (<= {resident} resident entries)"
+            ),
+            slots_total=total,
+            slots_resident=resident,
+            slot_budget=budget,
+        )
+    return EngineCapability(
+        supported=False,
+        code=CAP_ACTIVE_SET,
+        detail=(
+            f"even the tiled active-slot cache needs up to {resident} "
+            f"resident entries (> slot budget {budget}); the fused scan "
+            f"cannot hold this config — use EngineConfig(kind='host') or "
+            f"raise slot_budget"
+        ),
+        slots_total=total,
+        slots_resident=resident,
+        slot_budget=budget,
+    )
 
 
 def scan_unsupported_reason(
@@ -1064,27 +1244,14 @@ def scan_unsupported_reason(
 ) -> Optional[str]:
     """Why the fused scan cannot run this config (None = it can).
 
-    The only remaining limitation is a §6 slot universe larger than
-    :data:`LB_MAX_SLOTS`: the pre-allocated ladder universe would need
-    more per-slot value buffers than the memory budget allows.
-    ``engine="auto"`` routes exactly this case to the host engine."""
-    if not (config.load_balance and config.uses_cache):
-        return None
-    n = problem.num_samples
-    N = num_workers
-    n_local = np.array(
-        [p_stop(n, N, i + 1) - p_start(n, N, i + 1) + 1 for i in range(N)]
-    )
-    ladder = lb_ladder_for(config, n_local)
-    upper = int(sum(min(r, int(n_local.max())) for r in ladder)) * N
-    if upper > LB_MAX_SLOTS:
-        return (
-            f"§6 ladder slot universe needs up to {upper} slots "
-            f"(> LB_MAX_SLOTS={LB_MAX_SLOTS}): the fused scan pre-allocates "
-            "per-slot cache value buffers and cannot hold this config; "
-            "use engine='host'"
-        )
-    return None
+    Deprecated string shim over :func:`scan_capability` — callers should
+    branch on the structured report's ``code`` instead of this text.
+    Note that since the tiled cache landed, oversized §6 universes are
+    *supported* (they return None here); only configs whose active-entry
+    footprint exceeds the budget report a reason.
+    """
+    cap = scan_capability(problem, config, num_workers)
+    return None if cap.supported else cap.detail
 
 
 def run_convergence_scan(
@@ -1096,18 +1263,25 @@ def run_convergence_scan(
     cost_scale: float = 1.0,
     eval_every: int = 1,
     seed: int = 0,
+    engine: Optional[EngineConfig] = None,
 ):
     """Train ``config`` on every scenario of ``traces`` in one XLA dispatch.
 
     Bit-exact against the host engine and the scalar simulator on the same
     traces (see module docstring), §6 load-balanced configs included.
-    Raises ``ValueError`` for the one unsupported case
-    (:func:`scan_unsupported_reason`)."""
+    ``engine`` supplies the scenario mesh (``mesh`` / ``num_devices``) and
+    the slot budget; its ``kind`` is ignored here — this *is* the scan
+    engine.  Raises :class:`~repro.experiments.engine.EngineCapabilityError`
+    for the one unsupported case (see :func:`scan_capability`)."""
     from repro.experiments.convergence import ConvergenceBatchResult
 
-    reason = scan_unsupported_reason(problem, config, traces.num_workers)
-    if reason is not None:
-        raise ValueError(reason)
+    eng = as_engine_config(engine)
+    cap = scan_capability(
+        problem, config, traces.num_workers, slot_budget=eng.slot_budget
+    )
+    if not cap.supported:
+        raise EngineCapabilityError(cap)
+    tiled = cap.code == CAP_TILED
     S = traces.num_scenarios
     T = num_iterations
     if T > traces.horizon:
@@ -1116,6 +1290,7 @@ def run_convergence_scan(
         )
     lb = bool(config.load_balance)
     universe = None
+    active_cap = 0
     if lb and config.uses_cache:
         n = problem.num_samples
         N = traces.num_workers
@@ -1123,72 +1298,96 @@ def run_convergence_scan(
         base_stop = [p_stop(n, N, i + 1) for i in range(N)]
         n_local = np.asarray(base_stop) - np.asarray(base_start) + 1
         universe = build_slot_universe(
-            base_start, base_stop, lb_ladder_for(config, n_local)
+            base_start,
+            base_stop,
+            lb_ladder_for(config, n_local),
+            with_overlaps=not tiled,
         )
+        if tiled:
+            active_cap = int(active_slot_capacity(universe).max())
     spec = _static_spec(
-        problem, config, traces.num_workers, T, cost_scale, universe=universe
+        problem,
+        config,
+        traces.num_workers,
+        T,
+        cost_scale,
+        universe=universe,
+        tiled=tiled,
+        active_cap=active_cap,
     )
     kernels = problem.fused_kernels()
+    mesh = eng.mesh
+    if mesh is None and eng.num_devices is not None:
+        from repro.launch.mesh import make_scenario_mesh
+
+        mesh = make_scenario_mesh(eng.num_devices)
+    D = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+    # shard_map needs the scenario axis divisible by the mesh: edge-pad
+    # with copies of the last scenario (exact per-row math makes padding
+    # rows inert) and slice every output back to S
+    pad = (-S) % D
     V0 = np.repeat(problem.init(seed)[None], S, axis=0)
     eval_mask = np.zeros(T, dtype=bool)
     eval_mask[::eval_every] = True
     eval_mask[T - 1] = True
+
+    def padded(a):
+        if pad == 0:
+            return a
+        return np.concatenate([a, np.repeat(a[-1:], pad, axis=0)], axis=0)
+
     with enable_x64():
-        empty = jnp.zeros((S, traces.num_workers, 0))
+        empty = jnp.zeros((S + pad, traces.num_workers, 0))
         has_b = traces.has_bursts
         trace_args = (
-            jnp.asarray(traces.comm),
-            jnp.asarray(traces.comp_unit),
+            jnp.asarray(padded(traces.comm)),
+            jnp.asarray(padded(traces.comp_unit)),
             jnp.asarray(traces.slowdown),
-            jnp.asarray(traces.burst_start) if has_b else empty,
-            jnp.asarray(traces.burst_end) if has_b else empty,
-            jnp.asarray(traces.burst_factor) if has_b else empty,
-            jnp.asarray(V0),
+            jnp.asarray(padded(traces.burst_start)) if has_b else empty,
+            jnp.asarray(padded(traces.burst_end)) if has_b else empty,
+            jnp.asarray(padded(traces.burst_factor)) if has_b else empty,
+            jnp.asarray(padded(V0)),
             jnp.asarray(eval_mask),
         )
-        if lb:
-            if universe is not None:
-                slot_table = jnp.asarray(universe.slot_table)
-                slot_width = jnp.asarray(universe.widths)
-                overlap_idx = jnp.asarray(universe.overlap_idx)
-            else:  # non-cache methods: no slots, keep shapes minimal
-                N = traces.num_workers
-                L = max(len(spec.ladder), 1)
-                pmax = max(spec.ladder) if spec.ladder else 1
-                slot_table = jnp.zeros((N, L, pmax), dtype=jnp.int64)
-                slot_width = jnp.zeros((1,), dtype=jnp.int64)
-                overlap_idx = jnp.full((1, 1), -1, dtype=jnp.int64)
-            times, subopt, fresh, lat, rejected, evictions, published = (
-                _scan_jit_for(kernels, lb=True)(
-                    kernels,
-                    spec,
-                    slot_table,
-                    slot_width,
-                    overlap_idx,
-                    *trace_args,
-                    jax.random.PRNGKey(seed),
-                )
-            )
-            published = np.asarray(published)
-            times_np = np.asarray(times)
-            repartition_events = [
-                [float(times_np[s, t]) for t in np.flatnonzero(published[s])]
-                for s in range(S)
-            ]
-            evictions_np = np.asarray(evictions, dtype=np.int64)
-        else:
-            times, subopt, fresh, lat, rejected = _scan_jit_for(kernels)(
-                kernels, spec, *trace_args
-            )
-            times_np = np.asarray(times)
-            repartition_events = [[] for _ in range(S)]
-            evictions_np = np.zeros(S, dtype=np.int64)
+        if universe is not None:
+            slot_table = jnp.asarray(universe.slot_table)
+            slot_width = jnp.asarray(universe.widths)
+            slot_starts = jnp.asarray(universe.starts)
+            slot_stops = jnp.asarray(universe.stops)
+            overlap_idx = jnp.asarray(universe.overlap_idx)
+        else:  # grid / non-cache configs: keep the unused tables minimal
+            N = traces.num_workers
+            L = max(len(spec.ladder), 1)
+            pmax = max(spec.ladder) if spec.ladder else 1
+            slot_table = jnp.zeros((N, L, pmax), dtype=jnp.int64)
+            slot_width = jnp.zeros((1,), dtype=jnp.int64)
+            slot_starts = jnp.zeros((1,), dtype=jnp.int64)
+            slot_stops = jnp.zeros((1,), dtype=jnp.int64)
+            overlap_idx = jnp.full((1, 1), -1, dtype=jnp.int64)
+        outs = _scan_jit_for(kernels, mesh)(
+            kernels,
+            spec,
+            slot_table,
+            slot_width,
+            slot_starts,
+            slot_stops,
+            overlap_idx,
+            *trace_args,
+            jax.random.PRNGKey(seed),
+        )
+        times, subopt, fresh, lat, rejected, evictions, published = (
+            np.asarray(o)[:S] for o in outs
+        )
+    repartition_events = [
+        [float(times[s, t]) for t in np.flatnonzero(published[s])]
+        for s in range(S)
+    ]
     return ConvergenceBatchResult(
-        times=times_np,
-        suboptimality=np.asarray(subopt),
+        times=times,
+        suboptimality=subopt,
         fresh_counts=np.asarray(fresh, dtype=np.int64),
-        per_worker_latency=np.asarray(lat),
+        per_worker_latency=lat,
         repartition_events=repartition_events,
-        evictions=evictions_np,
+        evictions=np.asarray(evictions, dtype=np.int64),
         rejected_stale=np.asarray(rejected, dtype=np.int64),
     )

@@ -1,0 +1,88 @@
+"""API pins for the typed engine-selection surface (no heavy compute).
+
+``EngineConfig`` replaced the stringly ``engine: str = "auto"`` kwarg;
+these tests pin the coercion contract (legacy strings keep working but
+warn), the validation errors, and the structured capability report the
+fused engine raises instead of prose-matched ``ValueError`` text.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.experiments.engine import (
+    CAP_ACTIVE_SET,
+    CAP_OK,
+    CAP_TILED,
+    EngineCapability,
+    EngineCapabilityError,
+    EngineConfig,
+    as_engine_config,
+)
+
+
+class TestEngineConfig:
+    def test_defaults(self):
+        cfg = EngineConfig()
+        assert cfg.kind == "auto"
+        assert cfg.num_devices is None and cfg.mesh is None
+        assert cfg.slot_budget is None
+        assert cfg.eval_every == 1
+
+    def test_frozen(self):
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            EngineConfig().kind = "scan"
+
+    @pytest.mark.parametrize("kind", ["auto", "scan", "host"])
+    def test_valid_kinds(self, kind):
+        assert EngineConfig(kind=kind).kind == kind
+
+    def test_invalid_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown engine kind"):
+            EngineConfig(kind="scann")
+
+    @pytest.mark.parametrize(
+        "kwargs",
+        [{"num_devices": 0}, {"slot_budget": 0}, {"eval_every": 0}],
+    )
+    def test_invalid_numbers_rejected(self, kwargs):
+        with pytest.raises(ValueError):
+            EngineConfig(**kwargs)
+
+
+class TestAsEngineConfig:
+    def test_none_is_defaults(self):
+        assert as_engine_config(None) == EngineConfig()
+
+    def test_config_passes_through_unchanged(self):
+        cfg = EngineConfig(kind="scan", num_devices=2)
+        assert as_engine_config(cfg) is cfg
+
+    @pytest.mark.parametrize("kind", ["auto", "scan", "host"])
+    def test_legacy_strings_warn_and_map(self, kind):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            cfg = as_engine_config(kind)
+        assert cfg == EngineConfig(kind=kind)
+
+    def test_bad_type_rejected(self):
+        with pytest.raises(TypeError, match="EngineConfig or a legacy string"):
+            as_engine_config(42)
+
+
+class TestEngineCapability:
+    def test_codes_are_distinct_stable_strings(self):
+        assert len({CAP_OK, CAP_TILED, CAP_ACTIVE_SET}) == 3
+
+    def test_error_carries_capability_and_is_valueerror(self):
+        cap = EngineCapability(
+            supported=False,
+            code=CAP_ACTIVE_SET,
+            detail="too many active slots",
+            slots_total=100,
+            slots_resident=60,
+            slot_budget=50,
+        )
+        err = EngineCapabilityError(cap)
+        assert isinstance(err, ValueError)
+        assert err.capability is cap
+        assert str(err) == "too many active slots"

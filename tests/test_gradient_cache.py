@@ -126,3 +126,134 @@ def test_cache_accepts_only_strictly_fresher_overlaps(ops):
             for (s, e), it in before.items():
                 if not (e < start or stop < s):
                     assert it < t
+
+
+# ---------------------------------------------------------------------------
+# Slot-universe tiling invariants (the fused engine's tiled active-slot
+# cache replaces the precomputed dense overlap tables with runtime
+# interval arithmetic against a small per-worker active set; these
+# properties are what make that substitution sound).
+# ---------------------------------------------------------------------------
+
+def _universe_from(n_locals, ladder):
+    from repro.core.gradient_cache import build_slot_universe
+
+    n = np.asarray(n_locals, dtype=np.int64)
+    stops = np.cumsum(n)
+    starts = stops - n + 1
+    ladder = tuple(sorted(set(ladder)))
+    return build_slot_universe(starts, stops, ladder), ladder
+
+
+def _worker_slots(universe, i):
+    tbl = universe.slot_table[i]
+    return np.unique(tbl[tbl >= 0])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_locals=st.lists(st.integers(min_value=1, max_value=12),
+                      min_size=1, max_size=4),
+    ladder=st.lists(st.integers(min_value=1, max_value=8),
+                    min_size=1, max_size=4),
+)
+def test_universe_without_overlaps_matches_dense(n_locals, ladder):
+    """``with_overlaps=False`` must differ from the dense build only in
+    the ``overlap_idx`` placeholder, and the dense ``overlap_idx`` must
+    equal brute-force interval arithmetic — the invariant that lets the
+    tiled cache compute overlaps at runtime instead."""
+    from repro.core.gradient_cache import build_slot_universe
+
+    dense, lad = _universe_from(n_locals, ladder)
+    n = np.asarray(n_locals, dtype=np.int64)
+    stops = np.cumsum(n)
+    starts = stops - n + 1
+    lean = build_slot_universe(starts, stops, lad, with_overlaps=False)
+    np.testing.assert_array_equal(dense.starts, lean.starts)
+    np.testing.assert_array_equal(dense.stops, lean.stops)
+    np.testing.assert_array_equal(dense.widths, lean.widths)
+    np.testing.assert_array_equal(dense.slot_table, lean.slot_table)
+    assert np.all(lean.overlap_idx == -1)
+    for i in range(len(n_locals)):
+        sl = _worker_slots(dense, i)
+        for e in sl:
+            listed = dense.overlap_idx[e]
+            listed = set(listed[listed >= 0].tolist())
+            brute = {
+                int(o) for o in sl if o != e
+                and dense.starts[o] <= dense.stops[e]
+                and dense.starts[e] <= dense.stops[o]
+            }
+            assert listed == brute
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_locals=st.lists(st.integers(min_value=1, max_value=12),
+                      min_size=1, max_size=4),
+    ladder=st.lists(st.integers(min_value=1, max_value=8),
+                    min_size=1, max_size=4),
+)
+def test_active_slot_capacity_is_max_disjoint_subset(n_locals, ladder):
+    """The greedy capacity must equal the true optimum (max cardinality
+    of a pairwise-disjoint subset), computed here by an independent DP."""
+    from repro.core.gradient_cache import active_slot_capacity
+
+    universe, _ = _universe_from(n_locals, ladder)
+    caps = active_slot_capacity(universe)
+    for i in range(len(n_locals)):
+        sl = _worker_slots(universe, i)
+        iv = sorted(
+            (int(universe.stops[e]), int(universe.starts[e])) for e in sl
+        )
+        # classic interval-scheduling DP over intervals sorted by stop
+        best = [0] * (len(iv) + 1)
+        for j, (b, a) in enumerate(iv, start=1):
+            compat = 0
+            for k in range(j - 1, 0, -1):
+                if iv[k - 1][0] < a:
+                    compat = k
+                    break
+            best[j] = max(best[j - 1], best[compat] + 1)
+        assert caps[i] == best[len(iv)]
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_locals=st.lists(st.integers(min_value=1, max_value=12),
+                      min_size=1, max_size=4),
+    ladder=st.lists(st.integers(min_value=1, max_value=8),
+                    min_size=1, max_size=4),
+    picks=st.lists(st.tuples(st.integers(min_value=0, max_value=10**6),
+                             st.integers(min_value=0, max_value=10**6)),
+                   min_size=1, max_size=40),
+)
+def test_tiled_active_set_never_exceeds_capacity(n_locals, ladder, picks):
+    """Replay the tiled cache's insert discipline (evict overlapping
+    entries, then insert) with arbitrary slot sequences: the per-worker
+    active set must stay pairwise disjoint and never exceed the
+    ``active_slot_capacity`` bound — the guarantee that sizes the tiled
+    entry tables and makes a free entry always available at insert time."""
+    from repro.core.gradient_cache import active_slot_capacity
+
+    universe, _ = _universe_from(n_locals, ladder)
+    caps = active_slot_capacity(universe)
+    active = {i: set() for i in range(len(n_locals))}
+    for wi, si in picks:
+        i = wi % len(n_locals)
+        sl = _worker_slots(universe, i)
+        e = int(sl[si % sl.size])
+        lo, hi = int(universe.starts[e]), int(universe.stops[e])
+        evicted = {
+            o for o in active[i]
+            if universe.starts[o] <= hi and lo <= universe.stops[o]
+        }
+        active[i] -= evicted
+        active[i].add(e)
+        assert len(active[i]) <= caps[i]
+        ivs = sorted(
+            (int(universe.starts[o]), int(universe.stops[o]))
+            for o in active[i]
+        )
+        for (a1, b1), (a2, _) in zip(ivs, ivs[1:]):
+            assert b1 < a2  # pairwise disjoint

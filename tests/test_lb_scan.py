@@ -7,9 +7,11 @@ repartition-heavy traces, cache and non-cache methods, vector and matrix
 iterates — the scan reproduces the batched host engine and the scalar
 ``TrainingSimulator`` bit for bit, including the repartition schedule and
 the cache eviction/rejection telemetry.  They also pin the routing
-contract: ``engine="auto"`` sends §6 configs to the scan, and the one
-unsupported case (slot universe above ``LB_MAX_SLOTS``) raises a clear
-``ValueError`` naming the limitation instead of silently falling back.
+contract: ``EngineConfig(kind="auto")`` sends §6 configs to the scan; a
+slot universe above the budget routes through the tiled active-slot
+cache (still bit-exact); and the one genuinely unsupported case (the
+active-entry footprint itself exceeds the budget) raises a structured
+``EngineCapabilityError`` instead of silently falling back.
 """
 
 import numpy as np
@@ -201,30 +203,82 @@ class TestRouting:
         assert calls, "auto must route §6 configs to the fused scan"
         assert np.isfinite(res.times).all()
 
-    def test_oversized_universe_raises_with_reason(self, logreg_small, monkeypatch):
-        """Explicit engine='scan' on the unsupported config must raise a
-        ValueError naming the limitation — not quietly fall back."""
-        cluster, traces = artificial_fleet(logreg_small)
-        cfg = lb_config("dsag")
-        monkeypatch.setattr(fused, "LB_MAX_SLOTS", 3)
-        with pytest.raises(ValueError, match="LB_MAX_SLOTS") as exc:
-            run_convergence_batch(
-                logreg_small, traces, cfg, 10, seed=0, engine="scan"
-            )
-        # the message must tell the operator what to do instead
-        assert "engine='host'" in str(exc.value)
+    def test_oversized_universe_runs_tiled_bitexact(self, logreg_small):
+        """Bugfix pin: a slot universe above the budget no longer raises
+        from explicit ``kind="scan"`` — it routes through the tiled
+        active-slot cache and stays bit-exact against the host engine."""
+        from repro.experiments.engine import CAP_TILED, EngineConfig
 
-    def test_oversized_universe_auto_falls_back_to_host(
-        self, logreg_small, monkeypatch
-    ):
         cluster, traces = artificial_fleet(logreg_small)
         cfg = lb_config("dsag")
-        monkeypatch.setattr(fused, "LB_MAX_SLOTS", 3)
-        auto = run_convergence_batch(logreg_small, traces, cfg, 20, seed=0)
+        cap_dense = fused.scan_capability(logreg_small, cfg, traces.num_workers)
+        budget = cap_dense.slots_total - 1  # forces the tiled layout
+        cap = fused.scan_capability(
+            logreg_small, cfg, traces.num_workers, slot_budget=budget
+        )
+        assert cap.supported and cap.code == CAP_TILED
+        assert cap.slots_resident <= budget < cap.slots_total
+        tiled = run_convergence_batch(
+            logreg_small, traces, cfg, 20, seed=0,
+            engine=EngineConfig(kind="scan", slot_budget=budget),
+        )
         host = run_convergence_batch(
-            logreg_small, traces, cfg, 20, seed=0, engine="host"
+            logreg_small, traces, cfg, 20, seed=0, engine=EngineConfig(kind="host")
+        )
+        assert_results_equal(host, tiled)
+        # the §7.2 showcase actually repartitions, so the tiled walk's
+        # eviction path is exercised, not just the SAG fast path
+        assert sum(len(ev) for ev in tiled.repartition_events) > 0
+        assert tiled.evictions.sum() > 0
+
+    def test_unsupported_config_raises_capability_error(self, logreg_small):
+        """Explicit ``kind="scan"`` on a genuinely unsupported config (the
+        active-entry footprint itself exceeds the budget) must raise a
+        structured capability error — not quietly fall back."""
+        from repro.experiments.engine import (
+            CAP_ACTIVE_SET,
+            EngineCapabilityError,
+            EngineConfig,
+        )
+
+        cluster, traces = artificial_fleet(logreg_small)
+        cfg = lb_config("dsag")
+        with pytest.raises(EngineCapabilityError) as exc:
+            run_convergence_batch(
+                logreg_small, traces, cfg, 10, seed=0,
+                engine=EngineConfig(kind="scan", slot_budget=3),
+            )
+        cap = exc.value.capability
+        assert cap.code == CAP_ACTIVE_SET and not cap.supported
+        assert cap.slots_resident > cap.slot_budget == 3
+        # still a ValueError telling the operator what to do instead
+        assert isinstance(exc.value, ValueError)
+        assert "host" in str(exc.value)
+
+    def test_unsupported_config_auto_falls_back_to_host(self, logreg_small):
+        from repro.experiments.engine import EngineConfig
+
+        cluster, traces = artificial_fleet(logreg_small)
+        cfg = lb_config("dsag")
+        auto = run_convergence_batch(
+            logreg_small, traces, cfg, 20, seed=0,
+            engine=EngineConfig(kind="auto", slot_budget=3),
+        )
+        host = run_convergence_batch(
+            logreg_small, traces, cfg, 20, seed=0, engine=EngineConfig(kind="host")
         )
         assert_results_equal(auto, host)
+
+    def test_legacy_lb_max_slots_monkeypatch_still_gates(
+        self, logreg_small, monkeypatch
+    ):
+        """The module constant is still the default budget."""
+        cluster, traces = artificial_fleet(logreg_small)
+        cfg = lb_config("dsag")
+        monkeypatch.setattr(fused, "LB_MAX_SLOTS", 3)
+        assert fused.scan_unsupported_reason(
+            logreg_small, cfg, traces.num_workers
+        ) is not None
 
 
 class TestJitOptimizerInvariances:

@@ -1,0 +1,206 @@
+"""Sharded fused-scan bit-exactness over the scenario axis (the tentpole).
+
+``EngineConfig(num_devices=D)`` wraps the fused-scan driver in
+``shard_map`` on a 1-D ``"data"`` mesh.  Every per-scenario iteration is
+row-independent, so the sharded grid must reproduce the single-device
+scan **bit for bit** — which joins the existing equality chain
+(scan == host == scalar ``TrainingSimulator``).  These tests pin that
+join, including the §6 load-balanced path and the edge-padded
+``S % num_devices != 0`` remainder.
+
+On a single-CPU-device interpreter the multi-device in-process tests
+skip; CI re-runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` where they
+execute for real.  The subprocess smoke test at the bottom always runs:
+it spawns a fresh 4-device interpreter so single-device tier-1 runs
+still exercise the sharded code path end to end.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.cluster.simulator import MethodConfig
+from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+from repro.experiments.convergence import run_convergence_batch
+from repro.experiments.engine import EngineConfig
+from repro.latency.model import make_paper_artificial_cluster, sample_fleet
+
+
+def _fleet(problem, n_workers=6, n_scenarios=3, horizon=40, seed=11):
+    sp = 4
+    c_task = problem.compute_cost(
+        1, max(problem.num_samples // (n_workers * sp), 1)
+    )
+    cluster = make_paper_artificial_cluster(
+        num_workers=n_workers, load_unit=c_task, seed=1
+    )
+    return sample_fleet(cluster, n_scenarios, horizon, seed=seed)
+
+
+def _config(load_balance=False, **kw):
+    if load_balance:
+        kw.setdefault("lb_startup_delay", 0.005)
+        kw.setdefault("lb_interval", 0.01)
+    return MethodConfig(
+        name="dsag", w=3, eta=0.25, subpartitions=4,
+        load_balance=load_balance, **kw
+    )
+
+
+def assert_results_equal(a, b):
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.suboptimality, b.suboptimality)
+    np.testing.assert_array_equal(a.fresh_counts, b.fresh_counts)
+    np.testing.assert_array_equal(a.per_worker_latency, b.per_worker_latency)
+    np.testing.assert_array_equal(a.evictions, b.evictions)
+    np.testing.assert_array_equal(a.rejected_stale, b.rejected_stale)
+    assert a.repartition_events == b.repartition_events
+
+
+@pytest.fixture(scope="module")
+def logreg_small():
+    X, y = make_higgs_like(480, seed=0)
+    return LogisticRegressionProblem(X=X, y=y)
+
+
+def needs_devices(n):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs >= {n} devices (CI re-runs with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+    )
+
+
+class TestShardedEqualsUnsharded:
+    """sharded grid == single-device scan, bit for bit."""
+
+    def test_one_device_mesh_is_bitexact(self, logreg_small):
+        """D=1 shard_map is a degenerate shard but a distinct code path
+        (runs everywhere, even on a single-device interpreter)."""
+        traces = _fleet(logreg_small)
+        cfg = _config()
+        plain = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan"),
+        )
+        sharded = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan", num_devices=1),
+        )
+        assert_results_equal(plain, sharded)
+
+    @needs_devices(2)
+    def test_two_devices_with_remainder(self, logreg_small):
+        """S=3 over D=2: the edge-padded remainder row must not leak."""
+        traces = _fleet(logreg_small, n_scenarios=3)
+        cfg = _config()
+        plain = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan"),
+        )
+        sharded = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan", num_devices=2),
+        )
+        assert_results_equal(plain, sharded)
+
+    @needs_devices(4)
+    def test_four_devices_even_split(self, logreg_small):
+        traces = _fleet(logreg_small, n_scenarios=4)
+        cfg = _config()
+        plain = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan"),
+        )
+        sharded = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan", num_devices=4),
+        )
+        assert_results_equal(plain, sharded)
+
+    @needs_devices(4)
+    def test_four_devices_lb_config_with_remainder(self, logreg_small):
+        """§6 load balancing sharded: the balancer's dynamic trip counts
+        (``n_ranks``, ``n_sub``) vary across shards, so this pins that
+        the extra no-op trips on the smaller shard are exact no-ops."""
+        traces = _fleet(logreg_small, n_scenarios=5)
+        cfg = _config(load_balance=True)
+        plain = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan"),
+        )
+        sharded = run_convergence_batch(
+            logreg_small, traces, cfg, 40, seed=0,
+            engine=EngineConfig(kind="scan", num_devices=4),
+        )
+        assert_results_equal(plain, sharded)
+        # vacuity guard: the balancer must actually publish here
+        assert any(len(ev) > 0 for ev in plain.repartition_events)
+
+    def test_too_many_devices_is_a_clear_error(self, logreg_small):
+        traces = _fleet(logreg_small)
+        n_avail = len(jax.devices())
+        with pytest.raises(ValueError, match="XLA_FLAGS"):
+            run_convergence_batch(
+                logreg_small, traces, _config(), 10, seed=0,
+                engine=EngineConfig(kind="scan", num_devices=n_avail + 1),
+            )
+
+
+def test_sharded_smoke_subprocess():
+    """Always-on end-to-end pin: a fresh 4-device interpreter runs the §6
+    LB grid sharded (S=3, so both remainder padding and the balancer are
+    in play) and checks it against the unsharded scan bit for bit."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+assert len(jax.devices()) >= 4, jax.devices()
+
+from repro.cluster.simulator import MethodConfig
+from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+from repro.experiments.convergence import run_convergence_batch
+from repro.experiments.engine import EngineConfig
+from repro.latency.model import make_paper_artificial_cluster, sample_fleet
+
+X, y = make_higgs_like(480, seed=0)
+problem = LogisticRegressionProblem(X=X, y=y)
+cfg = MethodConfig(name="dsag", w=3, eta=0.25, subpartitions=4,
+                   load_balance=True, lb_startup_delay=0.005,
+                   lb_interval=0.01)
+c_task = problem.compute_cost(1, max(problem.num_samples // 24, 1))
+cluster = make_paper_artificial_cluster(num_workers=6, load_unit=c_task,
+                                        seed=1)
+traces = sample_fleet(cluster, 3, 40, seed=11)
+
+plain = run_convergence_batch(problem, traces, cfg, 30, seed=0,
+                              engine=EngineConfig(kind="scan"))
+sharded = run_convergence_batch(
+    problem, traces, cfg, 30, seed=0,
+    engine=EngineConfig(kind="scan", num_devices=4))
+np.testing.assert_array_equal(plain.times, sharded.times)
+np.testing.assert_array_equal(plain.suboptimality, sharded.suboptimality)
+np.testing.assert_array_equal(plain.fresh_counts, sharded.fresh_counts)
+np.testing.assert_array_equal(plain.evictions, sharded.evictions)
+assert plain.repartition_events == sharded.repartition_events
+assert any(len(ev) > 0 for ev in plain.repartition_events)
+print("SHARDED_SMOKE_OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED_SMOKE_OK" in proc.stdout
