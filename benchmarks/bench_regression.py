@@ -39,7 +39,6 @@ import dataclasses
 import json
 import sys
 import time
-from typing import Dict, List, Optional, Tuple
 
 SPEEDUP_DRIFT_TOLERANCE = 0.15
 SPEEDUP_KEYS = ("sag_over_dsag", "coded_over_dsag")
@@ -50,9 +49,9 @@ class GridMismatch(RuntimeError):
     """The committed artifact's grid cannot be reproduced by the rerun."""
 
 
-def method_ranking(cells: Dict[str, dict], regime: str) -> List[str]:
+def method_ranking(cells: dict[str, dict], regime: str) -> list[str]:
     """Methods sorted fastest-first by their best-w mean iteration time."""
-    best: Dict[str, float] = {}
+    best: dict[str, float] = {}
     for key, cell in cells.items():
         reg, method, _w = key.split("/")
         if reg != regime:
@@ -63,10 +62,10 @@ def method_ranking(cells: Dict[str, dict], regime: str) -> List[str]:
     return sorted(best, key=best.get)
 
 
-def compare_sweep(committed: dict, fresh: dict) -> Tuple[List[str], List[str]]:
+def compare_sweep(committed: dict, fresh: dict) -> tuple[list[str], list[str]]:
     """Diff two BENCH_sweep payloads; returns (failures, warnings)."""
-    failures: List[str] = []
-    warnings: List[str] = []
+    failures: list[str] = []
+    warnings: list[str] = []
     for regime in committed["grid"]["regimes"]:
         if regime not in fresh["grid"]["regimes"]:
             failures.append(f"{regime}: regime missing from rerun")
@@ -155,7 +154,7 @@ def rerun_grid(committed: dict) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def convergence_ranking(methods: Dict[str, dict]) -> List[str]:
+def convergence_ranking(methods: dict[str, dict]) -> list[str]:
     """Methods sorted fastest-first by median time-to-gap (None/inf last).
 
     Ties (e.g. two methods that both never reach the gap) break by method
@@ -170,10 +169,10 @@ def convergence_ranking(methods: Dict[str, dict]) -> List[str]:
     return sorted(methods, key=key)
 
 
-def compare_convergence(committed: dict, fresh: dict) -> Tuple[List[str], List[str]]:
+def compare_convergence(committed: dict, fresh: dict) -> tuple[list[str], list[str]]:
     """Diff two BENCH_convergence payloads; returns (failures, warnings)."""
-    failures: List[str] = []
-    warnings: List[str] = []
+    failures: list[str] = []
+    warnings: list[str] = []
     old_rank = convergence_ranking(committed["methods"])
     new_rank = convergence_ranking(fresh["methods"])
     if old_rank != new_rank:
@@ -250,7 +249,7 @@ def run_lb_scan_column(
     eval_every: int,
     seed: int,
     gap: float,
-    base_medians: Optional[Dict[str, float]] = None,
+    base_medians: dict[str, float] | None = None,
     warm_timings: bool = True,
 ) -> dict:
     """Run the §6 DSAG config through both engines; build the lb_scan column.
@@ -344,7 +343,7 @@ def run_lb_scan_column(
 def run_pca_grid_sharded_column(
     *,
     n_scenarios: int = 40,
-    num_devices: Optional[int] = None,
+    num_devices: int | None = None,
     seed: int = 0,
 ) -> dict:
     """10x the calibrated paper-scale PCA grid through the *sharded* scan.
@@ -401,10 +400,10 @@ def run_pca_grid_sharded_column(
     return payload
 
 
-def compare_pca_grid_sharded(committed: dict, fresh: dict) -> Tuple[List[str], List[str]]:
+def compare_pca_grid_sharded(committed: dict, fresh: dict) -> tuple[list[str], list[str]]:
     """Diff the ``pca_grid_sharded`` columns; returns (failures, warnings)."""
-    failures: List[str] = []
-    warnings: List[str] = []
+    failures: list[str] = []
+    warnings: list[str] = []
     if not fresh.get("bitexact_sharded_vs_unsharded", False):
         failures.append(
             "pca_grid_sharded: sharded grid no longer bit-exact vs the "
@@ -533,7 +532,7 @@ def rerun_convergence(committed: dict) -> dict:
     return payload
 
 
-def main(argv: List[str]) -> int:
+def main(argv: list[str]) -> int:
     args = [a for a in argv[1:] if not a.startswith("--")]
     path = args[0] if args else "BENCH_sweep.json"
     kind = "sweep"
@@ -541,6 +540,27 @@ def main(argv: List[str]) -> int:
         kind = argv[argv.index("--kind") + 1]
     elif "convergence" in path:
         kind = "convergence"
+    if kind == "tracelint":
+        # gate mode over the static-analysis registry: any non-baselined
+        # finding fails; a suppression that no longer matches anything
+        # warns (stale documented debt — delete it)
+        from repro.analysis.lint import load_baseline, run_lint
+
+        report = run_lint("all", baseline_path="tracelint.toml")
+        used = [s for _, s in report.suppressed]
+        for supp in load_baseline("tracelint.toml"):
+            if supp not in used:
+                print(f"WARN: stale suppression {supp.code} ({supp.entry})")
+        for f in report.findings:
+            print(f"FAIL: {f.render()}")
+        if report.findings:
+            print(f"tracelint regression: {len(report.findings)} finding(s)")
+            return 1
+        print(
+            f"tracelint: clean across {len(report.entries_run)} entries "
+            f"({len(report.suppressed)} baselined finding(s))"
+        )
+        return 0
     try:
         with open(path) as fh:
             committed = json.load(fh)

@@ -4,9 +4,9 @@ contract of ``benchmarks.run``."""
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from collections.abc import Callable
 
-ROWS: List[Tuple[str, float, str]] = []
+ROWS: list[tuple[str, float, str]] = []
 
 
 def record(name: str, us_per_call: float, derived: str) -> None:

@@ -8,14 +8,13 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List
 
 from benchmarks.common import record
 
 BASE = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "experiments")
 
 
-def load_cells(mesh: str) -> List[Dict]:
+def load_cells(mesh: str) -> list[dict]:
     d = os.path.join(BASE, "dryrun", mesh)
     if not os.path.isdir(d):
         return []
@@ -27,7 +26,7 @@ def load_cells(mesh: str) -> List[Dict]:
     return cells
 
 
-def bottleneck_hint(cell: Dict) -> str:
+def bottleneck_hint(cell: dict) -> str:
     rl = cell["roofline"]
     dom = rl["dominant"]
     if dom == "collective":

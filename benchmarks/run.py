@@ -8,11 +8,12 @@ from __future__ import annotations
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import kernels_bench, paper_figs, roofline_report
+    from benchmarks import kernels_bench, paper_figs, roofline_report, tracelint_bench
 
     paper_figs.run_all()
     kernels_bench.run_all()
     roofline_report.run_all()
+    tracelint_bench.run_all()
 
 
 if __name__ == "__main__":

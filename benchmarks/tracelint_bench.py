@@ -1,0 +1,37 @@
+"""Timing of the tracelint entry-point probes (build + full rule pass).
+
+The analyzer runs in CI on every push, so its cost is part of the build
+budget: these rows time (a) building each registered probe (tracing the
+production entry point into a jaxpr) and (b) the full five-rule pass over
+it, via the same ``repro.analysis.lint`` registry the CI gate and
+``tests/test_tracelint.py`` use.  Emits the repo's
+``name,us_per_call,derived`` CSV rows; ``bench_regression.py --kind
+tracelint`` gates on the derived finding counts (never on wall time).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import record, time_fn
+
+
+def run_all() -> None:
+    from repro.analysis.lint.entries import ENTRIES
+    from repro.analysis.lint.rules import ALL_RULES
+
+    for name, build in ENTRIES.items():
+        us_build = time_fn(build, warmup=1, iters=3)
+        entry = build()
+
+        def rule_pass(e=entry):
+            return [f for _, rule in ALL_RULES for f in rule(e)]
+
+        us_rules = time_fn(rule_pass, warmup=1, iters=3)
+        findings = rule_pass()
+        codes = "+".join(sorted({f.code for f in findings})) or "clean"
+        record(f"tracelint_build_{name}", us_build, "probe trace")
+        record(f"tracelint_rules_{name}", us_rules, f"findings={codes}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run_all()

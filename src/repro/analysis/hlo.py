@@ -24,7 +24,6 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -81,17 +80,17 @@ class Instruction:
     type_str: str
     op: str
     line: str
-    operands: List[str]
+    operands: list[str]
 
 
 @dataclasses.dataclass
 class Computation:
     name: str
-    instructions: List[Instruction]
-    by_name: Dict[str, Instruction]
+    instructions: list[Instruction]
+    by_name: dict[str, Instruction]
 
 
-def _parse_operands(rest: str) -> List[str]:
+def _parse_operands(rest: str) -> list[str]:
     """Operand names from the first (...) after the op name."""
     m = _OPERANDS_RE.search(rest)
     if not m:
@@ -109,10 +108,10 @@ def _parse_operands(rest: str) -> List[str]:
     return out
 
 
-def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
-    comps: Dict[str, Computation] = {}
-    entry: Optional[str] = None
-    cur: Optional[Computation] = None
+def parse_computations(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry: str | None = None
+    cur: Computation | None = None
     for raw in text.splitlines():
         line = raw.rstrip()
         if cur is None:
@@ -193,10 +192,10 @@ def _dot_flops(inst: Instruction, comp: Computation) -> float:
 class HloCost:
     flops: float = 0.0
     bytes: float = 0.0
-    coll_counts: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
-    coll_result_bytes: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
-    coll_operand_bytes: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
-    coll_wire_bytes: Dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_result_bytes: dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_operand_bytes: dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_wire_bytes: dict[str, float] = dataclasses.field(default_factory=lambda: defaultdict(float))
 
     def add(self, other: "HloCost", mult: float = 1.0) -> None:
         self.flops += other.flops * mult
@@ -215,7 +214,7 @@ class HloCost:
     def total_wire_bytes(self) -> float:
         return sum(self.coll_wire_bytes.values())
 
-    def as_dict(self) -> Dict:
+    def as_dict(self) -> dict:
         return {
             "flops": self.flops,
             "bytes": self.bytes,
@@ -255,8 +254,8 @@ def _collective_cost(inst: Instruction, cost: HloCost) -> None:
 
 def _computation_cost(
     comp: Computation,
-    comps: Dict[str, Computation],
-    memo: Dict,
+    comps: dict[str, Computation],
+    memo: dict,
     top_level: bool,
     trips_hint: int = 1,
 ) -> HloCost:
@@ -339,7 +338,7 @@ def analyze_hlo(text: str) -> HloCost:
         entry = max(comps, key=lambda k: len(comps[k].instructions)) if comps else None
         if entry is None:
             return HloCost()
-    memo: Dict[str, HloCost] = {}
+    memo: dict[str, HloCost] = {}
     return _computation_cost(comps[entry], comps, memo, True)
 
 
@@ -348,14 +347,23 @@ def collective_stats(text: str) -> HloCost:
     return analyze_hlo(text)
 
 
-def top_costs(text: str, k: int = 15):
-    """Top-k instructions by trip-count-weighted bytes and collective wire
-    bytes — the evidence base for the §Perf hillclimb."""
-    comps, entry = parse_computations(text)
-    if entry is None:
-        return {"bytes": [], "collectives": []}
-    # compute loop multiplicity per computation (from ENTRY)
-    mult: Dict[str, float] = defaultdict(float)
+def loop_multiplicities(
+    comps: dict[str, Computation],
+    entry: str,
+    *,
+    follow_calls: bool = True,
+) -> dict[str, float]:
+    """Trip-count multiplicity of every computation reachable from ``entry``.
+
+    A computation inside a ``while`` body counts once per resolved trip
+    (nested loops compose multiplicatively); ``follow_calls`` additionally
+    descends into ``fusion``/``call``/``conditional`` bodies at 1x.  A
+    computation reachable along several paths accumulates the sum of the
+    path multiplicities.  This is the loop-awareness primitive shared by
+    :func:`top_costs`, :func:`sxs_buffer_bytes`, and the tracelint HLO
+    rules (``repro.analysis.lint``).
+    """
+    mult: dict[str, float] = defaultdict(float)
 
     def walk(name: str, m: float):
         comp = comps.get(name)
@@ -369,12 +377,22 @@ def top_costs(text: str, k: int = 15):
                 trips = _trip_count(comps[c.group(1)]) if c and c.group(1) in comps else 1
                 if b and b.group(1) in comps:
                     walk(b.group(1), m * trips)
-            elif inst.op in ("fusion", "call", "conditional"):
+            elif follow_calls and inst.op in ("fusion", "call", "conditional"):
                 mm = _CALL_TARGET_RE.search(inst.line)
                 if mm and mm.group(1) in comps:
                     walk(mm.group(1), m)
 
     walk(entry, 1.0)
+    return dict(mult)
+
+
+def top_costs(text: str, k: int = 15):
+    """Top-k instructions by trip-count-weighted bytes and collective wire
+    bytes — the evidence base for the §Perf hillclimb."""
+    comps, entry = parse_computations(text)
+    if entry is None:
+        return {"bytes": [], "collectives": []}
+    mult = loop_multiplicities(comps, entry)
     by_bytes = []
     by_wire = []
     for name, m in mult.items():
@@ -401,22 +419,7 @@ def sxs_buffer_bytes(text: str, min_dim: int = 1024) -> float:
     comps, entry = parse_computations(text)
     if entry is None:
         return 0.0
-    mult: Dict[str, float] = defaultdict(float)
-
-    def walk(name: str, m: float):
-        comp = comps.get(name)
-        if comp is None:
-            return
-        mult[name] += m
-        for inst in comp.instructions:
-            if inst.op == "while":
-                b = _CALL_TARGET_RE.search(inst.line)
-                c = _COND_RE.search(inst.line)
-                trips = _trip_count(comps[c.group(1)]) if c and c.group(1) in comps else 1
-                if b and b.group(1) in comps:
-                    walk(b.group(1), m * trips)
-
-    walk(entry, 1.0)
+    mult = loop_multiplicities(comps, entry, follow_calls=False)
     total = 0.0
     for name, m in mult.items():
         for inst in comps[name].instructions:

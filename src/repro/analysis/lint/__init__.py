@@ -1,0 +1,53 @@
+"""tracelint — static analysis of the engines' traced computations.
+
+The repo's cross-engine bit-exactness and scan-performance guarantees
+rest on idioms that are invisible to ordinary tests until they regress:
+the §3 FMA-contraction seam, the write-only §5 value-table discipline,
+width-bucket mask operands, strong dtypes in scan carries, and keeping
+``lax.cond`` out of the rank loops.  tracelint walks the jaxprs (and,
+where it strengthens a finding, the optimized HLO via
+:mod:`repro.analysis.hlo`) of registered entry points and reports
+violations with stable rule codes:
+
+=======  ==================  ==============================================
+code     name                invariant
+=======  ==================  ==============================================
+TL001    fma-seam            the §3 latency product reaches
+                             ``task_finish_time`` through a
+                             contraction-blocking seam (compiled output is
+                             bit-identical to op-by-op evaluation)
+TL002    carry-copy          scatter-updated loop-carried tables are
+                             write-only inside their loop (no stray reads
+                             defeating XLA's in-place carry aliasing)
+TL003    pad-variant-reduce  reductions over width-bucketed padded axes
+                             carry mask evidence (a ``<``/``<=`` style
+                             comparison upstream)
+TL004    dtype-leak          loop carries and entry outputs are strongly
+                             typed; kernel outputs match the declared
+                             ``value_dtype``
+TL005    cond-capture        no ``lax.cond`` inside the rank loops closes
+                             over large non-carry buffers
+=======  ==================  ==============================================
+
+Run ``python -m repro.analysis.lint --entry all`` from the repo root;
+legitimate findings are suppressed via ``tracelint.toml``.  See
+``docs/ARCHITECTURE.md`` ("Checked invariants") for each rule's
+motivating incident and the suppression workflow.
+"""
+
+from repro.analysis.lint.baseline import Suppression, load_baseline
+from repro.analysis.lint.entries import ENTRIES, EntryProbe, build_entries
+from repro.analysis.lint.findings import RULES, Finding
+from repro.analysis.lint.runner import LintReport, run_lint
+
+__all__ = [
+    "ENTRIES",
+    "RULES",
+    "EntryProbe",
+    "Finding",
+    "LintReport",
+    "Suppression",
+    "build_entries",
+    "load_baseline",
+    "run_lint",
+]

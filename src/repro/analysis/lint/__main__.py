@@ -1,0 +1,56 @@
+"""CLI: ``python -m repro.analysis.lint --entry all --format text|json``.
+
+Exits 1 on any non-baselined finding (the CI ``tracelint`` gate).  The
+baseline defaults to ``tracelint.toml`` in the current directory (the
+repo root in CI); ``--no-baseline`` audits everything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.lint.entries import ENTRIES
+from repro.analysis.lint.runner import run_lint
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="tracelint: static analysis of the engines' traced "
+        "computations (rules TL001-TL005)",
+    )
+    parser.add_argument(
+        "--entry",
+        action="append",
+        default=None,
+        help=f"entry to lint (repeatable; 'all' = every one of "
+        f"{sorted(ENTRIES)})",
+    )
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text", dest="fmt"
+    )
+    parser.add_argument(
+        "--baseline",
+        default="tracelint.toml",
+        help="suppression file (default: ./tracelint.toml)",
+    )
+    parser.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline and report every finding",
+    )
+    args = parser.parse_args(argv)
+    entries = args.entry or ["all"]
+    if "all" in entries:
+        entries = "all"
+    baseline = None if args.no_baseline else Path(args.baseline)
+    report = run_lint(entries=entries, baseline_path=baseline)
+    out = report.render_json() if args.fmt == "json" else report.render_text()
+    print(out)
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

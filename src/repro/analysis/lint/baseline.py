@@ -1,0 +1,117 @@
+"""tracelint baseline: per-rule suppressions from ``tracelint.toml``.
+
+Format (a small TOML subset — parsed with :mod:`tomllib` on 3.11+, with
+a built-in fallback parser on the 3.10 container):
+
+.. code-block:: toml
+
+    [tracelint]
+    version = 1
+
+    [[suppress]]
+    code = "TL002"
+    entry = "fused_logreg_grid"
+    contains = "values"          # optional: substring of symbol/message
+    reason = "why this finding is accepted"
+
+A suppression must carry a non-empty ``reason`` — the baseline is
+documentation of accepted debt, not a mute button.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+try:  # python >= 3.11
+    import tomllib as _toml
+except ImportError:  # 3.10 container: minimal subset parser below
+    _toml = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    code: str
+    entry: str = "*"  # "*" matches every entry
+    contains: str = ""  # substring of the finding's symbol or message
+    reason: str = ""
+
+    def matches(self, finding) -> bool:
+        if self.code != finding.code:
+            return False
+        if self.entry not in ("*", finding.entry):
+            return False
+        if self.contains and (
+            self.contains not in finding.symbol
+            and self.contains not in finding.message
+        ):
+            return False
+        return True
+
+
+def _parse_scalar(tok: str):
+    tok = tok.strip()
+    if tok.startswith('"') and tok.endswith('"'):
+        return tok[1:-1]
+    if tok in ("true", "false"):
+        return tok == "true"
+    try:
+        return int(tok)
+    except ValueError:
+        return tok
+
+
+def _mini_toml(text: str) -> dict:
+    """The subset of TOML the baseline format uses.
+
+    Sections (``[name]``), arrays of tables (``[[name]]``), and scalar
+    ``key = value`` lines (strings, ints, booleans).  Enough for
+    ``tracelint.toml``; anything richer should move to ``tomllib``.
+    """
+    root: dict = {}
+    cur: dict = root
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].strip() if not raw.strip().startswith('"') else raw.strip()
+        if not line:
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            name = line[2:-2].strip()
+            cur = {}
+            root.setdefault(name, []).append(cur)
+        elif line.startswith("[") and line.endswith("]"):
+            name = line[1:-1].strip()
+            cur = root.setdefault(name, {})
+        elif "=" in line:
+            key, _, val = line.partition("=")
+            cur[key.strip()] = _parse_scalar(val)
+    return root
+
+
+def parse_baseline(text: str) -> list:
+    data = _toml.loads(text) if _toml is not None else _mini_toml(text)
+    supps = []
+    for i, raw in enumerate(data.get("suppress", [])):
+        if not raw.get("code"):
+            raise ValueError(f"suppress[{i}]: missing 'code'")
+        if not raw.get("reason"):
+            raise ValueError(
+                f"suppress[{i}] ({raw.get('code')}): a suppression must "
+                f"carry a non-empty 'reason'"
+            )
+        supps.append(
+            Suppression(
+                code=str(raw["code"]),
+                entry=str(raw.get("entry", "*")),
+                contains=str(raw.get("contains", "")),
+                reason=str(raw["reason"]),
+            )
+        )
+    return supps
+
+
+def load_baseline(path) -> list:
+    """Suppressions from a ``tracelint.toml`` (empty list if absent)."""
+    p = Path(path)
+    if not p.exists():
+        return []
+    return parse_baseline(p.read_text())

@@ -1,0 +1,67 @@
+"""Finding record + the rule catalogue (stable codes)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+#: rule code -> (short name, one-line invariant).  Codes are stable API:
+#: baselines, CI artifacts, and the regression tests key on them.
+RULES = {
+    "TL001": (
+        "fma-seam",
+        "the §3 latency product must reach task_finish_time through a "
+        "contraction-blocking seam (compiled == op-by-op, bit-exact)",
+    ),
+    "TL002": (
+        "carry-copy",
+        "scatter-updated loop-carried tables must be write-only inside "
+        "their loop (stray reads defeat in-place carry aliasing)",
+    ),
+    "TL003": (
+        "pad-variant-reduce",
+        "reductions over width-bucketed padded axes must carry mask "
+        "evidence (XLA reductions are not pad-length invariant)",
+    ),
+    "TL004": (
+        "dtype-leak",
+        "loop carries and entry outputs must be strongly typed and kernel "
+        "outputs must match the declared value_dtype",
+    ),
+    "TL005": (
+        "cond-capture",
+        "lax.cond inside a rank loop must not close over large non-carry "
+        "buffers (each branch copies its captures every trip)",
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one location of one entry's trace.
+
+    ``symbol`` is a stable within-entry locator (a loop path, carry aval,
+    or output index) — ``tracelint.toml`` suppressions can narrow on it
+    via substring match, and it keeps JSON artifacts diffable across PRs
+    even when messages are reworded.
+    """
+
+    code: str
+    entry: str
+    symbol: str
+    message: str
+
+    @property
+    def rule_name(self) -> str:
+        return RULES[self.code][0]
+
+    def as_dict(self) -> dict:
+        return {
+            "code": self.code,
+            "rule": self.rule_name,
+            "entry": self.entry,
+            "symbol": self.symbol,
+            "message": self.message,
+        }
+
+    def render(self) -> str:
+        return f"{self.code} [{self.rule_name}] {self.entry} :: {self.symbol}\n    {self.message}"

@@ -1,0 +1,238 @@
+"""Jaxpr-walking primitives shared by the tracelint rules.
+
+Everything here operates on ``jax.core`` jaxprs obtained from
+``jax.make_jaxpr`` — no compilation, no device execution.  The helpers
+encode the two pieces of structural knowledge the rules need:
+
+* where nested jaxprs hide (``scan``/``while``/``cond``/``pjit``/custom
+  calls keep them in ``eqn.params``), and
+* how a loop body's invars line up with its carried outputs (``scan``
+  splits ``[consts | carries | xs]``, ``while`` splits
+  ``[cond_consts? | body_consts | carries]``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Iterator
+from typing import Any
+
+#: primitives that perform an in-place-style indexed write; a chain of
+#: these from a loop invar to the loop's carried output is the shape XLA
+#: aliases in place (tracelint TL002)
+SCATTER_PRIMS = frozenset(
+    {
+        "scatter",
+        "scatter-add",
+        "scatter_add",
+        "scatter-mul",
+        "scatter_mul",
+        "scatter-min",
+        "scatter_min",
+        "scatter-max",
+        "scatter_max",
+        "dynamic_update_slice",
+    }
+)
+
+#: loop-introducing primitives (their bodies run once per trip)
+LOOP_PRIMS = frozenset({"while", "scan"})
+
+
+def subjaxprs(eqn) -> list:
+    """Every nested jaxpr of one equation, as ``(param_name, jaxpr)``.
+
+    Covers ``scan`` (``jaxpr``), ``while`` (``cond_jaxpr``/``body_jaxpr``),
+    ``cond`` (``branches``), ``pjit``/``closed_call`` (``jaxpr``), and any
+    custom primitive that stashes (lists of) ClosedJaxprs in its params.
+    """
+    out = []
+    for name, p in eqn.params.items():
+        vals = p if isinstance(p, (list, tuple)) else [p]
+        for v in vals:
+            if hasattr(v, "jaxpr"):  # ClosedJaxpr
+                out.append((name, v.jaxpr))
+            elif hasattr(v, "eqns"):  # raw Jaxpr
+                out.append((name, v))
+    return out
+
+
+def aval_bytes(aval) -> int:
+    """Byte size of a shaped aval (0 for abstract tokens etc.)."""
+    size = getattr(aval, "size", None)
+    dtype = getattr(aval, "dtype", None)
+    if size is None or dtype is None:
+        return 0
+    return int(size) * int(dtype.itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopInfo:
+    """One ``while``/``scan`` equation plus its resolved carry structure."""
+
+    eqn: Any
+    path: str  # e.g. "top/scan/while" — stable finding locator
+    depth: int  # number of enclosing loops, this one excluded
+    body: Any  # the body jaxpr
+    carries: tuple  # ((body_invar, body_outvar), ...) aligned pairs
+
+
+def _loop_info(eqn, path: str, depth: int) -> LoopInfo | None:
+    name = eqn.primitive.name
+    if name == "scan":
+        body = eqn.params["jaxpr"].jaxpr
+        nc = eqn.params["num_consts"]
+        ncar = eqn.params["num_carry"]
+        pairs = tuple(zip(body.invars[nc : nc + ncar], body.outvars[:ncar]))
+        return LoopInfo(eqn, path, depth, body, pairs)
+    if name == "while":
+        body = eqn.params["body_jaxpr"].jaxpr
+        nconsts = eqn.params["body_nconsts"]
+        pairs = tuple(zip(body.invars[nconsts:], body.outvars))
+        return LoopInfo(eqn, path, depth, body, pairs)
+    return None
+
+
+def iter_loops(jaxpr, path: str = "top", depth: int = 0) -> Iterator[LoopInfo]:
+    """All loops (any nesting level) in trace order, with carry pairs."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        child_path = f"{path}/{name}"
+        info = _loop_info(eqn, child_path, depth)
+        if info is not None:
+            yield info
+        child_depth = depth + (1 if name in LOOP_PRIMS else 0)
+        for _, sub in subjaxprs(eqn):
+            yield from iter_loops(sub, child_path, child_depth)
+
+
+def iter_eqns(jaxpr, path: str = "top", depth: int = 0) -> Iterator[tuple]:
+    """All equations (any nesting level) as ``(eqn, path, loop_depth)``."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        child_path = f"{path}/{name}"
+        yield eqn, path, depth
+        child_depth = depth + (1 if name in LOOP_PRIMS else 0)
+        for _, sub in subjaxprs(eqn):
+            yield from iter_eqns(sub, child_path, child_depth)
+
+
+def iter_eqns_scoped(jaxpr, path: str = "top") -> Iterator[tuple]:
+    """Like :func:`iter_eqns` but yields ``(eqn, scope_jaxpr, path)``.
+
+    ``scope_jaxpr`` is the jaxpr the equation lives in — the right frame
+    for backward dataflow walks like :func:`reaches_comparison`.
+    """
+    for eqn in jaxpr.eqns:
+        child_path = f"{path}/{eqn.primitive.name}"
+        yield eqn, jaxpr, path
+        for _, sub in subjaxprs(eqn):
+            yield from iter_eqns_scoped(sub, child_path)
+
+
+def _var_maps(body):
+    """Producer (var -> eqn) and consumer (var -> [(eqn, arg_idx)]) maps."""
+    producer = {}
+    consumers: dict = {}
+    for eqn in body.eqns:
+        for v in eqn.outvars:
+            producer[id(v)] = eqn
+        for i, v in enumerate(eqn.invars):
+            if hasattr(v, "aval"):  # skip Literals
+                consumers.setdefault(id(v), []).append((eqn, i))
+    return producer, consumers
+
+
+def scatter_chain(body, invar, outvar):
+    """The scatter write-chain from a carried invar to its outvar.
+
+    Returns the list of chain equations (outermost write last) when the
+    carried output is produced *exclusively* by scatter-family updates of
+    the carried input — the in-place-aliasable shape — or ``None`` when
+    the carry is not scatter-disciplined (produced by arithmetic, a
+    nested loop, ...), in which case TL002 does not apply to it.
+    """
+    producer, _ = _var_maps(body)
+    chain = []
+    cur = outvar
+    seen = set()
+    while True:
+        if cur is invar:
+            return list(reversed(chain))
+        if id(cur) in seen:
+            return None
+        seen.add(id(cur))
+        prod = producer.get(id(cur))
+        if prod is None or prod.primitive.name not in SCATTER_PRIMS:
+            return None
+        chain.append(prod)
+        cur = prod.invars[0]
+
+
+def stray_chain_reads(body, invar, outvar):
+    """Consumers that read a scatter-chain member (TL002 violations).
+
+    Every variable along the write chain (the carried invar plus each
+    intermediate scatter result, the final outvar excluded) may only be
+    consumed as operand 0 of the next chain scatter.  Any other consumer
+    — a gather, a slice, arithmetic — forces XLA to keep the pre-write
+    buffer alive and copies the whole table once per loop trip.
+
+    Returns ``[(primitive_name, aval_str), ...]`` for each stray read;
+    empty when the carry is write-only or not scatter-disciplined.
+    """
+    chain = scatter_chain(body, invar, outvar)
+    if not chain:
+        return []
+    _, consumers = _var_maps(body)
+    chain_ids = {id(e): e for e in chain}
+    members = [invar] + [e.outvars[0] for e in chain[:-1]]
+    strays = []
+    for var in members:
+        for eqn, arg_idx in consumers.get(id(var), []):
+            if id(eqn) in chain_ids and arg_idx == 0:
+                continue  # the sanctioned next write
+            strays.append((eqn.primitive.name, str(var.aval)))
+    return strays
+
+
+def reaches_comparison(body, var, comparison_prims=("lt", "le", "gt", "ge")) -> bool:
+    """Whether ``var``'s backward *value* dataflow contains a comparison.
+
+    Used as mask evidence by TL003: a width-masked reduction's operand is
+    (transitively) a product with an ``iota < widths``-style predicate.
+    Two pollution sources are excluded so the evidence is not vacuous:
+
+    * the walk follows only operand 0 of ``gather``/``dynamic_slice`` —
+      index operands carry jnp's own clamp/wrap comparisons
+      (``select_n(lt(idx, 0), idx + n, idx)``) that say nothing about the
+      reduced *values*;
+    * ``custom_jvp``/``custom_vjp`` call internals are not searched
+      (``sigmoid``'s stable-branch comparisons would otherwise count).
+
+    The evidence set is exact comparisons only — ``ne``/``eq`` appear in
+    unrelated places and ``clip`` lowers to ``min``/``max``, so neither
+    counts.
+    """
+    producer, _ = _var_maps(body)
+    stack = [var]
+    seen = set()
+    while stack:
+        v = stack.pop()
+        if id(v) in seen:
+            continue
+        seen.add(id(v))
+        prod = producer.get(id(v))
+        if prod is None:
+            continue
+        name = prod.primitive.name
+        if name in comparison_prims:
+            return True
+        if not name.startswith("custom_"):
+            for _, sub in subjaxprs(prod):
+                for eqn, _, _ in iter_eqns(sub):
+                    if eqn.primitive.name in comparison_prims:
+                        return True
+        ins = prod.invars[:1] if name in ("gather", "dynamic_slice") else prod.invars
+        stack.extend(u for u in ins if hasattr(u, "aval"))
+    return False

@@ -1,0 +1,76 @@
+"""Run the rules over the registered entries and render findings."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.analysis.lint.baseline import load_baseline
+from repro.analysis.lint.entries import build_entries
+from repro.analysis.lint.rules import ALL_RULES
+
+
+@dataclasses.dataclass
+class LintReport:
+    """Partitioned outcome of one lint run.
+
+    ``findings`` are active (build-failing); ``suppressed`` pairs each
+    baselined finding with the suppression that matched it.
+    """
+
+    entries_run: list
+    findings: list
+    suppressed: list  # (Finding, Suppression)
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+    def render_text(self) -> str:
+        lines = []
+        for f in self.findings:
+            lines.append(f.render())
+        for f, supp in self.suppressed:
+            lines.append(f"suppressed {f.code} {f.entry} :: {f.symbol} ({supp.reason})")
+        lines.append(
+            f"tracelint: {len(self.entries_run)} entries, "
+            f"{len(self.findings)} finding(s), "
+            f"{len(self.suppressed)} suppressed"
+        )
+        return "\n".join(lines)
+
+    def render_json(self) -> str:
+        return json.dumps(
+            {
+                "entries": self.entries_run,
+                "findings": [f.as_dict() for f in self.findings],
+                "suppressed": [
+                    {**f.as_dict(), "reason": supp.reason}
+                    for f, supp in self.suppressed
+                ],
+            },
+            indent=2,
+            sort_keys=True,
+        )
+
+
+def run_lint(entries="all", baseline_path=None, rules=ALL_RULES) -> LintReport:
+    """Build the probes, apply every rule, partition by the baseline."""
+    suppressions = load_baseline(baseline_path) if baseline_path else []
+    probes = build_entries(entries)
+    active, suppressed = [], []
+    for probe in probes:
+        for _, rule in rules:
+            for finding in rule(probe):
+                match = next(
+                    (s for s in suppressions if s.matches(finding)), None
+                )
+                if match is None:
+                    active.append(finding)
+                else:
+                    suppressed.append((finding, match))
+    return LintReport(
+        entries_run=[p.name for p in probes],
+        findings=active,
+        suppressed=suppressed,
+    )

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional
 
 from repro.analysis.hlo import HloCost, analyze_hlo, sxs_buffer_bytes
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -31,7 +30,7 @@ LINK_BW = 50e9  # bytes/s per ICI link (conservative single-link)
 class Roofline:
     flops_per_device: float
     bytes_per_device: float
-    collectives: Dict
+    collectives: dict
     compute_s: float
     memory_s: float
     collective_s: float
@@ -43,12 +42,12 @@ class Roofline:
     attn_score_bytes: float = 0.0
     memory_s_flash: float = 0.0  # memory term with score traffic fused away
 
-    def as_dict(self) -> Dict:
+    def as_dict(self) -> dict:
         return dataclasses.asdict(self)
 
 
 def model_flops(
-    cfg: ModelConfig, shape: ShapeConfig, num_params: int, active_params: Optional[int]
+    cfg: ModelConfig, shape: ShapeConfig, num_params: int, active_params: int | None
 ) -> float:
     """MODEL_FLOPS = 6·N·D for training (N = active params for MoE),
     2·N·D for inference forward passes (D = processed tokens)."""
@@ -63,7 +62,7 @@ def model_flops(
     return 2.0 * n * shape.global_batch
 
 
-def active_params(cfg: ModelConfig, num_params: int) -> Optional[int]:
+def active_params(cfg: ModelConfig, num_params: int) -> int | None:
     """Active parameters per token for MoE models (shared + top-k routed)."""
     if not cfg.num_experts:
         return None
@@ -77,7 +76,7 @@ def derive(
     cfg: ModelConfig,
     shape: ShapeConfig,
     num_params: int,
-    cost: Dict[str, float],
+    cost: dict[str, float],
     hlo_text: str,
     num_devices: int,
 ) -> Roofline:

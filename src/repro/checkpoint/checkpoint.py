@@ -17,7 +17,7 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Callable, List, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -72,7 +72,7 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     return final
 
 
-def latest_checkpoint(directory: str) -> Optional[str]:
+def latest_checkpoint(directory: str) -> str | None:
     if not os.path.isdir(directory):
         return None
     steps = sorted(
@@ -85,7 +85,7 @@ def latest_checkpoint(directory: str) -> Optional[str]:
 def restore_checkpoint(
     path: str,
     like: Any,
-    shardings: Optional[Any] = None,
+    shardings: Any | None = None,
 ) -> Any:
     """Restore into the structure of ``like``; optionally reshard onto
     ``shardings`` (a matching tree of NamedSharding) — the elastic path."""
@@ -119,8 +119,8 @@ class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
-        self._thread: Optional[threading.Thread] = None
-        self.saved_steps: List[int] = []
+        self._thread: threading.Thread | None = None
+        self.saved_steps: list[int] = []
 
     def _gc(self) -> None:
         if not os.path.isdir(self.directory):
@@ -153,7 +153,7 @@ class CheckpointManager:
             self._thread.start()
         self.saved_steps.append(step)
 
-    def restore_latest(self, like: Any, shardings: Optional[Any] = None):
+    def restore_latest(self, like: Any, shardings: Any | None = None):
         self.wait()
         path = latest_checkpoint(self.directory)
         if path is None:

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Callable, Dict, List, Optional, Tuple
+from collections.abc import Callable
 
 import numpy as np
 
@@ -106,7 +106,7 @@ class LatencySource:
     implement ``task_latency``.
     """
 
-    def task_latency(self, worker: int, cost: float, now: float) -> Tuple[float, float]:
+    def task_latency(self, worker: int, cost: float, now: float) -> tuple[float, float]:
         """Return ``(comp_latency, comm_latency)`` of one task."""
         raise NotImplementedError
 
@@ -121,7 +121,7 @@ class ModelLatencySource(LatencySource):
     def __init__(self, cluster: ClusterLatencyModel):
         self.cluster = cluster
 
-    def task_latency(self, worker: int, cost: float, now: float) -> Tuple[float, float]:
+    def task_latency(self, worker: int, cost: float, now: float) -> tuple[float, float]:
         wk = self.cluster.workers[worker]
         comp = wk.sample_comp(cost, self.cluster.rng, now=now)
         comm = wk.sample_comm(self.cluster.rng)
@@ -144,7 +144,7 @@ class TraceLatencySource(LatencySource):
         self.scenario = scenario
         self._k = np.zeros(traces.num_workers, dtype=np.int64)
 
-    def task_latency(self, worker: int, cost: float, now: float) -> Tuple[float, float]:
+    def task_latency(self, worker: int, cost: float, now: float) -> tuple[float, float]:
         k = int(self._k[worker])
         self._k[worker] += 1
         comm, comp = self.traces.scalar_task_latency(
@@ -204,7 +204,7 @@ class RunHistory:
     suboptimality: np.ndarray  # [T] gap after each iteration (subsampled = nan)
     fresh_counts: np.ndarray  # [T]
     per_worker_latency: np.ndarray  # [T, N] latency of the task started at t
-    repartition_events: List[float]  # sim times at which a new p was published
+    repartition_events: list[float]  # sim times at which a new p was published
     evictions: int = 0
     rejected_stale: int = 0
 
@@ -228,8 +228,8 @@ class _SimWorker:
         self.idx = idx
         self.sub = sub
         self.busy_until = 0.0
-        self.queued: Optional[_Task] = None
-        self.pending_p: Optional[int] = None  # LB update applied at next task
+        self.queued: _Task | None = None
+        self.pending_p: int | None = None  # LB update applied at next task
 
     def start_task(
         self,
@@ -239,7 +239,7 @@ class _SimWorker:
         latency_source: LatencySource,
         process_full_block: bool,
         comp_scale: float,
-    ) -> Tuple[float, Tuple]:
+    ) -> tuple[float, tuple]:
         """Begin processing; returns (finish_time, result tuple)."""
         if self.pending_p is not None:
             self.sub.repartition(self.pending_p)  # Algorithm-2 alignment
@@ -269,9 +269,9 @@ class TrainingSimulator:
         *,
         cost_scale: float = 1.0,
         eval_every: int = 1,
-        timed_events: Optional[List[Tuple[float, Callable]]] = None,
+        timed_events: list[tuple[float, Callable]] | None = None,
         seed: int = 0,
-        latency_source: Optional[LatencySource] = None,
+        latency_source: LatencySource | None = None,
     ):
         self.problem = problem
         self.cluster = cluster
@@ -323,7 +323,7 @@ class TrainingSimulator:
         else:
             self.lb_optimizer = None
         self._next_lb_time = config.lb_startup_delay if config.load_balance else math.inf
-        self._lb_buffer: Optional[MomentBuffer] = None  # allocated per run()
+        self._lb_buffer: MomentBuffer | None = None  # allocated per run()
 
     # -- per-method gradient-estimate assembly -----------------------------
     def _effective_w(self) -> int:
@@ -351,13 +351,13 @@ class TrainingSimulator:
             MomentBuffer(1, N, num_iterations) if cfg.load_balance else None
         )
         now = 0.0
-        heap: List[Tuple[float, int, Tuple]] = []  # (finish, seq, result)
+        heap: list[tuple[float, int, tuple]] = []  # (finish, seq, result)
         seq = 0
         times = np.zeros(num_iterations)
         subopt = np.full(num_iterations, np.nan)
         fresh_counts = np.zeros(num_iterations, dtype=np.int64)
         lat_matrix = np.full((num_iterations, N), np.nan)
-        repartition_events: List[float] = []
+        repartition_events: list[float] = []
         event_ptr = 0
         current_p = np.full(N, cfg.subpartitions, dtype=np.int64)
 
@@ -379,7 +379,7 @@ class TrainingSimulator:
                     wk.queued = task
 
             fresh = 0
-            fresh_values: List[Tuple[Tuple[int, int], np.ndarray]] = []  # sgd
+            fresh_values: list[tuple[tuple[int, int], np.ndarray]] = []  # sgd
             deadline = math.inf
             iter_start = now
             while heap and (fresh < w_wait or heap[0][0] <= deadline):
@@ -489,7 +489,7 @@ class TrainingSimulator:
 
     def _run_load_balancer(
         self, now: float, current_p: np.ndarray, w_wait: int
-    ) -> Optional[np.ndarray]:
+    ) -> np.ndarray | None:
         e_comm, v_comm, e_comp, v_comp, cnt = self._lb_buffer.moments(
             np.array([now])
         )

@@ -6,7 +6,6 @@ an (arch x shape) cell — weak-type-correct, shardable, no device allocation.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, MeshConfig, ModelConfig, ShapeConfig, TrainConfig
 
-_MODULES: Dict[str, str] = {
+_MODULES: dict[str, str] = {
     "whisper-base": "repro.configs.whisper_base",
     "starcoder2-15b": "repro.configs.starcoder2_15b",
     "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
@@ -52,8 +51,8 @@ def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
 def input_specs(
     cfg: ModelConfig,
     shape: ShapeConfig,
-    mesh: Optional[Mesh] = None,
-) -> Dict[str, jax.ShapeDtypeStruct]:
+    mesh: Mesh | None = None,
+) -> dict[str, jax.ShapeDtypeStruct]:
     """Abstract model inputs for one cell (training batch or prefill batch).
 
     Decode-cell *cache* stand-ins come from ``Model.cache_abstract``."""

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,8 +139,8 @@ class TrainConfig:
 
 @dataclasses.dataclass(frozen=True)
 class MeshConfig:
-    shape: Tuple[int, ...] = (16, 16)
-    axes: Tuple[str, ...] = ("data", "model")
+    shape: tuple[int, ...] = (16, 16)
+    axes: tuple[str, ...] = ("data", "model")
 
     @property
     def multi_pod(self) -> bool:
@@ -155,5 +154,5 @@ class MeshConfig:
         return n
 
     @property
-    def dp_axes(self) -> Tuple[str, ...]:
+    def dp_axes(self) -> tuple[str, ...]:
         return tuple(a for a in self.axes if a in ("pod", "data"))

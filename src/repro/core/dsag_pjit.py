@@ -26,7 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +51,7 @@ from repro.optim.optimizers import (
 @dataclasses.dataclass(frozen=True)
 class GroupSpec:
     num_groups: int
-    axes: Tuple[str, ...]  # mesh axes the group dim is sharded over ((),) = repl.
+    axes: tuple[str, ...]  # mesh axes the group dim is sharded over ((),) = repl.
 
     @property
     def group_partition(self):
@@ -59,7 +60,7 @@ class GroupSpec:
         return self.axes if len(self.axes) > 1 else self.axes[0]
 
 
-def make_group_spec(tc: TrainConfig, mesh: Optional[Mesh]) -> GroupSpec:
+def make_group_spec(tc: TrainConfig, mesh: Mesh | None) -> GroupSpec:
     if mesh is None:  # single-device tests: any P, replicated
         return GroupSpec(num_groups=1 if not tc.dsag else 4, axes=())
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -219,8 +220,8 @@ def make_train_step(
     loss_fn: Callable[[Any, Any], jnp.ndarray],
     tc: TrainConfig,
     gs: GroupSpec,
-    mesh: Optional[Mesh] = None,
-    param_specs: Optional[Any] = None,
+    mesh: Mesh | None = None,
+    param_specs: Any | None = None,
 ):
     """Build ``step(state, batch, mask, flush) -> (state, metrics)``.
 

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import Any
 
 import numpy as np
 
@@ -80,6 +80,13 @@ class SlotUniverse:
     slot table mid-scan — the memory trade-off is ``E ≈ N * sum(ladder)``
     value buffers up front (documented in docs/ARCHITECTURE.md).
 
+    The scan-side consumer of this universe must keep its ``[S, E, ...]``
+    value table *write-only* inside the per-event rank loop — a single
+    stray read forces XLA to copy the whole table per trip.  That
+    discipline is machine-checked by tracelint rule TL002
+    (``repro.analysis.lint``; see "Checked invariants" in
+    docs/ARCHITECTURE.md).
+
     ``slot_table[i, l, k-1]`` maps worker ``i``'s k-th subpartition at
     ladder entry ``l`` to its slot; ``overlap_idx[e]`` lists the other
     slots of the same worker whose intervals intersect slot ``e``'s,
@@ -99,7 +106,7 @@ class SlotUniverse:
 
 
 def build_slot_universe(
-    base_start, base_stop, ladder: Tuple[int, ...], *, with_overlaps: bool = True
+    base_start, base_stop, ladder: tuple[int, ...], *, with_overlaps: bool = True
 ) -> SlotUniverse:
     """Enumerate the p-ladder's reachable intervals (see :class:`SlotUniverse`).
 
@@ -118,9 +125,9 @@ def build_slot_universe(
     n_local = base_stop - base_start + 1
     pmax = int(min(max(ladder), int(n_local.max())))
     slot_of: dict = {}
-    starts: List[int] = []
-    stops: List[int] = []
-    owner: List[int] = []
+    starts: list[int] = []
+    stops: list[int] = []
+    owner: list[int] = []
     slot_table = np.full((N, L, pmax), -1, dtype=np.int64)
     for i in range(N):
         nl = int(n_local[i])
@@ -142,7 +149,7 @@ def build_slot_universe(
     owner_a = np.asarray(owner, dtype=np.int64)
     E = starts_a.size
     if with_overlaps:
-        per_slot: List[np.ndarray] = [np.empty(0, np.int64)] * E
+        per_slot: list[np.ndarray] = [np.empty(0, np.int64)] * E
         omax = 1
         for i in range(N):
             sl = np.flatnonzero(owner_a == i)
@@ -221,8 +228,8 @@ class GradientCache:
         if num_samples <= 0:
             raise ValueError("num_samples must be positive")
         self.num_samples = num_samples
-        self._starts: List[int] = []  # sorted entry starts
-        self._entries: List[CacheEntry] = []  # parallel to _starts
+        self._starts: list[int] = []  # sorted entry starts
+        self._entries: list[CacheEntry] = []  # parallel to _starts
         self._covered: int = 0
         self._sum = np.array(zero_like, dtype=np.float64, copy=True)
         self.evictions: int = 0  # total entries evicted by overlap (telemetry)
@@ -243,10 +250,10 @@ class GradientCache:
     def num_entries(self) -> int:
         return len(self._entries)
 
-    def entries(self) -> List[CacheEntry]:
+    def entries(self) -> list[CacheEntry]:
         return list(self._entries)
 
-    def _overlapping(self, start: int, stop: int) -> Tuple[int, int]:
+    def _overlapping(self, start: int, stop: int) -> tuple[int, int]:
         """Return [lo, hi) slice of entries overlapping [start, stop].
 
         Entries are disjoint and sorted by start, so the overlap range is
@@ -344,7 +351,7 @@ class BatchedGradientCache:
         self.evictions = np.zeros(num_scenarios, dtype=np.int64)
         self.rejected_stale = np.zeros(num_scenarios, dtype=np.int64)
         self._slot_of: dict = {}  # (start, stop) -> slot index
-        self._intervals: List[Tuple[int, int]] = []
+        self._intervals: list[tuple[int, int]] = []
         # parallel numpy views of the interval universe (vectorized overlap
         # tests in insert_events); rows past len(_intervals) are unused
         cap = 8

@@ -34,7 +34,7 @@ across different pad widths.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +115,7 @@ class FiniteSumProblem:
             k = self.fused_kernels()
             return np.zeros((0,) + k.value_shape, dtype=k.value_dtype)
         buckets = np.array([width_bucket(int(m), self.num_samples) for m in widths])
-        out: Optional[np.ndarray] = None
+        out: np.ndarray | None = None
         for b in np.unique(buckets):
             sel = buckets == b
             block = self._call_sub_kernel(
@@ -195,7 +195,7 @@ class FusedKernels:
     """
 
     num_samples: int
-    value_shape: Tuple[int, ...]
+    value_shape: tuple[int, ...]
     value_dtype: np.dtype
     cost_per_row: float
     sub_blocks: Callable  # (Vb, starts, widths, pad_width) -> [G, ...]
@@ -306,7 +306,7 @@ class PCAProblem(FiniteSumProblem):
         evals = np.linalg.eigvalsh(gram)
         self._opt_explained = float(np.sum(np.sort(evals)[::-1][: self.k]))
         self._total_var = float(np.trace(gram))
-        self._kernels: Optional[FusedKernels] = None
+        self._kernels: FusedKernels | None = None
 
     def init(self, seed: int = 0) -> np.ndarray:
         rng = np.random.default_rng(seed)
@@ -404,7 +404,7 @@ class PCAProblem(FiniteSumProblem):
 
 def make_higgs_like(
     n: int, d: int = 28, *, seed: int = 0
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray]:
     """Synthetic binary-classification data shaped like HIGGS (28 features,
     labels ±1), feature-normalized with an intercept appended (paper §7)."""
     rng = np.random.default_rng(seed)
@@ -424,7 +424,7 @@ def make_higgs_like(
 class LogisticRegressionProblem(FiniteSumProblem):
     X: np.ndarray  # [n, d] (already includes intercept column)
     y: np.ndarray  # [n] in {-1, +1}
-    lam: Optional[float] = None  # default 1/n, as in the paper
+    lam: float | None = None  # default 1/n, as in the paper
 
     def __post_init__(self):
         self.num_samples = int(self.X.shape[0])
@@ -438,7 +438,7 @@ class LogisticRegressionProblem(FiniteSumProblem):
             self._X64 = jnp.asarray(self.X, dtype=jnp.float64)
             self._y64 = jnp.asarray(self.y, dtype=jnp.float64)
         self._opt = None  # lazy: computed by Newton iterations on first use
-        self._kernels: Optional[FusedKernels] = None
+        self._kernels: FusedKernels | None = None
 
     def init(self, seed: int = 0) -> np.ndarray:
         return np.zeros((self.dim,), dtype=np.float32)

@@ -14,7 +14,7 @@ real corpus by replacing ``token_block``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -46,7 +46,7 @@ class GroupBatchIterator:
     #: fraction of the global batch assigned to each group (load balancing);
     #: defaults to uniform.  Kept normalized; group sizes are realized by
     #: masking within the fixed [P, B/P] layout (SPMD keeps shapes static).
-    group_weights: Optional[np.ndarray] = None
+    group_weights: np.ndarray | None = None
 
     def __post_init__(self):
         if self.global_batch % self.num_groups:
@@ -58,10 +58,10 @@ class GroupBatchIterator:
         w = np.asarray(w, dtype=np.float64)
         self.group_weights = w / w.sum()
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         return self
 
-    def __next__(self) -> Dict[str, np.ndarray]:
+    def __next__(self) -> dict[str, np.ndarray]:
         p, bg = self.num_groups, self.global_batch // self.num_groups
         cfg = self.cfg
         s = self.seq_len

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -73,7 +73,7 @@ class ConvergenceBatchResult:
     suboptimality: np.ndarray  # [S, T] (NaN where not evaluated)
     fresh_counts: np.ndarray  # [S, T]
     per_worker_latency: np.ndarray  # [S, T, N] (see RunHistory semantics)
-    repartition_events: List[List[float]]  # per scenario
+    repartition_events: list[list[float]]  # per scenario
     evictions: np.ndarray  # [S]
     rejected_stale: np.ndarray  # [S]
 
@@ -111,9 +111,9 @@ def run_convergence_batch(
     num_iterations: int,
     *,
     cost_scale: float = 1.0,
-    eval_every: Optional[int] = None,
+    eval_every: int | None = None,
     seed: int = 0,
-    engine: Optional[EngineConfig] = None,
+    engine: EngineConfig | None = None,
 ) -> ConvergenceBatchResult:
     """Train ``config`` on every scenario of ``traces`` simultaneously.
 
@@ -151,7 +151,7 @@ def run_convergence_batch(
     ``tests/test_fused.py`` / ``tests/test_lb_scan.py`` /
     ``tests/test_sharded.py``).
     """
-    eng = as_engine_config(engine)
+    eng = as_engine_config(engine, _stacklevel=3)
     if eval_every is None:
         eval_every = eng.eval_every
     kind = eng.kind
@@ -218,7 +218,7 @@ def run_convergence_batch(
     flight_lo = np.zeros((S, N), dtype=np.int64)
     flight_hi = np.zeros((S, N), dtype=np.int64)
     flight_titer = np.full((S, N), -1, dtype=np.int64)
-    flight_val: Optional[np.ndarray] = None  # allocated at first evaluation
+    flight_val: np.ndarray | None = None  # allocated at first evaluation
     flight_comp = np.zeros((S, N))
     flight_comm = np.zeros((S, N))
     flight_assigned = np.zeros((S, N))
@@ -227,7 +227,7 @@ def run_convergence_batch(
     subopt = np.full((S, T), np.nan)
     fresh_counts = np.zeros((S, T), dtype=np.int64)
     lat_matrix = np.full((S, T, N), np.nan)
-    repartition_events: List[List[float]] = [[] for _ in range(S)]
+    repartition_events: list[list[float]] = [[] for _ in range(S)]
 
     needs_values = cfg.name in ("gd", "sgd", "sag", "dsag")
     lbbuf = MomentBuffer(S, N, T) if cfg.load_balance else None
@@ -330,7 +330,7 @@ def run_convergence_batch(
         else:  # coded recomputes the exact gradient; task values are unused
             need = np.zeros_like(fresh)
         val_index = np.full((S, N), -1, dtype=np.int64)
-        vals: Optional[np.ndarray] = None
+        vals: np.ndarray | None = None
         if need.any():
             # one masked-width dispatch for the whole mixed-width task batch
             # (bit-identical to per-width bucketing — pinned by tests)
@@ -478,8 +478,8 @@ def run_convergence_batch(
 class ConvergenceSweepOutcome:
     """All methods' batched convergence runs on one shared trace draw."""
 
-    results: Dict[str, ConvergenceBatchResult]
-    methods: Dict[str, MethodConfig]
+    results: dict[str, ConvergenceBatchResult]
+    methods: dict[str, MethodConfig]
     traces: FleetTraces
     problem: FiniteSumProblem
     cluster: ClusterLatencyModel
@@ -500,7 +500,7 @@ def default_convergence_methods(
     eta: float = 0.25,
     subpartitions: int = 10,
     load_balance_dsag: bool = False,
-) -> Dict[str, MethodConfig]:
+) -> dict[str, MethodConfig]:
     """The paper's §7 time-to-gap columns: DSAG, SAG (w = N), SGD, coded."""
     methods = {
         "dsag": MethodConfig(
@@ -519,18 +519,18 @@ def default_convergence_methods(
 def run_convergence_sweep(
     problem: FiniteSumProblem,
     cluster: ClusterLatencyModel,
-    methods: Dict[str, MethodConfig],
+    methods: dict[str, MethodConfig],
     *,
     n_scenarios: int = 10,
     num_iterations: int = 100,
     cost_scale: float = 1.0,
     eval_every: int = 1,
     regime=None,
-    burst_rate: Optional[float] = None,
-    burst_factor_mean: Optional[float] = None,
-    burst_duration_mean: Optional[float] = None,
+    burst_rate: float | None = None,
+    burst_factor_mean: float | None = None,
+    burst_duration_mean: float | None = None,
     seed: int = 0,
-    engine: Optional[EngineConfig] = None,
+    engine: EngineConfig | None = None,
 ) -> ConvergenceSweepOutcome:
     """Run every method over one shared scenario batch (common random
     numbers: all methods see the same latency draws, like the paper's
@@ -559,8 +559,8 @@ def run_convergence_sweep(
         burst_duration_mean=burst_duration_mean,
         seed=seed + 1,
     )
-    eng = as_engine_config(engine)
-    results: Dict[str, ConvergenceBatchResult] = {}
+    eng = as_engine_config(engine, _stacklevel=3)
+    results: dict[str, ConvergenceBatchResult] = {}
     t0 = time.perf_counter()
     for name, cfg in methods.items():
         results[name] = run_convergence_batch(
@@ -626,9 +626,9 @@ def paper_scale_pca_sweep(
     scale: float = 1.0,
     seed: int = 0,
     regime=None,
-    engine: Optional[EngineConfig] = None,
-    n_scenarios: Optional[int] = None,
-) -> Tuple[ConvergenceSweepOutcome, float]:
+    engine: EngineConfig | None = None,
+    n_scenarios: int | None = None,
+) -> tuple[ConvergenceSweepOutcome, float]:
     """Run the calibrated paper-scale PCA convergence sweep.
 
     ``scale`` shrinks the grid uniformly (rows, iterations, scenarios) for
@@ -689,9 +689,9 @@ def scalar_convergence_run(
 def scalar_convergence_seconds(
     outcome: ConvergenceSweepOutcome,
     *,
-    methods: Optional[Sequence[str]] = None,
-    max_scenarios: Optional[int] = None,
-) -> Tuple[float, float]:
+    methods: Sequence[str] | None = None,
+    max_scenarios: int | None = None,
+) -> tuple[float, float]:
     """Wall-clock of the same grid through the scalar training simulator.
 
     Replays ``max_scenarios`` scenarios (all by default) of each method

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Optional
+from typing import Any
 
 #: capability reason codes (stable API — tests compare these, not prose)
 CAP_OK = "ok"
@@ -66,9 +66,9 @@ class EngineConfig:
     """
 
     kind: str = "auto"
-    num_devices: Optional[int] = None
-    mesh: Optional[Any] = None  # a 1-D jax.sharding.Mesh over the batch axis
-    slot_budget: Optional[int] = None
+    num_devices: int | None = None
+    mesh: Any | None = None  # a 1-D jax.sharding.Mesh over the batch axis
+    slot_budget: int | None = None
     eval_every: int = 1
 
     def __post_init__(self):
@@ -84,13 +84,19 @@ class EngineConfig:
             raise ValueError("eval_every must be >= 1")
 
 
-def as_engine_config(engine) -> EngineConfig:
+def as_engine_config(engine, *, _stacklevel: int = 2) -> EngineConfig:
     """Coerce ``engine`` to an :class:`EngineConfig`.
 
     Accepts an :class:`EngineConfig` (returned unchanged), ``None`` (the
     defaults), or a legacy ``"auto"|"scan"|"host"`` string — the
     deprecated alias for ``EngineConfig(kind=...)``, kept working with a
     ``DeprecationWarning``.
+
+    ``_stacklevel`` lets the engine entry points that merely forward
+    their ``engine`` kwarg here (e.g. ``run_convergence_batch``) attribute
+    the warning to *their* caller — the line that actually wrote the
+    legacy string — instead of to the forwarding frame.  The default
+    points at a direct caller of this function.
     """
     if engine is None:
         return EngineConfig()
@@ -101,7 +107,7 @@ def as_engine_config(engine) -> EngineConfig:
             f"engine={engine!r} strings are deprecated; pass "
             f"EngineConfig(kind={engine!r}) instead",
             DeprecationWarning,
-            stacklevel=3,
+            stacklevel=_stacklevel,
         )
         return EngineConfig(kind=engine)
     raise TypeError(

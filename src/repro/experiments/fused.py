@@ -76,7 +76,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +118,28 @@ from repro.lb.partitioner import p_start, p_stop
 LB_MAX_SLOTS = 250_000
 
 
+def guarded_comp_latency(comp_unit_draw, load, slowdown, factor):
+    """The §3 latency product with its FMA-contraction seam (tracelint TL001).
+
+    Finalizes the §3 product before the event algebra consumes it: the
+    LLVM backend otherwise contracts the last multiply into the
+    ``task_finish_time`` add as an FMA (skipping the intermediate
+    rounding the host engine's numpy performs), which changes the final
+    ULP whenever slowdown/burst factors are not exactly 1.0.
+    ``max(x, 0)`` is exact for the positive latencies and is a pattern
+    the contraction cannot see through (``lax.optimization_barrier`` is
+    erased before LLVM and does NOT prevent this).
+
+    Kept as a module-level function so the tracelint TL001 probe
+    (``repro.analysis.lint``) exercises the exact production expression:
+    it compiles this chain with and without the seam and diffs against
+    an op-by-op evaluation.
+    """
+    return jnp.maximum(
+        comp_latency_expr(comp_unit_draw, load, slowdown, factor), 0.0
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class _StaticSpec:
     """Hashable static configuration of one fused-scan compilation."""
@@ -131,17 +153,17 @@ class _StaticSpec:
     uses_cache: bool
     accepts_stale: bool
     num_iterations: int
-    base_start: Tuple[int, ...]
-    base_stop: Tuple[int, ...]
-    sub_p: Tuple[int, ...]  # initial (and, without §6, permanent) p_i
-    buckets: Tuple[int, ...]  # static width_bucket ladder, ascending
-    slot_offsets: Tuple[int, ...]  # per-worker first slot (grid cache)
+    base_start: tuple[int, ...]
+    base_stop: tuple[int, ...]
+    sub_p: tuple[int, ...]  # initial (and, without §6, permanent) p_i
+    buckets: tuple[int, ...]  # static width_bucket ladder, ascending
+    slot_offsets: tuple[int, ...]  # per-worker first slot (grid cache)
     num_slots: int
     cache_mode: str = "none"  # "none" | "grid" | "universe" | "tiled"
     active_cap: int = 0  # per-worker entry capacity of the tiled cache
     # §6 load balancing (empty/zero for non-LB specs)
     load_balance: bool = False
-    ladder: Tuple[int, ...] = ()  # the p-ladder Algorithm 1 climbs
+    ladder: tuple[int, ...] = ()  # the p-ladder Algorithm 1 climbs
     lb_interval: float = 0.0
     lb_startup_delay: float = 0.0
     lb_margin: float = 0.0  # optimizer-input margin (= config.margin)
@@ -160,7 +182,7 @@ def _static_spec(
     num_workers: int,
     num_iterations: int,
     cost_scale: float,
-    universe: Optional[SlotUniverse] = None,
+    universe: SlotUniverse | None = None,
     tiled: bool = False,
     active_cap: int = 0,
 ) -> _StaticSpec:
@@ -175,7 +197,7 @@ def _static_spec(
     widths = set()
     for nl, p in zip(n_local, sub_p):
         widths |= _possible_widths(nl, p, process_full)
-    ladder: Tuple[int, ...] = ()
+    ladder: tuple[int, ...] = ()
     if cfg.load_balance:
         ladder = lb_ladder_for(cfg, np.asarray(n_local))
         if not process_full:
@@ -354,11 +376,12 @@ def _apply_cache_events_lb(
 
     Performance shape (load-bearing — the first implementation was ~100x
     slower than the host engine): inside the rank loop the big ``[S, E,
-    ...]`` value table is **write-only**.  Reading it there (for eviction
-    subtraction or the in-place delta) defeats XLA's in-place aliasing of
-    the loop carry under ``lax.scan`` and copies the whole table once per
-    event rank (~minutes per 100-worker run); ``lax.cond`` is no escape
-    (~9 ms per rank on the CPU thunk runtime).  Instead, the live value
+    ...]`` value table is **write-only** (tracelint TL002 machine-checks
+    this).  Reading it there (for eviction subtraction or the in-place
+    delta) defeats XLA's in-place aliasing of the loop carry under
+    ``lax.scan`` and copies the whole table once per event rank (~minutes
+    per 100-worker run); ``lax.cond`` is no escape (~9 ms per rank on the
+    CPU thunk runtime — the capture pattern tracelint TL005 flags).  Instead, the live value
     of any slot is *reconstructed* from small read-only buffers: ``wmap``
     maps each slot to the rank of its last accepted write this iteration
     (so the value is a row of the ranked event table), and slots not yet
@@ -774,18 +797,12 @@ def _run_scan(
         unit = jnp.take_along_axis(
             comp_unit, carry["draw_idx"][:, :, None], axis=2
         )[:, :, 0]
-        comp_d = comp_latency_expr(
+        # guarded_comp_latency carries the FMA seam (tracelint TL001): the
+        # jnp.maximum(..., 0.0) inside it keeps LLVM from contracting the
+        # last §3 multiply into the task_finish_time add below.
+        comp_d = guarded_comp_latency(
             unit, cost, slowdown[None, :], burst_factor_at(start)
         )
-        # finalize the §3 product before the event algebra consumes it: the
-        # LLVM backend otherwise contracts the last multiply into the
-        # task_finish_time add as an FMA (skipping the intermediate
-        # rounding the host engine's numpy performs), which changes the
-        # final ULP whenever slowdown/burst factors are not exactly 1.0.
-        # max(x, 0) is exact for the positive latencies and is a pattern
-        # the contraction cannot see through (lax.optimization_barrier is
-        # erased before LLVM and does NOT prevent this).
-        comp_d = jnp.maximum(comp_d, 0.0)
 
         # -- event resolution (the shared method-semantics helpers) ---------
         finish = task_finish_time(start, comp_d, comm_d)
@@ -1068,7 +1085,9 @@ def _run_scan(
         flight_comm=jnp.zeros((S, N)),
         flight_val=jnp.zeros((S, N) + vshape, dtype=val_dtype),
         cache=cache0,
-        lat=jnp.full((S, T, N), jnp.nan),
+        # explicit dtype: python-float fills would enter the scan carry
+        # weakly typed (tracelint TL004)
+        lat=jnp.full((S, T, N), jnp.nan, dtype=jnp.float64),
     )
     if spec.load_balance:
         sub_p0 = jnp.asarray(spec.sub_p, dtype=jnp.int64)
@@ -1077,8 +1096,10 @@ def _run_scan(
         carry0["pending_p"] = jnp.full((S, N), -1, dtype=jnp.int64)
         # current_p is the optimizer's view of the published p
         carry0["current_p"] = jnp.full((S, N), spec.lb_p0, dtype=jnp.int64)
-        carry0["h_min"] = jnp.full((S,), jnp.nan)
-        carry0["next_lb"] = jnp.full((S,), spec.lb_startup_delay)
+        carry0["h_min"] = jnp.full((S,), jnp.nan, dtype=jnp.float64)
+        carry0["next_lb"] = jnp.full(
+            (S,), spec.lb_startup_delay, dtype=jnp.float64
+        )
         carry0["flight_assigned"] = jnp.zeros((S, N))
         carry0["prof"] = (
             jnp.zeros((S, N, T)),
@@ -1158,7 +1179,7 @@ def scan_capability(
     config: MethodConfig,
     num_workers: int,
     *,
-    slot_budget: Optional[int] = None,
+    slot_budget: int | None = None,
 ) -> EngineCapability:
     """Structured report of how the fused scan would run this config.
 
@@ -1241,7 +1262,7 @@ def scan_capability(
 
 def scan_unsupported_reason(
     problem: FiniteSumProblem, config: MethodConfig, num_workers: int
-) -> Optional[str]:
+) -> str | None:
     """Why the fused scan cannot run this config (None = it can).
 
     Deprecated string shim over :func:`scan_capability` — callers should
@@ -1250,11 +1271,17 @@ def scan_unsupported_reason(
     *supported* (they return None here); only configs whose active-entry
     footprint exceeds the budget report a reason.
     """
+    warnings.warn(
+        "scan_unsupported_reason is deprecated; use scan_capability and "
+        "branch on the structured report's code",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     cap = scan_capability(problem, config, num_workers)
     return None if cap.supported else cap.detail
 
 
-def run_convergence_scan(
+def prepare_scan_inputs(
     problem: FiniteSumProblem,
     traces: FleetTraces,
     config: MethodConfig,
@@ -1263,21 +1290,23 @@ def run_convergence_scan(
     cost_scale: float = 1.0,
     eval_every: int = 1,
     seed: int = 0,
-    engine: Optional[EngineConfig] = None,
+    slot_budget: int | None = None,
+    pad: int = 0,
 ):
-    """Train ``config`` on every scenario of ``traces`` in one XLA dispatch.
+    """Static spec + kernels + the full ``_run_scan`` operand tuple.
 
-    Bit-exact against the host engine and the scalar simulator on the same
-    traces (see module docstring), §6 load-balanced configs included.
-    ``engine`` supplies the scenario mesh (``mesh`` / ``num_devices``) and
-    the slot budget; its ``kind`` is ignored here — this *is* the scan
-    engine.  Raises :class:`~repro.experiments.engine.EngineCapabilityError`
-    for the one unsupported case (see :func:`scan_capability`)."""
-    from repro.experiments.convergence import ConvergenceBatchResult
-
-    eng = as_engine_config(engine)
+    The one place the fused engine's positional calling convention is
+    encoded.  Shared between :func:`run_convergence_scan` and the
+    tracelint entry registry (``repro.analysis.lint.entries``), so the
+    static analyzer always traces the production scan body with
+    production-shaped operands instead of a hand-maintained replica.
+    ``pad`` edge-pads the scenario axis with copies of the last scenario
+    (``shard_map`` divisibility).  Raises
+    :class:`~repro.experiments.engine.EngineCapabilityError` for
+    genuinely unsupported configs.
+    """
     cap = scan_capability(
-        problem, config, traces.num_workers, slot_budget=eng.slot_budget
+        problem, config, traces.num_workers, slot_budget=slot_budget
     )
     if not cap.supported:
         raise EngineCapabilityError(cap)
@@ -1288,10 +1317,9 @@ def run_convergence_scan(
         raise ValueError(
             f"traces hold {traces.horizon} draws/worker but {T} iterations requested"
         )
-    lb = bool(config.load_balance)
     universe = None
     active_cap = 0
-    if lb and config.uses_cache:
+    if config.load_balance and config.uses_cache:
         n = problem.num_samples
         N = traces.num_workers
         base_start = [p_start(n, N, i + 1) for i in range(N)]
@@ -1316,16 +1344,6 @@ def run_convergence_scan(
         active_cap=active_cap,
     )
     kernels = problem.fused_kernels()
-    mesh = eng.mesh
-    if mesh is None and eng.num_devices is not None:
-        from repro.launch.mesh import make_scenario_mesh
-
-        mesh = make_scenario_mesh(eng.num_devices)
-    D = 1 if mesh is None else int(np.prod(mesh.devices.shape))
-    # shard_map needs the scenario axis divisible by the mesh: edge-pad
-    # with copies of the last scenario (exact per-row math makes padding
-    # rows inert) and slice every output back to S
-    pad = (-S) % D
     V0 = np.repeat(problem.init(seed)[None], S, axis=0)
     eval_mask = np.zeros(T, dtype=bool)
     eval_mask[::eval_every] = True
@@ -1364,9 +1382,7 @@ def run_convergence_scan(
             slot_starts = jnp.zeros((1,), dtype=jnp.int64)
             slot_stops = jnp.zeros((1,), dtype=jnp.int64)
             overlap_idx = jnp.full((1, 1), -1, dtype=jnp.int64)
-        outs = _scan_jit_for(kernels, mesh)(
-            kernels,
-            spec,
+        scan_args = (
             slot_table,
             slot_width,
             slot_starts,
@@ -1375,6 +1391,55 @@ def run_convergence_scan(
             *trace_args,
             jax.random.PRNGKey(seed),
         )
+    return spec, kernels, scan_args
+
+
+def run_convergence_scan(
+    problem: FiniteSumProblem,
+    traces: FleetTraces,
+    config: MethodConfig,
+    num_iterations: int,
+    *,
+    cost_scale: float = 1.0,
+    eval_every: int = 1,
+    seed: int = 0,
+    engine: EngineConfig | None = None,
+):
+    """Train ``config`` on every scenario of ``traces`` in one XLA dispatch.
+
+    Bit-exact against the host engine and the scalar simulator on the same
+    traces (see module docstring), §6 load-balanced configs included.
+    ``engine`` supplies the scenario mesh (``mesh`` / ``num_devices``) and
+    the slot budget; its ``kind`` is ignored here — this *is* the scan
+    engine.  Raises :class:`~repro.experiments.engine.EngineCapabilityError`
+    for the one unsupported case (see :func:`scan_capability`)."""
+    from repro.experiments.convergence import ConvergenceBatchResult
+
+    eng = as_engine_config(engine, _stacklevel=3)
+    mesh = eng.mesh
+    if mesh is None and eng.num_devices is not None:
+        from repro.launch.mesh import make_scenario_mesh
+
+        mesh = make_scenario_mesh(eng.num_devices)
+    D = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+    S = traces.num_scenarios
+    # shard_map needs the scenario axis divisible by the mesh: edge-pad
+    # with copies of the last scenario (exact per-row math makes padding
+    # rows inert) and slice every output back to S
+    pad = (-S) % D
+    spec, kernels, scan_args = prepare_scan_inputs(
+        problem,
+        traces,
+        config,
+        num_iterations,
+        cost_scale=cost_scale,
+        eval_every=eval_every,
+        seed=seed,
+        slot_budget=eng.slot_budget,
+        pad=pad,
+    )
+    with enable_x64():
+        outs = _scan_jit_for(kernels, mesh)(kernels, spec, *scan_args)
         times, subopt, fresh, lat, rejected, evictions, published = (
             np.asarray(o)[:S] for o in outs
         )

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -50,7 +50,7 @@ PAPER_BURSTS = BurstRegime("paper_bursts", 1.0 / 90.0, 1.12, 60.0)
 #: stale-tolerance should pay off most (paper §7.2-style stragglers).
 HEAVY_BURSTS = BurstRegime("heavy_bursts", 1.0 / 20.0, 4.0, 30.0)
 
-DEFAULT_REGIMES: Tuple[BurstRegime, ...] = (CALM, PAPER_BURSTS, HEAVY_BURSTS)
+DEFAULT_REGIMES: tuple[BurstRegime, ...] = (CALM, PAPER_BURSTS, HEAVY_BURSTS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,7 +75,7 @@ def default_methods(
     *,
     subpartitions: int = 10,
     code_rate: float = 45.0 / 49.0,
-) -> Tuple[MethodSpec, ...]:
+) -> tuple[MethodSpec, ...]:
     """The five §7 columns: GD, coded bound, SGD, SAG, DSAG.
 
     GD and coded process the full local block (load = subpartitions tasks,
@@ -114,17 +114,17 @@ class SweepRow:
 
 @dataclasses.dataclass
 class SweepOutcome:
-    rows: List[SweepRow]
+    rows: list[SweepRow]
     n_workers: int
     n_seeds: int
     num_iterations: int
     engine_seconds: float
-    results: Dict[Tuple[str, str, int], BatchedRunResult]
-    traces: Dict[str, FleetTraces]
-    methods: Tuple[MethodSpec, ...] = ()
+    results: dict[tuple[str, str, int], BatchedRunResult]
+    traces: dict[str, FleetTraces]
+    methods: tuple[MethodSpec, ...] = ()
     seed: int = 0  # base seed of the grid (recorded in the BENCH artifact)
 
-    def mean_iter_time(self, regime: str, method: str, w: Optional[int] = None) -> float:
+    def mean_iter_time(self, regime: str, method: str, w: int | None = None) -> float:
         sel = [
             r.mean_iter_time
             for r in self.rows
@@ -164,10 +164,10 @@ def run_sweep(
     *,
     w_values: Sequence[int] = (),
     w_fracs: Sequence[float] = (0.8,),
-    methods: Optional[Sequence[MethodSpec]] = None,
+    methods: Sequence[MethodSpec] | None = None,
     regimes: Sequence[BurstRegime] = DEFAULT_REGIMES,
     subpartitions: int = 10,
-    cluster: Optional[ClusterLatencyModel] = None,
+    cluster: ClusterLatencyModel | None = None,
     seed: int = 0,
 ) -> SweepOutcome:
     """Run the full (seeds x methods x w x regimes) grid, batched over seeds.
@@ -194,9 +194,9 @@ def run_sweep(
             f"cluster has {cluster.num_workers} workers but n_workers={n_workers}"
         )
 
-    rows: List[SweepRow] = []
-    results: Dict[Tuple[str, str, int], BatchedRunResult] = {}
-    traces_by_regime: Dict[str, FleetTraces] = {}
+    rows: list[SweepRow] = []
+    results: dict[tuple[str, str, int], BatchedRunResult] = {}
+    traces_by_regime: dict[str, FleetTraces] = {}
     t0 = time.perf_counter()
     for ri, regime in enumerate(regimes):
         traces = sample_fleet(

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, Optional
 
 import numpy as np
 
@@ -15,7 +14,7 @@ from repro.experiments.sweep import BatchedRunResult
 from repro.latency.profiler import LatencyProfiler
 
 
-def paper_ordering(outcome: SweepOutcome, regime: str) -> Dict[str, float]:
+def paper_ordering(outcome: SweepOutcome, regime: str) -> dict[str, float]:
     """DSAG-vs-baselines verdict for one regime (paper Figs. 8-9 ordering).
 
     Returns mean-iteration-time ratios (baseline / DSAG, i.e. > 1 means DSAG
@@ -60,7 +59,7 @@ def feed_profiler(
     *,
     load: float = 1.0,
     window: float = np.inf,
-    profiler: Optional[LatencyProfiler] = None,
+    profiler: LatencyProfiler | None = None,
 ) -> LatencyProfiler:
     """Feed one scenario's batched task records into a §6.1 profiler.
 
@@ -92,11 +91,11 @@ def feed_profiler(
 def outcome_to_dict(
     outcome: SweepOutcome,
     *,
-    scalar_seconds: Optional[float] = None,
-    extra: Optional[dict] = None,
+    scalar_seconds: float | None = None,
+    extra: dict | None = None,
 ) -> dict:
     """JSON-serializable summary of a sweep (the BENCH_sweep payload)."""
-    agg: Dict[str, dict] = {}
+    agg: dict[str, dict] = {}
     for r in outcome.rows:
         key = f"{r.regime}/{r.method}/w{r.w}"
         agg.setdefault(key, {"mean_iter_time": [], "mean_fresh": []})
@@ -161,8 +160,8 @@ def write_bench_sweep(
     outcome: SweepOutcome,
     path: str = "BENCH_sweep.json",
     *,
-    scalar_seconds: Optional[float] = None,
-    extra: Optional[dict] = None,
+    scalar_seconds: float | None = None,
+    extra: dict | None = None,
 ) -> dict:
     """Write the sweep summary to ``path`` (repo-root BENCH artifact)."""
     payload = outcome_to_dict(outcome, scalar_seconds=scalar_seconds, extra=extra)
@@ -174,7 +173,7 @@ def write_bench_sweep(
 # ---------------------------------------------------------------------------
 
 
-def convergence_ordering(outcome, gap: float) -> Dict[str, float]:
+def convergence_ordering(outcome, gap: float) -> dict[str, float]:
     """Time-to-gap verdict across methods (the paper's headline numbers).
 
     Returns each method's median (across scenarios) time to reach
@@ -184,8 +183,8 @@ def convergence_ordering(outcome, gap: float) -> Dict[str, float]:
     Medians over the scenario axis pair runs on common random numbers, so a
     single straggler-heavy draw cannot flip the verdict.
     """
-    out: Dict[str, float] = {"gap": gap}
-    medians: Dict[str, float] = {}
+    out: dict[str, float] = {"gap": gap}
+    medians: dict[str, float] = {}
     for name, res in outcome.results.items():
         ttg = res.time_to_gap(gap)
         # the median of [finite..., inf] stays finite while fewer than half
@@ -251,10 +250,10 @@ def write_bench_convergence(
     path: str = "BENCH_convergence.json",
     *,
     gap: float,
-    scalar_seconds: Optional[float] = None,
-    scalar_seconds_measured: Optional[float] = None,
-    scalar_methods: Optional[list] = None,
-    extra: Optional[dict] = None,
+    scalar_seconds: float | None = None,
+    scalar_seconds_measured: float | None = None,
+    scalar_methods: list | None = None,
+    extra: dict | None = None,
 ) -> dict:
     """Write the convergence-sweep summary to ``path``.
 

@@ -27,7 +27,6 @@ feedback (GD, the idealized coded bound).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 
@@ -50,10 +49,10 @@ class BatchedRunResult:
     iteration_times: np.ndarray  # [S, T] completion time of each iteration
     fresh_counts: np.ndarray  # [S, T]
     participation: np.ndarray  # [S, N] fraction of iterations fresh
-    task_assigned: Optional[np.ndarray] = None  # [S, T] assignment time
-    task_start: Optional[np.ndarray] = None  # [S, T, N]
-    task_finish: Optional[np.ndarray] = None  # [S, T, N]
-    task_comp: Optional[np.ndarray] = None  # [S, T, N] compute-only latency
+    task_assigned: np.ndarray | None = None  # [S, T] assignment time
+    task_start: np.ndarray | None = None  # [S, T, N]
+    task_finish: np.ndarray | None = None  # [S, T, N]
+    task_comp: np.ndarray | None = None  # [S, T, N] compute-only latency
 
     @property
     def mean_iteration_time(self) -> np.ndarray:

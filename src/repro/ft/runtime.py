@@ -21,7 +21,6 @@ the mask/flush inputs of the compiled DSAG step:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -37,8 +36,8 @@ class DeadlineController:
     window: int = 50  # latency samples kept per group
 
     def __post_init__(self):
-        self._lat: List[List[float]] = [[] for _ in range(self.num_groups)]
-        self._inflight: List[Optional[int]] = [None] * self.num_groups  # step id
+        self._lat: list[list[float]] = [[] for _ in range(self.num_groups)]
+        self._inflight: list[int | None] = [None] * self.num_groups  # step id
         if not (1 <= self.w <= self.num_groups):
             raise ValueError(f"w={self.w} not in 1..{self.num_groups}")
 
@@ -70,7 +69,7 @@ class DeadlineController:
         kth = np.partition(draws, self.w - 1, axis=1)[:, self.w - 1]
         return float(kth.mean()) * (1.0 + self.margin)
 
-    def step_masks(self, latencies: np.ndarray, step: int) -> Tuple[np.ndarray, np.ndarray]:
+    def step_masks(self, latencies: np.ndarray, step: int) -> tuple[np.ndarray, np.ndarray]:
         """Given this step's per-group latencies, return (mask, flush).
 
         mask_i: group i delivered within the deadline.
@@ -111,7 +110,7 @@ class FailureDetector:
 
 def elastic_remap_groups(
     n_samples: int, p_old: int, p_new: int, k_old: int = 1
-) -> Tuple[int, np.ndarray]:
+) -> tuple[int, np.ndarray]:
     """Re-map sample->group assignment when the group count changes.
 
     Returns (k_new, survivors) where survivors[i] (len p_new) marks new

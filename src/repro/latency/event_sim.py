@@ -17,8 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Optional, Sequence
 
+from collections.abc import Callable, Sequence
 import numpy as np
 
 from repro.latency.model import ClusterLatencyModel
@@ -40,11 +40,11 @@ class EventDrivenSimulator:
 
     def __init__(
         self,
-        cluster: Optional[ClusterLatencyModel],
+        cluster: ClusterLatencyModel | None,
         loads: Sequence[float],
         *,
         with_bursts: bool = False,
-        latency_provider: Optional[Callable[[int, float], float]] = None,
+        latency_provider: Callable[[int, float], float] | None = None,
     ):
         if cluster is None and latency_provider is None:
             raise ValueError("need a cluster model or a latency_provider")

@@ -21,8 +21,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
 
+from collections.abc import Sequence
 import numpy as np
 
 def comp_latency_expr(comp_unit_draw, load, slowdown, factor):
@@ -435,10 +435,10 @@ def sample_fleet(
     n_scenarios: int,
     horizon: int,
     *,
-    burst_rate: Optional[float] = None,
-    burst_factor_mean: Optional[float] = None,
-    burst_duration_mean: Optional[float] = None,
-    time_horizon: Optional[float] = None,
+    burst_rate: float | None = None,
+    burst_factor_mean: float | None = None,
+    burst_duration_mean: float | None = None,
+    time_horizon: float | None = None,
     load_hint: float = 1.0,
     max_bursts: int = 4096,
     seed: int = 0,

@@ -15,7 +15,6 @@ from __future__ import annotations
 import bisect
 import dataclasses
 from collections import deque
-from typing import Dict, Optional
 
 import numpy as np
 
@@ -103,7 +102,7 @@ class MomentBuffer:
         self.comp[s, workers, titers] = compute
         self.valid[s, workers, titers] = True
 
-    def moments(self, now: np.ndarray, *, window: Optional[float] = None):
+    def moments(self, now: np.ndarray, *, window: float | None = None):
         """(e_comm, v_comm, e_comp, v_comp, counts) at per-scenario ``now``.
 
         Delegates to the shared jitted window-moments kernel; a worker
@@ -195,7 +194,7 @@ class LatencyProfiler:
         while dq and dq[0][0] < cutoff:
             dq.popleft()
 
-    def stats(self, worker: int, now: float) -> Optional[WorkerStats]:
+    def stats(self, worker: int, now: float) -> WorkerStats | None:
         self._evict(worker, now)
         dq = self._samples[worker]
         if len(dq) == 0:
@@ -211,7 +210,7 @@ class LatencyProfiler:
             num_samples=len(dq),
         )
 
-    def all_stats(self, now: float) -> Dict[int, WorkerStats]:
+    def all_stats(self, now: float) -> dict[int, WorkerStats]:
         out = {}
         for i in range(self.num_workers):
             s = self.stats(i, now)
@@ -219,7 +218,7 @@ class LatencyProfiler:
                 out[i] = s
         return out
 
-    def moment_arrays(self, now: float) -> Optional["ProfilerMoments"]:
+    def moment_arrays(self, now: float) -> "ProfilerMoments" | None:
         """All workers' moments as [N] arrays (the §6.2 optimizer feed).
 
         Returns None unless every worker has at least one in-window sample —

@@ -22,7 +22,7 @@ import json
 import subprocess
 import sys
 import time
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -57,9 +57,9 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experim
 # ---------------------------------------------------------------------------
 
 
-def default_train_config(num_params: int, multi_pod: bool, overrides: Optional[Dict] = None) -> TrainConfig:
+def default_train_config(num_params: int, multi_pod: bool, overrides: dict | None = None) -> TrainConfig:
     big = num_params > 50e9
-    kwargs: Dict[str, Any] = dict(
+    kwargs: dict[str, Any] = dict(
         optimizer="adafactor" if big else "adamw",
         fsdp=num_params > 1e9,
         dsag=True,
@@ -140,7 +140,7 @@ def _grouped_batch_abstract(cfg, shape, gs: GroupSpec, mesh):
 # ---------------------------------------------------------------------------
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None) -> Dict:
+def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides=None) -> dict:
     """overrides: TrainConfig field overrides (hillclimb iterations)."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]

@@ -17,7 +17,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -47,14 +47,14 @@ class TrainerOptions:
     global_batch: int = 8
     seq_len: int = 128
     seed: int = 0
-    checkpoint_dir: Optional[str] = None
+    checkpoint_dir: str | None = None
     restore: bool = False
-    mesh: Optional[Any] = None
+    mesh: Any | None = None
     train_config: TrainConfig = dataclasses.field(default_factory=TrainConfig)
     #: simulate straggling groups (CPU runs): per-step latency draws feed the
     #: deadline controller exactly like real step timings would on a pod
     simulate_stragglers: bool = True
-    dsag_w: Optional[int] = None  # wait-for-w groups (default: 3/4 of P)
+    dsag_w: int | None = None  # wait-for-w groups (default: 3/4 of P)
     log_every: int = 10
 
 
@@ -141,7 +141,7 @@ class Trainer:
         return self.straggler_sim.sample_all(c=1.0, now=float(step))
 
     # -- main loop ----------------------------------------------------------
-    def run(self) -> Dict[str, list]:
+    def run(self) -> dict[str, list]:
         opts = self.opts
         tc = opts.train_config
         state = self.init_state()

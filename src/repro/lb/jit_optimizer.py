@@ -44,7 +44,6 @@ through untouched — the scalar path is literally the ``S = 1`` slice.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -215,7 +214,7 @@ def estimate_h(
 # ---------------------------------------------------------------------------
 
 
-def ladder_tables(ladder: Tuple[int, ...], n_j):
+def ladder_tables(ladder: tuple[int, ...], n_j):
     """(eff [.., N, L], idx_cap [.., N]) — the per-worker effective ladder.
 
     ``eff[.., i, l] = min(ladder[l], n_j[.., i])`` is strictly increasing
@@ -249,7 +248,7 @@ def snap_to_ladder(eff, idx_cap, v):
 
 def algorithm1(
     p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active, *,
-    ladder: Tuple[int, ...], w: int, margin: float, key,
+    ladder: tuple[int, ...], w: int, margin: float, key,
     K: int = SIM_ITERATIONS, h_tol: float = H_TOLERANCE,
     max_rounds: int = MAX_ROUNDS,
 ):
@@ -354,7 +353,7 @@ def should_publish(p_cur, p_new, e_comm, e_comp, threshold: float):
 
 def lb_update(
     p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active, *,
-    ladder: Tuple[int, ...], w: int, margin: float, key,
+    ladder: tuple[int, ...], w: int, margin: float, key,
     K: int = SIM_ITERATIONS, h_tol: float = H_TOLERANCE,
     max_rounds: int = MAX_ROUNDS, threshold: float = IMPROVEMENT_THRESHOLD,
 ):

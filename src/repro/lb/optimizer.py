@@ -29,7 +29,7 @@ and h is evaluated with a 1% tolerance (the paper's noise allowance).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +90,7 @@ class LoadBalanceOptimizer:
         max_rounds: int = jlb.MAX_ROUNDS,
         improvement_threshold: float = jlb.IMPROVEMENT_THRESHOLD,
         seed: int = 0,
-        ladder: Optional[Tuple[int, ...]] = None,
+        ladder: tuple[int, ...] | None = None,
     ):
         self.h_tolerance = h_tolerance
         self.sim_iterations = sim_iterations
@@ -100,14 +100,14 @@ class LoadBalanceOptimizer:
         self.improvement_threshold = improvement_threshold
         self.seed = seed
         self.ladder = tuple(ladder) if ladder is not None else None
-        self.h_min: Optional[float] = None
+        self.h_min: float | None = None
         #: h at the *returned* p' of the last optimize() call — kept
         #: consistent with the returned vector even when the slack phase
         #: backs a violating step out
-        self.last_h: Optional[float] = None
+        self.last_h: float | None = None
 
     # -- shared pieces -----------------------------------------------------
-    def _ladder_for(self, p: np.ndarray, n_j: np.ndarray) -> Tuple[int, ...]:
+    def _ladder_for(self, p: np.ndarray, n_j: np.ndarray) -> tuple[int, ...]:
         if self.ladder is None:
             self.ladder = build_p_ladder(int(np.max(p)), int(np.max(n_j)))
         return self.ladder
@@ -154,9 +154,9 @@ class LoadBalanceOptimizer:
         self,
         p: np.ndarray,
         inputs: OptimizerInputs,
-        h_min: Optional[np.ndarray] = None,
-        active: Optional[np.ndarray] = None,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        h_min: np.ndarray | None = None,
+        active: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Run Algorithm 1 + the §6.3 publish gate for S scenarios at once.
 
         ``p`` is ``[S, N]`` int, ``inputs`` holds ``[S, N]`` arrays,
@@ -204,8 +204,8 @@ class LoadBalanceOptimizer:
         self,
         p: np.ndarray,
         inputs: OptimizerInputs,
-        h_min: Optional[np.ndarray] = None,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        h_min: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Algorithm 1 for S scenarios (no publish gate): see update_batch."""
         p_new, h_min_out, last_h, _ = self.update_batch(p, inputs, h_min)
         return p_new, h_min_out, last_h

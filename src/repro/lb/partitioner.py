@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
 
 
 def p_start(n: int, p: int, i: int) -> int:
@@ -65,7 +64,7 @@ def build_p_ladder(
     *,
     ratio: float = LADDER_RATIO,
     span: float = LADDER_SPAN,
-) -> Tuple[int, ...]:
+) -> tuple[int, ...]:
     """The finite ladder of subpartition counts Algorithm 1 climbs on.
 
     A geometric grid of integers around the initial subpartition count
@@ -110,8 +109,8 @@ def build_p_ladder(
 
 
 def ladder_intervals(
-    base_start: int, base_stop: int, ladder: Tuple[int, ...]
-) -> List[Tuple[int, int]]:
+    base_start: int, base_stop: int, ladder: tuple[int, ...]
+) -> list[tuple[int, int]]:
     """Every *global* interval a worker can produce on the ladder.
 
     For each ladder entry ``p`` (clipped to the worker's local sample
@@ -133,7 +132,7 @@ def ladder_intervals(
     return sorted(seen)
 
 
-def _align(n: int, p: int, p_new: int, k: int) -> Tuple[int, int]:
+def _align(n: int, p: int, p_new: int, k: int) -> tuple[int, int]:
     """Algorithm 2 lines 2-6: walk down from k until boundaries align.
 
     Termination: at k_new = 1 the recomputed k is p_trans(n, p_new, p, 1) = 1
@@ -151,7 +150,7 @@ def _align(n: int, p: int, p_new: int, k: int) -> Tuple[int, int]:
     return k, k_new
 
 
-def align_partitions(n: int, p: int, p_new: int, k: int) -> Tuple[int, int]:
+def align_partitions(n: int, p: int, p_new: int, k: int) -> tuple[int, int]:
     """Algorithm 2.  Returns (k_aligned_old, k_new) such that
     ``p_start(n, p_new, k_new) == p_start(n, p, k_aligned_old)``.
 
@@ -189,7 +188,7 @@ class Subpartitioner:
     def n_local(self) -> int:
         return self.base_stop - self.base_start + 1
 
-    def current_interval(self) -> Tuple[int, int]:
+    def current_interval(self) -> tuple[int, int]:
         lo = p_start(self.n_local, self.p, self.k)
         hi = p_stop(self.n_local, self.p, self.k)
         return self.base_start + lo - 1, self.base_start + hi - 1
@@ -211,7 +210,7 @@ class Subpartitioner:
         self.p = p_new
         self.k = k_new
 
-    def next_interval_and_advance(self) -> Tuple[int, int]:
+    def next_interval_and_advance(self) -> tuple[int, int]:
         iv = self.current_interval()
         self.advance()
         return iv

@@ -17,7 +17,6 @@ TPU sharding layout:
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +37,7 @@ QUERY_CHUNK = 1_024
 # ---------------------------------------------------------------------------
 
 
-def gqa_decls(cfg: ModelConfig, heads: Optional[int] = None) -> Dict[str, ParamDecl]:
+def gqa_decls(cfg: ModelConfig, heads: int | None = None) -> dict[str, ParamDecl]:
     from repro.models.transformer import padded_kv_heads
 
     d, hd = cfg.d_model, cfg.resolved_head_dim
@@ -57,7 +56,7 @@ def gqa_decls(cfg: ModelConfig, heads: Optional[int] = None) -> Dict[str, ParamD
     return out
 
 
-def mla_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+def mla_decls(cfg: ModelConfig) -> dict[str, ParamDecl]:
     d, h = cfg.d_model, cfg.num_heads
     nope, rope, vh, lora = (
         cfg.qk_nope_dim,
@@ -95,7 +94,7 @@ def full_attention(
     *,
     causal: bool,
     q_offset: int = 0,
-    scale: Optional[float] = None,
+    scale: float | None = None,
 ) -> jnp.ndarray:
     scale = scale or 1.0 / math.sqrt(q.shape[-1])
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
@@ -118,7 +117,7 @@ def chunked_attention(
     causal: bool,
     q_offset: int = 0,
     chunk: int = QUERY_CHUNK,
-    scale: Optional[float] = None,
+    scale: float | None = None,
 ) -> jnp.ndarray:
     """Query-chunked online-softmax attention (flash-style, pure jnp).
 
@@ -196,7 +195,7 @@ def gqa_forward(
 
 def gqa_prefill_with_cache(
     cfg: ModelConfig, params, x, positions, cache_len: int, *, use_rope: bool = True
-) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     """Prefill that also returns a KV cache padded to ``cache_len``,
     sequence-sharded over 'model' for the decode phase."""
     q, k, v = _project_qkv(cfg, params, x)
@@ -220,10 +219,10 @@ def gqa_decode_step(
     cfg: ModelConfig,
     params,
     x: jnp.ndarray,  # [b, 1, d]
-    cache: Dict[str, jnp.ndarray],  # k/v: [b, S, kvh, hd], seq-sharded
+    cache: dict[str, jnp.ndarray],  # k/v: [b, S, kvh, hd], seq-sharded
     index: jnp.ndarray,  # [] int32: number of tokens already in cache
     use_rope: bool = True,
-) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+) -> tuple[jnp.ndarray, dict[str, jnp.ndarray]]:
     q, k_new, v_new = _project_qkv(cfg, params, x)
     if use_rope:
         pos = jnp.full((x.shape[0], 1), index, dtype=jnp.int32)
@@ -341,7 +340,7 @@ def cross_attention_forward(
     return tp_contract("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
 
 
-def encoder_kv(cfg: ModelConfig, params, enc_out) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def encoder_kv(cfg: ModelConfig, params, enc_out) -> tuple[jnp.ndarray, jnp.ndarray]:
     k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(enc_out.dtype))
     v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(enc_out.dtype))
     if cfg.qkv_bias:

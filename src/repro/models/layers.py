@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -54,10 +54,10 @@ def tp_contract(subscript: str, x, w):
 
 @dataclasses.dataclass(frozen=True)
 class ParamDecl:
-    shape: Tuple[int, ...]
-    logical: Tuple[str, ...]  # one logical axis name per dim
+    shape: tuple[int, ...]
+    logical: tuple[str, ...]  # one logical axis name per dim
     init: str = "normal"  # normal | zeros | ones | scaled (1/sqrt(fan_in))
-    dtype: Optional[str] = None  # override model dtype (e.g. fp32 for norms)
+    dtype: str | None = None  # override model dtype (e.g. fp32 for norms)
 
     def __post_init__(self):
         assert len(self.shape) == len(self.logical), (self.shape, self.logical)
@@ -98,11 +98,11 @@ def abstract_from_decls(decls, dtype) -> Any:
     )
 
 
-def make_rules(cfg: ModelConfig, fsdp: bool) -> Dict[str, Optional[str]]:
+def make_rules(cfg: ModelConfig, fsdp: bool) -> dict[str, str | None]:
     """Logical-axis -> mesh-axis mapping.  TP over 'model'; FSDP adds 'data'
     on the embed axis.  MoE: shard the expert dim when it divides the TP
     degree (deepseek 160/16), else shard each expert's ffn dim (grok 8e)."""
-    rules: Dict[str, Optional[str]] = {
+    rules: dict[str, str | None] = {
         "vocab": "model",
         "heads": "model",
         # kv weights replicated unless the (padded) kv head count is TP-
@@ -132,7 +132,7 @@ def make_rules(cfg: ModelConfig, fsdp: bool) -> Dict[str, Optional[str]]:
     return rules
 
 
-def specs_from_decls(decls, rules: Dict[str, Optional[str]]) -> Any:
+def specs_from_decls(decls, rules: dict[str, str | None]) -> Any:
     def to_spec(d: ParamDecl) -> P:
         return P(*[rules.get(ax) for ax in d.logical])
 
@@ -144,7 +144,7 @@ def specs_from_decls(decls, rules: Dict[str, Optional[str]]) -> Any:
 # ---------------------------------------------------------------------------
 
 
-def rmsnorm_decls(dim: int, axis: str = "embed2") -> Dict[str, ParamDecl]:
+def rmsnorm_decls(dim: int, axis: str = "embed2") -> dict[str, ParamDecl]:
     return {"scale": ParamDecl((dim,), (axis,), init="ones", dtype="float32")}
 
 
@@ -156,7 +156,7 @@ def rmsnorm(params, x, eps: float) -> jnp.ndarray:
     return (x * params["scale"]).astype(dt)
 
 
-def layernorm_decls(dim: int, axis: str = "embed2") -> Dict[str, ParamDecl]:
+def layernorm_decls(dim: int, axis: str = "embed2") -> dict[str, ParamDecl]:
     return {
         "scale": ParamDecl((dim,), (axis,), init="ones", dtype="float32"),
         "bias": ParamDecl((dim,), (axis,), init="zeros", dtype="float32"),
@@ -172,7 +172,7 @@ def layernorm(params, x, eps: float) -> jnp.ndarray:
     return (x * params["scale"] + params["bias"]).astype(dt)
 
 
-def norm_decls(cfg: ModelConfig, dim: Optional[int] = None) -> Dict[str, ParamDecl]:
+def norm_decls(cfg: ModelConfig, dim: int | None = None) -> dict[str, ParamDecl]:
     dim = dim or cfg.d_model
     if cfg.family == "enc_dec":
         return layernorm_decls(dim)
@@ -211,7 +211,7 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndar
 # ---------------------------------------------------------------------------
 
 
-def mlp_decls(cfg: ModelConfig, d_ff: Optional[int] = None, swiglu: bool = True):
+def mlp_decls(cfg: ModelConfig, d_ff: int | None = None, swiglu: bool = True):
     d = cfg.d_model
     f = d_ff or cfg.d_ff
     if swiglu:
@@ -250,7 +250,7 @@ def round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
-def embed_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+def embed_decls(cfg: ModelConfig) -> dict[str, ParamDecl]:
     v = round_up(cfg.vocab_size, 256)  # pad for clean vocab sharding
     out = {"tok": ParamDecl((v, cfg.d_model), ("vocab", "embed"))}
     if not cfg.tie_embeddings:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +62,7 @@ from repro.models.transformer import (
 # ---------------------------------------------------------------------------
 
 
-def encdec_decls(cfg: ModelConfig) -> Dict[str, Any]:
+def encdec_decls(cfg: ModelConfig) -> dict[str, Any]:
     enc_block = {
         "ln1": norm_decls(cfg),
         "attn": attn.gqa_decls(cfg, heads=padded_heads(cfg)),

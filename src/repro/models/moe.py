@@ -21,7 +21,6 @@ annotated so the partitioner cannot fall back to replication.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ from repro.models.layers import ParamDecl, round_up, tp_contract
 from repro.models.sharding import shard
 
 
-def moe_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+def moe_decls(cfg: ModelConfig) -> dict[str, ParamDecl]:
     d, e, f = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
     out = {
         "router": ParamDecl((d, e), ("embed", "none"), init="scaled"),
@@ -142,8 +141,8 @@ def moe_apply(
     params,
     x: jnp.ndarray,  # [b, s, d]
     *,
-    capacity_factor: Optional[float] = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    capacity_factor: float | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (output [b,s,d], aux load-balance loss [])."""
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k

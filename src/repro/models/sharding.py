@@ -8,25 +8,24 @@ model code runs everywhere.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-_MESH: Optional[Mesh] = None
+_MESH: Mesh | None = None
 
 
-def set_mesh(mesh: Optional[Mesh]) -> None:
+def set_mesh(mesh: Mesh | None) -> None:
     global _MESH
     _MESH = mesh
 
 
-def get_mesh() -> Optional[Mesh]:
+def get_mesh() -> Mesh | None:
     return _MESH
 
 
-def dp_axes() -> Tuple[str, ...]:
+def dp_axes() -> tuple[str, ...]:
     """Mesh axes that carry data parallelism (('pod','data') when present)."""
     if _MESH is None:
         return ()

@@ -14,7 +14,6 @@ Sharding: heads ('ssm_heads' / 'd_inner') over 'model'; the B/C streams
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,13 +25,13 @@ from repro.models.sharding import shard_batch
 N_GROUPS = 1
 
 
-def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
     d_inner = cfg.ssm_expand * cfg.d_model
     heads = d_inner // cfg.ssm_head_dim
     return d_inner, heads, cfg.ssm_state
 
 
-def mamba_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+def mamba_decls(cfg: ModelConfig) -> dict[str, ParamDecl]:
     d = cfg.d_model
     d_inner, h, n = ssm_dims(cfg)
     gn = N_GROUPS * n
@@ -54,7 +53,7 @@ def mamba_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
     }
 
 
-def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: Optional[jnp.ndarray] = None):
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: jnp.ndarray | None = None):
     """Depthwise causal conv over [b, s, ch] with kernel [k, ch].
     ``tail`` [b, k-1, ch] prepends state from previous tokens (decode)."""
     k = w.shape[0]

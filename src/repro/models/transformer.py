@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -59,11 +59,11 @@ def padded_heads(cfg: ModelConfig) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _block_decls(cfg: ModelConfig) -> Dict[str, Any]:
+def _block_decls(cfg: ModelConfig) -> dict[str, Any]:
     """One residual block of the *stacked* part of the model."""
     if cfg.family == "ssm" or (cfg.family == "hybrid"):
         return {"ln": norm_decls(cfg), "mamba": ssm_mod.mamba_decls(cfg)}
-    out: Dict[str, Any] = {"ln1": norm_decls(cfg), "ln2": norm_decls(cfg)}
+    out: dict[str, Any] = {"ln1": norm_decls(cfg), "ln2": norm_decls(cfg)}
     if cfg.use_mla:
         out["attn"] = attn.mla_decls(cfg)
     else:
@@ -75,7 +75,7 @@ def _block_decls(cfg: ModelConfig) -> Dict[str, Any]:
     return out
 
 
-def _shared_attn_decls(cfg: ModelConfig) -> Dict[str, Any]:
+def _shared_attn_decls(cfg: ModelConfig) -> dict[str, Any]:
     """zamba2: one shared full attention+MLP block used every attn_every
     layers (weights shared across its invocations)."""
     return {
@@ -86,8 +86,8 @@ def _shared_attn_decls(cfg: ModelConfig) -> Dict[str, Any]:
     }
 
 
-def lm_decls(cfg: ModelConfig) -> Dict[str, Any]:
-    decls: Dict[str, Any] = {
+def lm_decls(cfg: ModelConfig) -> dict[str, Any]:
+    decls: dict[str, Any] = {
         "embed": embed_decls(cfg),
         "blocks": stack_decls(_block_decls(cfg), cfg.num_layers),
         "ln_f": norm_decls(cfg),
@@ -151,7 +151,7 @@ def backbone_forward(
     positions: jnp.ndarray,
     *,
     remat: str = "full",
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Run all blocks (scan over stacked layers).  Returns (x, aux_loss)."""
     x = shard_batch(x, None, None)
 

@@ -13,7 +13,7 @@ sit inside a jitted step; property tests bound the round-trip error at
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,7 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def _pad_to_block(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+def _pad_to_block(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
     n = x.shape[-1]
     pad = (-n) % block
     if pad:

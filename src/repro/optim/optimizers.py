@@ -8,7 +8,8 @@ factored second moments (row/col statistics) so optimizer state for the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +19,7 @@ from repro.configs.base import TrainConfig
 
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
-    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
 
 
 def global_norm(tree) -> jnp.ndarray:

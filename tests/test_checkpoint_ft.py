@@ -104,7 +104,7 @@ class TestFailureRuntime:
 
     def test_flush_follows_miss(self):
         ctl = DeadlineController(num_groups=2, w=1, margin=0.0)
-        for step in range(10):
+        for _step in range(10):
             ctl.record(0, 1.0)
             ctl.record(1, 1.0)
         m1, f1 = ctl.step_masks(np.array([1.0, 50.0]), step=100)

@@ -122,7 +122,7 @@ class TestDsagUpdateRule:
         rng = np.random.default_rng(0)
         dark = -1
         losses = []
-        for it in range(300):
+        for _it in range(300):
             mask = np.ones(4, bool)
             flush = np.zeros(4, bool)
             if dark >= 0:

@@ -2,11 +2,14 @@
 
 ``EngineConfig`` replaced the stringly ``engine: str = "auto"`` kwarg;
 these tests pin the coercion contract (legacy strings keep working but
-warn), the validation errors, and the structured capability report the
-fused engine raises instead of prose-matched ``ValueError`` text.
+warn), the validation errors, the structured capability report the fused
+engine raises instead of prose-matched ``ValueError`` text, and the
+deprecation hygiene: warnings attribute to the *caller's* line and fire
+exactly once per call site.
 """
 
 import dataclasses
+import warnings
 
 import pytest
 
@@ -67,6 +70,68 @@ class TestAsEngineConfig:
     def test_bad_type_rejected(self):
         with pytest.raises(TypeError, match="EngineConfig or a legacy string"):
             as_engine_config(42)
+
+
+class TestDeprecationHygiene:
+    """Stacklevel + once-per-call-site semantics of the legacy aliases."""
+
+    def test_direct_call_attributes_warning_to_caller(self):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            as_engine_config("host")
+        assert len(caught) == 1
+        assert caught[0].filename == __file__
+
+    def test_forwarding_entry_point_attributes_to_its_caller(self):
+        """run_convergence_batch forwards its engine kwarg; the warning
+        must point at the line that wrote the string, not at the
+        forwarding frame inside convergence.py."""
+        import numpy as np
+
+        from repro.cluster.simulator import MethodConfig
+        from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+        from repro.experiments.convergence import run_convergence_batch
+        from repro.latency.model import make_heterogeneous_cluster, sample_fleet
+
+        X, y = make_higgs_like(32, seed=0)
+        prob = LogisticRegressionProblem(X=X, y=y)
+        cluster = make_heterogeneous_cluster(
+            2, seed=3, burst_rate=0.0, comp_range=(1.1e-3, 2.5e-3)
+        )
+        traces = sample_fleet(cluster, 1, 4, burst_rate=0.0, seed=1)
+        cfg = MethodConfig(name="sgd", w=2)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            res = run_convergence_batch(prob, traces, cfg, 2, engine="host")
+        assert np.isfinite(res.times).all()
+        dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert dep[0].filename == __file__
+
+    def test_engine_string_warns_once_per_call_site(self):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("default")
+            for _ in range(3):
+                as_engine_config("host")  # one call site, three calls
+            as_engine_config("host")  # a second call site
+        dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 2
+
+    def test_scan_unsupported_reason_warns_once_per_call_site(self):
+        from repro.cluster.simulator import MethodConfig
+        from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+        from repro.experiments import fused
+
+        X, y = make_higgs_like(32, seed=0)
+        prob = LogisticRegressionProblem(X=X, y=y)
+        cfg = MethodConfig(name="dsag", w=2, subpartitions=2)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("default")
+            for _ in range(3):
+                assert fused.scan_unsupported_reason(prob, cfg, 2) is None
+        dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert dep[0].filename == __file__
 
 
 class TestEngineCapability:

@@ -276,9 +276,11 @@ class TestRouting:
         cluster, traces = artificial_fleet(logreg_small)
         cfg = lb_config("dsag")
         monkeypatch.setattr(fused, "LB_MAX_SLOTS", 3)
-        assert fused.scan_unsupported_reason(
-            logreg_small, cfg, traces.num_workers
-        ) is not None
+        with pytest.warns(DeprecationWarning, match="scan_capability"):
+            reason = fused.scan_unsupported_reason(
+                logreg_small, cfg, traces.num_workers
+            )
+        assert reason is not None
 
 
 class TestJitOptimizerInvariances:
