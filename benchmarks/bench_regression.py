@@ -9,8 +9,10 @@ semantic change to an engine or the latency model.  The gate:
   best-w mean iteration time), the ``dsag_beats_sag_and_coded`` verdict,
   the convergence grid's time-to-gap ranking or
   ``dsag_fastest_to_gap`` / ``ordering_dsag_sag_coded`` verdicts, the
-  ``lb_scan`` column's DSAG-with-LB verdict, or the §6 scan-vs-host
-  bit-exactness;
+  ``lb_scan`` column's DSAG-with-LB verdict, the §6 scan-vs-host
+  bit-exactness, or the ``churn`` column's elastic-fleet pins (scan-vs-
+  host bit-exactness under worker death/rejoin and the dsag < sag <
+  coded ordering surviving churn);
 * **warn** (exit 0) when speedup ratios drift by more than 15% — both
   the deterministic DSAG-over-baseline ratios and the wall-clock
   ``lb_scan`` scan-vs-host speedup (machine-dependent by nature, so a
@@ -237,6 +239,12 @@ def compare_convergence(committed: dict, fresh: dict) -> tuple[list[str], list[s
         ps_failures, ps_warnings = compare_pca_grid_sharded(old_ps, new_ps)
         failures.extend(ps_failures)
         warnings.extend(ps_warnings)
+    old_ch = committed.get("churn")
+    new_ch = fresh.get("churn")
+    if old_ch is not None and new_ch is not None:
+        ch_failures, ch_warnings = compare_churn_column(old_ch, new_ch)
+        failures.extend(ch_failures)
+        warnings.extend(ch_warnings)
     return failures, warnings
 
 
@@ -338,6 +346,209 @@ def run_lb_scan_column(
             lb_scan_faster_than_host=bool(scan_s < host_s),
         )
     return out
+
+
+#: every parameter of the churn column's run — stored inside the column
+#: itself so the gate rerun reproduces it without guessing
+CHURN_RECIPE = {
+    "problem": "logreg_higgs",
+    "num_samples": 4096,
+    "n_workers": 40,
+    "subpartitions": 4,
+    "w": 32,
+    "eta": 0.25,
+    "n_scenarios": 5,
+    "num_iterations": 40,
+    "eval_every": 5,
+    "regime": "heavy_bursts",
+    "seed": 0,
+    "gap": 0.2,
+    # elastic-fleet schedule, as fractions of the churn-free run length:
+    # the slowest fifth of the fleet dies at 30% of the run and half of
+    # the dead workers rejoin at 70%
+    "death_frac": 0.2,
+    "death_at_frac": 0.3,
+    "revive_frac": 0.5,
+    "revive_at_frac": 0.7,
+}
+
+
+def run_churn_column(recipe: dict | None = None) -> dict:
+    """DSAG/SAG/coded through an elastic-fleet churn schedule, both engines.
+
+    Builds the same kind of heterogeneous heavy-burst fleet as the main
+    convergence grid (smaller: the recipe's N/S/T), derives a
+    death-then-partial-rejoin :class:`~repro.latency.model.ChurnSchedule`
+    from a churn-free latency replay (deterministic given the seed, so the
+    gate rerun lands on the identical schedule), and runs each method
+    through the host loop AND the fused scan on the churned traces.
+    Fail-able outputs: per-field scan-vs-host bit-exactness under churn
+    and the dsag < sag < coded time-to-gap ordering (the paper's §7
+    straggler-resilience claim must survive workers dying mid-run).
+    """
+    import numpy as np
+
+    from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+    from repro.experiments import (
+        EngineConfig,
+        default_convergence_methods,
+        run_convergence_batch,
+    )
+    from repro.experiments.grid import DEFAULT_REGIMES
+    from repro.experiments.sweep import replay_batch
+    from repro.latency.model import (
+        ChurnSchedule,
+        make_heterogeneous_cluster,
+        sample_fleet,
+    )
+
+    r = dict(CHURN_RECIPE)
+    if recipe:
+        r.update(recipe)
+    if r["problem"] != "logreg_higgs":
+        raise GridMismatch(
+            f"churn recipe problem {r['problem']!r} is not reproducible here"
+        )
+    regimes = {reg.name: reg for reg in DEFAULT_REGIMES}
+    if r["regime"] not in regimes:
+        raise GridMismatch(f"unknown regime {r['regime']!r} in churn recipe")
+    regime = regimes[r["regime"]]
+    X, y = make_higgs_like(r["num_samples"], seed=r["seed"])
+    prob = LogisticRegressionProblem(X=X, y=y)
+    N, sp, T = r["n_workers"], r["subpartitions"], r["num_iterations"]
+    c_task = prob.compute_cost(1, max(prob.num_samples // (N * sp), 1))
+    cluster = make_heterogeneous_cluster(
+        N, seed=r["seed"], burst_rate=0.0, load_unit=c_task
+    )
+    traces = sample_fleet(
+        cluster,
+        r["n_scenarios"],
+        T,
+        burst_rate=regime.rate,
+        burst_factor_mean=regime.factor_mean,
+        burst_duration_mean=regime.duration_mean,
+        seed=r["seed"] + 1,
+    )
+    # anchor the schedule to the churn-free run length (latency replay
+    # only — no gradients), then kill the slowest workers and revive half
+    base = replay_batch(traces, r["w"], T)
+    total = float(np.median(base.iteration_times[:, -1]))
+    death_at = r["death_at_frac"] * total
+    revive_at = r["revive_at_frac"] * total
+    sd = np.asarray(traces.slowdown)
+    n_dead = max(1, int(round(r["death_frac"] * N)))
+    dead = np.argsort(-sd, kind="stable")[:n_dead]
+    n_back = int(round(r["revive_frac"] * n_dead))
+    revived = dead[:n_back]
+    alive0 = np.ones(N, bool)
+    alive1 = alive0.copy()
+    alive1[dead] = False
+    alive2 = alive1.copy()
+    alive2[revived] = True
+    churn = ChurnSchedule(
+        times=np.array([death_at, revive_at]),
+        slowdown=np.stack([sd, sd, sd]),
+        alive=np.stack([alive0, alive1, alive2]),
+    )
+    churned = traces.with_churn(churn)
+    methods = default_convergence_methods(
+        N, w=r["w"], eta=r["eta"], subpartitions=sp
+    )
+    bitexact = True
+    cols: dict[str, dict] = {}
+    for name in ("dsag", "sag", "coded"):
+        host = run_convergence_batch(
+            prob, churned, methods[name], T,
+            eval_every=r["eval_every"], seed=r["seed"],
+            engine=EngineConfig(kind="host"),
+        )
+        scan = run_convergence_batch(
+            prob, churned, methods[name], T,
+            eval_every=r["eval_every"], seed=r["seed"],
+            engine=EngineConfig(kind="scan"),
+        )
+        bitexact = bitexact and bool(
+            np.array_equal(host.times, scan.times)
+            and np.array_equal(
+                host.suboptimality, scan.suboptimality, equal_nan=True
+            )
+            and np.array_equal(host.fresh_counts, scan.fresh_counts)
+            and np.array_equal(
+                host.per_worker_latency, scan.per_worker_latency,
+                equal_nan=True,
+            )
+            and host.repartition_events == scan.repartition_events
+            and np.array_equal(host.evictions, scan.evictions)
+            and np.array_equal(host.rejected_stale, scan.rejected_stale)
+        )
+        ttg = scan.time_to_gap(r["gap"])
+        med = float(np.median(ttg))
+        cols[name] = {
+            "median_time_to_gap": med if np.isfinite(med) else None,
+            "reached_gap_frac": float(np.isfinite(ttg).mean()),
+        }
+    t_dsag = cols["dsag"]["median_time_to_gap"]
+    t_sag = cols["sag"]["median_time_to_gap"]
+    t_coded = cols["coded"]["median_time_to_gap"]
+    finite = (
+        t_dsag is not None and t_sag is not None and t_coded is not None
+    )
+    ordering = {
+        "gap": r["gap"],
+        "ordering_dsag_sag_coded": float(
+            finite and t_dsag < t_sag < t_coded
+        ),
+    }
+    if finite and t_dsag > 0:
+        ordering["sag_over_dsag"] = t_sag / t_dsag
+        ordering["coded_over_dsag"] = t_coded / t_dsag
+    return {
+        "recipe": r,
+        "schedule": {
+            "death_at": death_at,
+            "revive_at": revive_at,
+            "dead_workers": [int(i) for i in dead],
+            "revived_workers": [int(i) for i in revived],
+        },
+        "bitexact_scan_vs_host": bitexact,
+        "methods": cols,
+        "ordering": ordering,
+    }
+
+
+def compare_churn_column(committed: dict, fresh: dict) -> tuple[list[str], list[str]]:
+    """Diff the ``churn`` columns; returns (failures, warnings)."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    if not fresh.get("bitexact_scan_vs_host", False):
+        failures.append(
+            "churn: fused scan no longer bit-exact vs the host engine "
+            "under fleet churn"
+        )
+    old_rank = convergence_ranking(committed["methods"])
+    new_rank = convergence_ranking(fresh["methods"])
+    if old_rank != new_rank:
+        failures.append(
+            f"churn: time-to-gap ranking flipped {old_rank} -> {new_rank}"
+        )
+    old_o, new_o = committed["ordering"], fresh["ordering"]
+    if old_o.get("ordering_dsag_sag_coded") != new_o.get(
+        "ordering_dsag_sag_coded"
+    ):
+        failures.append(
+            f"churn: ordering_dsag_sag_coded flipped "
+            f"{old_o.get('ordering_dsag_sag_coded')} -> "
+            f"{new_o.get('ordering_dsag_sag_coded')}"
+        )
+    for key in SPEEDUP_KEYS:
+        if key in old_o and key in new_o and old_o[key] > 0:
+            drift = abs(new_o[key] / old_o[key] - 1.0)
+            if drift > SPEEDUP_DRIFT_TOLERANCE:
+                warnings.append(
+                    f"churn: {key} drifted {drift:.0%} "
+                    f"({old_o[key]:.2f} -> {new_o[key]:.2f})"
+                )
+    return failures, warnings
 
 
 def run_pca_grid_sharded_column(
@@ -529,6 +740,8 @@ def rerun_convergence(committed: dict) -> dict:
             num_devices=ps.get("num_devices"),
             seed=ps.get("seed", 0),
         )
+    if "churn" in committed:
+        payload["churn"] = run_churn_column(committed["churn"].get("recipe"))
     return payload
 
 
@@ -574,6 +787,8 @@ def main(argv: list[str]) -> int:
             scope = "convergence grid + lb_scan column"
             if "pca_grid_sharded" in committed:
                 scope += " + pca_grid_sharded column"
+            if "churn" in committed:
+                scope += " + churn column"
         else:
             fresh = rerun_grid(committed)
             failures, warnings = compare_sweep(committed, fresh)

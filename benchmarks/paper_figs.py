@@ -344,6 +344,13 @@ def fig10_12_convergence_sweep() -> None:
         base_medians=base_medians,
     )
 
+    # churn column: the elastic-fleet pin — dsag/sag/coded on a fleet
+    # where the slowest fifth dies mid-run (half rejoining later), scan
+    # bit-exact vs host and the dsag < sag < coded ordering surviving
+    from benchmarks.bench_regression import run_churn_column
+
+    churn_payload = run_churn_column()
+
     payload = write_bench_convergence(
         out, "BENCH_convergence.json", gap=gap,
         scalar_seconds=extrapolated,
@@ -362,6 +369,7 @@ def fig10_12_convergence_sweep() -> None:
             "pca_paper_scale": pca_payload,
             "pca_grid_sharded": sharded_payload,
             "lb_scan": lb_payload,
+            "churn": churn_payload,
             # everything the regression gate needs to re-execute this grid
             # (benchmarks/bench_regression.py rerun_convergence)
             "recipe": {

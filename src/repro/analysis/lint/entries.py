@@ -86,9 +86,32 @@ def _probe_traces():
     return sample_fleet(cluster, _PROBE_SCENARIOS, 10, burst_rate=0.0, seed=11)
 
 
-def _fused_probe(problem, config, *, slot_budget=None) -> EntryProbe:
-    """Trace the production scan body with production-built operands."""
+@functools.lru_cache(maxsize=None)
+def _probe_churn_traces():
+    """The probe fleet under elastic churn: one death inside the probe
+    horizon plus a slowdown drift, so ``spec.has_churn`` compiles the
+    liveness mask, per-start slowdown rows, and dead-entry cache clears
+    into the audited jaxpr."""
+    from repro.latency.model import ChurnSchedule
+
     traces = _probe_traces()
+    sd = np.asarray(traces.slowdown)
+    alive0 = np.ones(_PROBE_WORKERS, bool)
+    alive1 = alive0.copy()
+    alive1[3] = False
+    return traces.with_churn(
+        ChurnSchedule(
+            times=np.array([0.004]),
+            slowdown=np.stack([sd, sd * 1.2]),
+            alive=np.stack([alive0, alive1]),
+        )
+    )
+
+
+def _fused_probe(problem, config, *, slot_budget=None, traces=None) -> EntryProbe:
+    """Trace the production scan body with production-built operands."""
+    if traces is None:
+        traces = _probe_traces()
     spec, kernels, scan_args = fused.prepare_scan_inputs(
         problem, traces, config, _PROBE_ITERS, slot_budget=slot_budget
     )
@@ -162,6 +185,16 @@ def _build_fused_logreg_tiled() -> EntryProbe:
     probe = _fused_probe(prob, cfg, slot_budget=cap.slots_total - 1)
     probe.name = "fused_logreg_tiled"
     probe.description = "fused scan body, logreg, tiled active-slot cache"
+    return probe
+
+
+def _build_fused_logreg_churn() -> EntryProbe:
+    cfg = MethodConfig(name="dsag", w=3, subpartitions=2, load_balance=True)
+    probe = _fused_probe(_probe_logreg(), cfg, traces=_probe_churn_traces())
+    probe.name = "fused_logreg_churn"
+    probe.description = (
+        "fused scan body, logreg, §6 LB universe cache under fleet churn"
+    )
     return probe
 
 
@@ -292,6 +325,7 @@ ENTRIES: dict[str, Callable[[], EntryProbe]] = {
     "fused_logreg_grid": _build_fused_logreg_grid,
     "fused_logreg_lb": _build_fused_logreg_lb,
     "fused_logreg_tiled": _build_fused_logreg_tiled,
+    "fused_logreg_churn": _build_fused_logreg_churn,
     "fused_pca_grid": _build_fused_pca_grid,
     "kernels_logreg": _build_kernels_logreg,
     "kernels_pca": _build_kernels_pca,

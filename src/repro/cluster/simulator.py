@@ -24,7 +24,12 @@ import numpy as np
 
 from repro.core.gradient_cache import GradientCache
 from repro.core.problems import FiniteSumProblem
-from repro.latency.model import ClusterLatencyModel, FleetTraces
+from repro.latency.model import (
+    ClusterLatencyModel,
+    FleetTraces,
+    SlowdownRemoval,
+    churn_from_removals,
+)
 from repro.latency.profiler import LatencyProfiler, LatencySample, MomentBuffer
 from repro.lb.optimizer import LoadBalanceOptimizer, OptimizerInputs
 from repro.lb.partitioner import Subpartitioner, build_p_ladder, p_start, p_stop
@@ -282,13 +287,38 @@ class TrainingSimulator:
         #: a pre-sampled sweep scenario through the full training simulator.
         self.latency_source = latency_source or ModelLatencySource(cluster)
         if timed_events and isinstance(self.latency_source, TraceLatencySource):
-            # timed events mutate the cluster model, which a pre-sampled trace
-            # never re-reads — silently ignoring them would fake the §7.2
-            # scenarios, so refuse the combination outright
-            raise ValueError(
-                "timed_events require live model sampling; a replayed trace "
-                "cannot react to cluster mutations"
-            )
+            if all(isinstance(fn, SlowdownRemoval) for _, fn in timed_events):
+                # the §7.2 artificial scenario (and any pure slowdown-removal
+                # schedule) has an exact trace-replay equivalent: fold the
+                # removals into a ChurnSchedule whose rows replace the static
+                # slowdown field at each task's start time
+                traces = self.latency_source.traces
+                if traces.churn is not None:
+                    raise ValueError(
+                        "traces already carry a churn schedule; fold the "
+                        "slowdown removals into it instead of passing "
+                        "timed_events"
+                    )
+                removals = [
+                    SlowdownRemoval(time=ev_t, workers=fn.workers)
+                    for ev_t, fn in timed_events
+                ]
+                self.latency_source.traces = traces.with_churn(
+                    churn_from_removals(traces.slowdown, removals)
+                )
+                timed_events = []
+            else:
+                # opaque timed events mutate the cluster model, which a
+                # pre-sampled trace never re-reads — silently ignoring them
+                # would fake the §7.2 scenarios, so refuse the combination
+                # (structured SlowdownRemoval events take the churn path
+                # above)
+                raise ValueError(
+                    "timed_events require live model sampling; a replayed "
+                    "trace cannot react to cluster mutations (use "
+                    "SlowdownRemoval events or traces.with_churn for the "
+                    "replayable §7.2 path)"
+                )
         if (
             isinstance(self.latency_source, TraceLatencySource)
             and self.latency_source.traces.num_workers != cluster.num_workers
@@ -350,9 +380,20 @@ class TrainingSimulator:
         self._lb_buffer = (
             MomentBuffer(1, N, num_iterations) if cfg.load_balance else None
         )
+        #: churn comes in through the replayed traces (the live path models
+        #: fleet changes as timed_events mutating the cluster instead)
+        churn = (
+            self.latency_source.traces.churn
+            if isinstance(self.latency_source, TraceLatencySource)
+            else None
+        )
         now = 0.0
-        heap: list[tuple[float, int, tuple]] = []  # (finish, seq, result)
+        # (finish, seq, generation, result); a worker's generation is bumped
+        # when a death discards its in-flight task, invalidating the queued
+        # heap event without disturbing the (finish, seq) pop order
+        heap: list[tuple[float, int, int, tuple]] = []
         seq = 0
+        gen = np.zeros(N, dtype=np.int64)
         times = np.zeros(num_iterations)
         subopt = np.full(num_iterations, np.nan)
         fresh_counts = np.zeros(num_iterations, dtype=np.int64)
@@ -360,6 +401,8 @@ class TrainingSimulator:
         repartition_events: list[float] = []
         event_ptr = 0
         current_p = np.full(N, cfg.subpartitions, dtype=np.int64)
+        prev_row = int(churn.row_at(now)) if churn is not None else 0
+        lb_since = float(churn.boundary_before(prev_row)) if churn is not None else None
 
         for t in range(num_iterations):
             # fire timed environment events (e.g. §7.2 slowdown removal)
@@ -367,13 +410,44 @@ class TrainingSimulator:
                 self.timed_events[event_ptr][1](self.cluster)
                 event_ptr += 1
 
+            if churn is None:
+                alive = None
+                w_eff = w_wait
+            else:
+                # liveness sampled once per iteration at assignment time
+                alive = churn.alive_at(now)
+                row = int(churn.row_at(now))
+                if row != prev_row:
+                    # fleet changed: drop the contribution floor so the §6
+                    # optimizer re-baselines, and re-profile from the boundary
+                    if self.lb_optimizer is not None:
+                        self.lb_optimizer.h_min = None
+                    lb_since = float(churn.boundary_before(row))
+                    prev_row = row
+                for i, wk in enumerate(self.workers):
+                    if not alive[i]:
+                        if wk.busy_until > now or wk.queued is not None:
+                            # dead at assignment: the in-flight completion
+                            # never happens and the queued task is dropped
+                            gen[i] += 1
+                            wk.busy_until = now
+                            wk.queued = None
+                        if cache is not None:
+                            # canonical clear order: worker index ascending ==
+                            # interval-start ascending (base ranges are
+                            # disjoint and worker-ordered); idempotent
+                            cache.clear_range(wk.sub.base_start, wk.sub.base_stop)
+                w_eff = min(w_wait, int(alive.sum()))
+
             task = _Task(iteration=t, iterate=V, assigned_at=now)
             for wk in self.workers:
+                if alive is not None and not alive[wk.idx]:
+                    continue  # dead workers start nothing, consume no draws
                 if wk.busy_until <= now:
                     fin, result = wk.start_task(
                         task, now, problem, self.latency_source, process_full, comp_scale
                     )
-                    heapq.heappush(heap, (fin, seq, result))
+                    heapq.heappush(heap, (fin, seq, int(gen[wk.idx]), result))
                     seq += 1
                 else:
                     wk.queued = task
@@ -382,10 +456,12 @@ class TrainingSimulator:
             fresh_values: list[tuple[tuple[int, int], np.ndarray]] = []  # sgd
             deadline = math.inf
             iter_start = now
-            while heap and (fresh < w_wait or heap[0][0] <= deadline):
-                fin, _, result = heapq.heappop(heap)
+            while heap and (fresh < w_eff or heap[0][0] <= deadline):
+                fin, sq, g, result = heapq.heappop(heap)
+                if g != gen[result[0]]:
+                    continue  # discarded by a death event; must not touch `now`
                 if fin > deadline:
-                    heapq.heappush(heap, (fin, _, result))
+                    heapq.heappush(heap, (fin, sq, g, result))
                     break
                 now = fin
                 (widx, interval, titer, value, comp_lat, comm_lat, assigned_at) = result
@@ -417,7 +493,7 @@ class TrainingSimulator:
                     nfin, nresult = wk.start_task(
                         qt, now, problem, self.latency_source, process_full, comp_scale
                     )
-                    heapq.heappush(heap, (nfin, seq, nresult))
+                    heapq.heappush(heap, (nfin, seq, int(gen[widx]), nresult))
                     seq += 1
                 else:
                     wk.busy_until = now
@@ -430,7 +506,7 @@ class TrainingSimulator:
                     fresh_values.append((interval, value))
                 if is_fresh:
                     fresh += 1
-                    if fresh == w_wait:
+                    if fresh == w_eff:
                         if cfg.uses_margin and cfg.margin > 0:
                             # paper §5.1: wait 2% longer than the time it took
                             # to collect the w-th fresh result this iteration
@@ -471,7 +547,9 @@ class TrainingSimulator:
 
             # ---- load balancing (background loop, simulated) ---------------
             if cfg.load_balance and now >= self._next_lb_time:
-                published = self._run_load_balancer(now, current_p, w_wait)
+                published = self._run_load_balancer(
+                    now, current_p, w_wait, alive=alive, since=lb_since
+                )
                 if published is not None:
                     current_p = published
                     repartition_events.append(now)
@@ -488,13 +566,24 @@ class TrainingSimulator:
         )
 
     def _run_load_balancer(
-        self, now: float, current_p: np.ndarray, w_wait: int
+        self,
+        now: float,
+        current_p: np.ndarray,
+        w_wait: int,
+        *,
+        alive: np.ndarray | None = None,
+        since: float | None = None,
     ) -> np.ndarray | None:
         e_comm, v_comm, e_comp, v_comp, cnt = self._lb_buffer.moments(
-            np.array([now])
+            np.array([now]),
+            since=None if since is None else np.array([since]),
         )
-        if (cnt[0] < 1).any():
-            return None  # need at least one window sample per worker
+        ready = cnt[0] >= 1
+        if alive is not None:
+            # dead workers can't produce samples — don't wait on them
+            ready = ready | ~alive
+        if not ready.all():
+            return None  # need at least one window sample per living worker
         n_i = np.array([w.sub.n_local for w in self.workers], dtype=np.float64)
         inputs = make_optimizer_inputs(
             e_comm[0],
@@ -508,7 +597,10 @@ class TrainingSimulator:
         lb = self.lb_optimizer
         hm = np.array([np.nan if lb.h_min is None else lb.h_min])
         p_new, h_min, last_h, publish = lb.update_batch(
-            np.asarray(current_p, np.int64)[None, :], inputs.as_batch(), hm
+            np.asarray(current_p, np.int64)[None, :],
+            inputs.as_batch(),
+            hm,
+            alive=None if alive is None else np.asarray(alive, bool)[None, :],
         )
         lb.h_min = float(h_min[0])
         lb.last_h = float(last_h[0])

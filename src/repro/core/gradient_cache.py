@@ -99,6 +99,7 @@ class SlotUniverse:
     widths: np.ndarray  # [E]
     slot_table: np.ndarray  # [N, L, Pmax] int64, -1 where k > p
     overlap_idx: np.ndarray  # [E, Omax] int64, -1 padding
+    owners: np.ndarray  # [E] worker index whose base range contains the slot
 
     @property
     def num_slots(self) -> int:
@@ -172,6 +173,7 @@ def build_slot_universe(
         widths=stops_a - starts_a + 1,
         slot_table=slot_table,
         overlap_idx=overlap_idx,
+        owners=owner_a,
     )
 
 
@@ -303,6 +305,28 @@ class GradientCache:
         self._sum += np.asarray(value, dtype=np.float64)
         self._covered += (stop - start + 1) - removed_width
         return True
+
+    # -- elastic-fleet death clear ------------------------------------------
+    def clear_range(self, start: int, stop: int) -> int:
+        """Drop every active entry overlapping ``[start, stop]`` (1-based).
+
+        The churn semantics: when a worker dies, its cached subgradients are
+        no longer refreshable and are removed from 𝒴 at the next assignment.
+        Entries are subtracted from the running sum in *interval-start
+        ascending* order — the canonical float order every engine must
+        reproduce for bit-exactness — and the drop does NOT count as an
+        overlap eviction (``evictions`` is §5 telemetry, not churn).
+        Idempotent: clearing an already-empty range removes nothing.
+        Returns the number of entries removed.
+        """
+        lo, hi = self._overlapping(start, stop)
+        removed = self._entries[lo:hi]
+        for e in removed:  # slice is already start-ascending
+            self._sum -= np.asarray(e.value, dtype=np.float64)
+            self._covered -= e.width
+        del self._entries[lo:hi]
+        del self._starts[lo:hi]
+        return len(removed)
 
     # -- invariant checks (used by property tests) -------------------------
     def check_invariants(self) -> None:
@@ -526,6 +550,28 @@ class BatchedGradientCache:
                 self._covered[s_arr] += ev_stop[j_arr] - ev_start[j_arr] + 1
                 accepted[j_arr] = True
         return accepted
+
+    # -- elastic-fleet death clear ------------------------------------------
+    def clear_range(self, s: int, start: int, stop: int) -> int:
+        """Scenario-``s`` counterpart of :meth:`GradientCache.clear_range`.
+
+        Active slots overlapping ``[start, stop]`` are subtracted from
+        ``sums[s]`` in interval-start ascending order (the canonical churn
+        float order) and deactivated; ``evictions`` is untouched.  Returns
+        the number of entries removed.
+        """
+        n_active = len(self._intervals)
+        hit = np.flatnonzero(
+            (self._iters[:n_active, s] >= 0)
+            & (self._int_starts[:n_active] <= stop)
+            & (start <= self._int_stops[:n_active])
+        )
+        hit = hit[np.argsort(self._int_starts[hit], kind="stable")]
+        for slot in hit:
+            self._sums[s] -= self._values[slot, s]
+            self._covered[s] -= self._int_stops[slot] - self._int_starts[slot] + 1
+            self._iters[slot, s] = -1
+        return int(hit.size)
 
     # -- invariant checks (used by tests) ----------------------------------
     def check_invariants(self) -> None:

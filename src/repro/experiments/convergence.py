@@ -241,8 +241,42 @@ def run_convergence_batch(
     current_p = np.full((S, N), cfg.subpartitions, dtype=np.int64)
     n_i = n_local.astype(np.float64)
 
+    churn = traces.churn
+    alive: np.ndarray | None = None
+    if churn is not None:
+        prev_row = churn.row_at(np.zeros(S))
+        lb_since = np.asarray(churn.boundary_before(prev_row), dtype=np.float64)
+    else:
+        lb_since = None
+
     for t in range(T):
         assign = iter_end.copy()
+        if churn is not None:
+            # liveness sampled once per iteration at assignment time (same
+            # convention as the scalar simulator and replay_batch)
+            alive = churn.alive_at(assign)
+            rows_now = churn.row_at(assign)
+            changed = rows_now != prev_row
+            if changed.any() and cfg.load_balance:
+                # fleet changed: drop the contribution floor so the §6
+                # optimizer re-baselines, and re-profile from the boundary
+                h_min = np.where(changed, np.nan, h_min)
+                lb_since = np.where(
+                    changed, churn.boundary_before(rows_now), lb_since
+                )
+            prev_row = rows_now
+            # dead at assignment: the in-flight completion never happens —
+            # the worker goes idle with no stale event, no cache write, no
+            # profiler sample, no latency attribution
+            free_at = np.where(alive, free_at, assign[:, None])
+            if cache is not None:
+                # clear dead workers' §5 entries; np.nonzero is row-major so
+                # within each scenario the clears run in worker order ==
+                # interval-start order (the canonical churn float order)
+                for s, i in zip(*np.nonzero(~alive)):
+                    cache.clear_range(
+                        int(s), int(base_start[i]), int(base_stop[i])
+                    )
         idle = free_at <= assign[:, None]
 
         # -- Algorithm-2 alignment for pending repartitions (tentative: the
@@ -274,12 +308,22 @@ def run_convergence_batch(
         start = np.where(idle, assign[:, None], free_at)
         comm_d, comp_d = traces.task_latency_parts(draw_idx, start, cost)
         finish = task_finish_time(start, comp_d, comm_d)
-        tau_w = np.partition(finish, w_wait - 1, axis=1)[:, w_wait - 1]
+        if churn is None:
+            tau_w = np.partition(finish, w_wait - 1, axis=1)[:, w_wait - 1]
+        else:
+            # dead workers never contribute finish times; wait for
+            # min(w, #alive) of the living fleet (sort+gather picks the same
+            # element as partition, so all-alive stays bit-identical)
+            finish_eff = np.where(alive, finish, np.inf)
+            w_eff = np.minimum(w_wait, alive.sum(axis=1))
+            tau_w = np.sort(finish_eff, axis=1)[np.arange(S), w_eff - 1]
         if margin_eff > 0.0:
             deadline = margin_deadline(tau_w, assign, margin_eff)
         else:
             deadline = tau_w
         started = idle | (free_at <= deadline[:, None])
+        if churn is not None:
+            started &= alive
         fresh = started & (finish <= deadline[:, None])
         stale_done = (~idle) & (free_at <= deadline[:, None])
         fresh_counts[:, t] = fresh.sum(axis=1)
@@ -436,8 +480,14 @@ def run_convergence_batch(
         if cfg.load_balance:
             due = iter_end >= next_lb
             if due.any():
-                e_cm, v_cm, e_cp, v_cp, cnt = lbbuf.moments(iter_end)
-                ready = (cnt >= 1).all(axis=1)
+                e_cm, v_cm, e_cp, v_cp, cnt = lbbuf.moments(
+                    iter_end, since=lb_since
+                )
+                ready = cnt >= 1
+                if churn is not None:
+                    # dead workers can't produce samples — don't wait on them
+                    ready = ready | ~alive
+                ready = ready.all(axis=1)
                 next_lb = np.where(due, iter_end + cfg.lb_interval, next_lb)
                 act = due & ready
                 if act.any():
@@ -448,7 +498,7 @@ def run_convergence_batch(
                         cfg.margin,
                     )
                     p_new, h_min, _, publish = lb.update_batch(
-                        current_p, inputs, h_min, active=act
+                        current_p, inputs, h_min, active=act, alive=alive
                     )
                     for s in np.flatnonzero(publish):
                         changed = p_new[s] != current_p[s]

@@ -168,6 +168,10 @@ class _StaticSpec:
     lb_startup_delay: float = 0.0
     lb_margin: float = 0.0  # optimizer-input margin (= config.margin)
     lb_p0: int = 0  # the optimizer-facing initial p (config.subpartitions)
+    # elastic-fleet churn (traces carry a ChurnSchedule): time-varying
+    # slowdown rows + a per-iteration liveness mask.  False compiles the
+    # exact pre-churn body — the churn operands are then unused.
+    has_churn: bool = False
 
 
 def _possible_widths(n_local: int, p: int, full: bool) -> set:
@@ -185,6 +189,7 @@ def _static_spec(
     universe: SlotUniverse | None = None,
     tiled: bool = False,
     active_cap: int = 0,
+    has_churn: bool = False,
 ) -> _StaticSpec:
     n = problem.num_samples
     N = num_workers
@@ -249,6 +254,7 @@ def _static_spec(
         lb_startup_delay=float(cfg.lb_startup_delay),
         lb_margin=float(cfg.margin),
         lb_p0=int(cfg.subpartitions),
+        has_churn=bool(has_churn),
     )
 
 
@@ -654,6 +660,89 @@ def _apply_cache_events_tiled(
     )
 
 
+def _clear_dead_dense(slot_width, cache_state, clear, order_key):
+    """Drop dead workers' active §5 entries from a dense ``[S, E]`` cache.
+
+    The churn twin of ``GradientCache.clear_range``: ``clear`` marks the
+    entries to remove, and the running sums subtract them *sequentially*
+    in interval-start order — ``order_key`` is the slot index for the grid
+    cache (index order == start order there) and the universe start table
+    otherwise.  The host caches clear per dead worker in worker order
+    (disjoint worker-ordered base ranges) and walk each worker's entries
+    start-ascending, so one global start-ascending walk reproduces their
+    float grouping bit for bit.  Clearing is NOT an eviction: the counter
+    is untouched.  The value table is read only at loop-invariant
+    positions (it is not part of the fori_loop carry), so the TL002
+    per-rank-copy hazard of the event loops does not arise; the trip
+    count is the deepest per-scenario clear, zero in churn-free stretches.
+    """
+    st = cache_state
+    S, _E = clear.shape
+    vdim = st["values"].ndim - 2
+    s_idx = jnp.arange(S)
+    big = jnp.iinfo(jnp.int64).max
+    order = jnp.argsort(
+        jnp.where(clear, order_key[None, :], big), axis=1, stable=True
+    )
+    n_clear = jnp.max(jnp.sum(clear, axis=1))
+    values = st["values"]
+
+    def sub_body(j, sums):
+        e = order[:, j]
+        m = clear[s_idx, e]
+        return jnp.where(_bcast(m, vdim), sums - values[s_idx, e], sums)
+
+    out = dict(st)
+    out["sums"] = jax.lax.fori_loop(0, n_clear, sub_body, st["sums"])
+    out["covered"] = st["covered"] - jnp.sum(
+        jnp.where(clear, slot_width[None, :], 0), axis=1
+    )
+    out["iters"] = jnp.where(clear, jnp.int64(-1), st["iters"])
+    return out
+
+
+def _clear_dead_tiled(spec, slot_width, slot_starts, cache_state, dead):
+    """Dead-worker §5 clear for the tiled per-worker active-entry tables.
+
+    Same order contract as :func:`_clear_dead_dense`: active intervals are
+    disjoint within a worker and base ranges disjoint across workers, so
+    sorting every cleared entry by its interval start reproduces the host
+    cache's per-worker start-ascending walk globally.  Cleared rows keep
+    their stale ``slots`` value — deactivated entries (``iters == -1``)
+    are invisible to both the overlap test and the free-row search.
+    """
+    st = cache_state
+    iters = st["iters"]  # [S, N, A]
+    S, N, A = iters.shape
+    E = spec.num_slots
+    vdim = st["values"].ndim - 3
+    clear = dead[:, :, None] & (iters >= 0)
+    es_safe = jnp.clip(st["slots"], 0, E - 1)
+    clear_f = clear.reshape(S, N * A)
+    big = jnp.iinfo(jnp.int64).max
+    order = jnp.argsort(
+        jnp.where(clear_f, slot_starts[es_safe].reshape(S, N * A), big),
+        axis=1,
+        stable=True,
+    )
+    n_clear = jnp.max(jnp.sum(clear_f, axis=1))
+    s_idx = jnp.arange(S)
+    vals_f = st["values"].reshape((S, N * A) + st["values"].shape[3:])
+
+    def sub_body(j, sums):
+        e = order[:, j]
+        m = clear_f[s_idx, e]
+        return jnp.where(_bcast(m, vdim), sums - vals_f[s_idx, e], sums)
+
+    out = dict(st)
+    out["sums"] = jax.lax.fori_loop(0, n_clear, sub_body, st["sums"])
+    out["covered"] = st["covered"] - jnp.sum(
+        jnp.where(clear, slot_width[es_safe], 0), axis=(1, 2)
+    )
+    out["iters"] = jnp.where(clear, jnp.int64(-1), iters)
+    return out
+
+
 def _fresh_accumulate(kernels, fresh, finish, vals):
     """gd/sgd: sum fresh values per scenario in event-time order."""
     S, N = fresh.shape
@@ -689,6 +778,10 @@ def _run_scan(
     burst_factor,
     V0,
     eval_mask,
+    churn_times,
+    churn_slowdown,
+    churn_alive,
+    slot_owner,
     lb_key,
 ):
     """THE per-iteration scan body + driver, shared by every configuration.
@@ -748,6 +841,26 @@ def _run_scan(
     else:
         ev_worker = jnp.arange(N)
 
+    if spec.has_churn:
+        # boundary_before: the time that opened each churn row (-inf for
+        # row 0) — the §6 re-profiling cutoff after a fleet change
+        churn_bound = jnp.concatenate(
+            [jnp.full((1,), -jnp.inf, dtype=jnp.float64), churn_times]
+        )
+        if spec.uses_cache and spec.cache_mode != "tiled":
+            if spec.cache_mode == "grid":
+                # per-worker contiguous slot blocks: index order == start
+                # order, and the owner map is static
+                own = []
+                for i in range(N):
+                    own.extend([i] * spec.sub_p[i])
+                owner_of_slot = jnp.asarray(own, dtype=jnp.int64)
+                clear_key = jnp.arange(E, dtype=jnp.int64)
+            else:  # universe: slots are (worker, rung) blocks, so index
+                # order is NOT start order — use the universe tables
+                owner_of_slot = slot_owner
+                clear_key = slot_starts
+
     def burst_factor_at(start):
         if burst_start.shape[2] == 0:
             return jnp.ones_like(start)
@@ -763,6 +876,37 @@ def _run_scan(
         cache_state = carry["cache"]
         lat_matrix = carry["lat"]
         assign = carry["iter_end"]
+
+        if spec.has_churn:
+            # liveness sampled once per iteration at assignment time (the
+            # scalar simulator / host engine convention).  A worker dead at
+            # assignment has its in-flight completion discarded: it goes
+            # idle with no stale event, no cache write, no profiler sample.
+            rows_assign = jnp.searchsorted(
+                churn_times, assign, side="right"
+            ).astype(jnp.int64)
+            alive = churn_alive[rows_assign]
+            free_at = jnp.where(alive, free_at, assign[:, None])
+            if spec.load_balance:
+                changed = rows_assign != carry["prev_row"]
+                # fleet changed: drop the contribution floor so Algorithm 1
+                # re-baselines, and re-profile from the churn boundary
+                h_min_cur = jnp.where(changed, jnp.nan, carry["h_min"])
+                lb_since = jnp.where(
+                    changed, churn_bound[rows_assign], carry["lb_since"]
+                )
+            if spec.uses_cache:
+                if spec.cache_mode == "tiled":
+                    cache_state = _clear_dead_tiled(
+                        spec, slot_width, slot_starts, cache_state, ~alive
+                    )
+                else:
+                    clear = (~alive)[:, owner_of_slot] & (
+                        cache_state["iters"] >= 0
+                    )
+                    cache_state = _clear_dead_dense(
+                        slot_width, cache_state, clear, clear_key
+                    )
         idle = free_at <= assign[:, None]
 
         # -- the (lo, hi, slot) source --------------------------------------
@@ -800,18 +944,37 @@ def _run_scan(
         # guarded_comp_latency carries the FMA seam (tracelint TL001): the
         # jnp.maximum(..., 0.0) inside it keeps LLVM from contracting the
         # last §3 multiply into the task_finish_time add below.
-        comp_d = guarded_comp_latency(
-            unit, cost, slowdown[None, :], burst_factor_at(start)
-        )
+        if spec.has_churn:
+            # per-task slowdown row at the task's START time (the traced
+            # twin of ChurnSchedule.slowdown_at)
+            sd = churn_slowdown[
+                jnp.searchsorted(churn_times, start, side="right"), w_idx2
+            ]
+        else:
+            sd = slowdown[None, :]
+        comp_d = guarded_comp_latency(unit, cost, sd, burst_factor_at(start))
 
         # -- event resolution (the shared method-semantics helpers) ---------
         finish = task_finish_time(start, comp_d, comm_d)
-        tau_w = jnp.sort(finish, axis=1)[:, spec.w_wait - 1]
+        if spec.has_churn:
+            # dead workers never contribute finish times; wait for
+            # min(w, #alive) of the living fleet (sort+gather picks the
+            # same element as the static top-w, so all-alive churn stays
+            # bit-identical to the churn-free body)
+            finish_eff = jnp.where(alive, finish, jnp.inf)
+            w_eff = jnp.minimum(spec.w_wait, jnp.sum(alive, axis=1))
+            tau_w = jnp.take_along_axis(
+                jnp.sort(finish_eff, axis=1), w_eff[:, None] - 1, axis=1
+            )[:, 0]
+        else:
+            tau_w = jnp.sort(finish, axis=1)[:, spec.w_wait - 1]
         if spec.margin > 0.0:
             deadline = margin_deadline(tau_w, assign, spec.margin)
         else:
             deadline = tau_w
         started = idle | (free_at <= deadline[:, None])
+        if spec.has_churn:
+            started = started & alive
         fresh = started & (finish <= deadline[:, None])
         stale_done = (~idle) & (free_at <= deadline[:, None])
         fresh_cnt = fresh.sum(axis=1)
@@ -977,19 +1140,27 @@ def _run_scan(
         # -- §6 background load balancer (Algorithm 1, jittable) ------------
         if spec.load_balance:
             current_p = carry["current_p"]
-            h_min = carry["h_min"]
+            h_min = h_min_cur if spec.has_churn else carry["h_min"]
             next_lb = carry["next_lb"]
             pending_p = out["pending_p"]
             due = iter_end_new >= next_lb
             out["prof"] = (prof_t, prof_comm, prof_comp, prof_valid)
+            if spec.has_churn:
+                out["prev_row"] = rows_assign
+                out["lb_since"] = lb_since
 
             def lb_block(args):
                 pending_p, current_p, h_min, next_lb = args
                 e_cm, v_cm, e_cp, v_cp, cnt = jlb.window_moments(
                     prof_t, prof_comm, prof_comp, prof_valid, iter_end_new,
                     jlb.PROFILER_WINDOW,
+                    since=lb_since if spec.has_churn else None,
                 )
-                ready = jnp.all(cnt >= 1, axis=1)
+                if spec.has_churn:
+                    # dead workers can't produce samples — don't wait on them
+                    ready = jnp.all((cnt >= 1) | ~alive, axis=1)
+                else:
+                    ready = jnp.all(cnt >= 1, axis=1)
                 next_lb2 = jnp.where(due, iter_end_new + spec.lb_interval, next_lb)
                 act = due & ready
 
@@ -1008,6 +1179,7 @@ def _run_scan(
                         w=spec.w_wait,
                         margin=spec.lb_margin,
                         key=lb_key,
+                        alive=alive if spec.has_churn else None,
                     )
                     changed = publish[:, None] & (p_new != current_p)
                     return (
@@ -1101,6 +1273,11 @@ def _run_scan(
             (S,), spec.lb_startup_delay, dtype=jnp.float64
         )
         carry0["flight_assigned"] = jnp.zeros((S, N))
+        if spec.has_churn:
+            # churn times are strictly positive, so row 0 is active at t=0
+            # and its opening boundary is -inf (the static `since`)
+            carry0["prev_row"] = jnp.zeros((S,), dtype=jnp.int64)
+            carry0["lb_since"] = jnp.full((S,), -jnp.inf, dtype=jnp.float64)
         carry0["prof"] = (
             jnp.zeros((S, N, T)),
             jnp.zeros((S, N, T)),
@@ -1155,8 +1332,8 @@ def _scan_jit_for(kernels: FusedKernels, mesh=None):
 
             repl, data = P(), P("data")
             in_specs = (repl,) * 5 + (
-                data, data, repl, data, data, data, data, repl, repl,
-            )
+                data, data, repl, data, data, data, data, repl,
+            ) + (repl,) * 5  # churn tables, slot owners, PRNG key
             out_specs = (data,) * 7
 
             def sharded(kernels_, spec_, *arrays):
@@ -1342,6 +1519,7 @@ def prepare_scan_inputs(
         universe=universe,
         tiled=tiled,
         active_cap=active_cap,
+        has_churn=traces.churn is not None,
     )
     kernels = problem.fused_kernels()
     V0 = np.repeat(problem.init(seed)[None], S, axis=0)
@@ -1382,6 +1560,21 @@ def prepare_scan_inputs(
             slot_starts = jnp.zeros((1,), dtype=jnp.int64)
             slot_stops = jnp.zeros((1,), dtype=jnp.int64)
             overlap_idx = jnp.full((1, 1), -1, dtype=jnp.int64)
+        ch = traces.churn
+        if ch is not None:
+            churn_times = jnp.asarray(ch.times, dtype=jnp.float64)
+            churn_slowdown = jnp.asarray(ch.slowdown, dtype=jnp.float64)
+            churn_alive = jnp.asarray(ch.alive, dtype=bool)
+        else:  # unused by the traced body (spec.has_churn gates it out);
+            # fixed operand count keeps one calling convention
+            churn_times = jnp.zeros((0,), dtype=jnp.float64)
+            churn_slowdown = jnp.zeros((0, traces.num_workers), jnp.float64)
+            churn_alive = jnp.zeros((0, traces.num_workers), dtype=bool)
+        slot_owner = (
+            jnp.asarray(universe.owners)
+            if universe is not None
+            else jnp.zeros((1,), dtype=jnp.int64)
+        )
         scan_args = (
             slot_table,
             slot_width,
@@ -1389,6 +1582,10 @@ def prepare_scan_inputs(
             slot_stops,
             overlap_idx,
             *trace_args,
+            churn_times,
+            churn_slowdown,
+            churn_alive,
+            slot_owner,
             jax.random.PRNGKey(seed),
         )
     return spec, kernels, scan_args

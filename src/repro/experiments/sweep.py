@@ -89,6 +89,7 @@ def replay_batch(
             f"traces hold {K} draws/worker but {num_iterations} iterations requested"
         )
     loads_b = _broadcast_loads(loads, S, N)
+    churn = traces.churn
 
     free_at = np.zeros((S, N))  # F_i: when each worker's current task finishes
     iter_end = np.zeros(S)  # E: last processed event of the previous iteration
@@ -104,6 +105,12 @@ def replay_batch(
 
     for t in range(num_iterations):
         assign = iter_end  # all idle workers start now; busy workers queue
+        if churn is not None:
+            # liveness sampled once per iteration at assignment time: a dead
+            # worker discards its in-flight task (no stale event, no draw
+            # consumed) and a revived one re-enters idle at this assign
+            alive = churn.alive_at(assign)
+            free_at = np.where(alive, free_at, assign[:, None])
         idle = free_at <= assign[:, None]
         start = np.where(idle, assign[:, None], free_at)
         comm_d, comp_d = traces.task_latency_parts(draw_idx, start, loads_b)
@@ -111,7 +118,16 @@ def replay_batch(
 
         # w-th fresh arrival: any busy worker contributing to the first w has
         # free_at < finish <= tau_w, i.e. its queued task provably started.
-        tau_w = np.partition(finish, w - 1, axis=1)[:, w - 1]
+        if churn is None:
+            tau_w = np.partition(finish, w - 1, axis=1)[:, w - 1]
+        else:
+            # dead workers never contribute finish times; the order statistic
+            # waits for min(w, #alive) of the living fleet.  sort+gather picks
+            # the same exact element as partition, so the all-alive schedule
+            # stays bit-identical to the static path.
+            finish_eff = np.where(alive, finish, np.inf)
+            w_eff = np.minimum(w, alive.sum(axis=1))
+            tau_w = np.sort(finish_eff, axis=1)[np.arange(S), w_eff - 1]
         if margin > 0.0:
             # paper §5.1: keep collecting `margin` longer than the time the
             # first w fresh results took this iteration
@@ -119,6 +135,8 @@ def replay_batch(
         else:
             deadline = tau_w
         started = idle | (free_at <= deadline[:, None])
+        if churn is not None:
+            started &= alive
         fresh = started & (finish <= deadline[:, None])
         fresh_counts[:, t] = fresh.sum(axis=1)
         part_accum += fresh
@@ -236,7 +254,7 @@ def scalar_reference(
         loads_arr,
         latency_provider=traces.scalar_latency_provider(scenario, loads),
     )
-    return sim.run(w, num_iterations, margin=margin)
+    return sim.run(w, num_iterations, margin=margin, churn=traces.churn)
 
 
 def scalar_sync_reference(

@@ -62,16 +62,29 @@ class EventDrivenSimulator:
     def num_workers(self) -> int:
         return self.cluster.num_workers if self.cluster is not None else len(self.loads)
 
-    def run(self, w: int, num_iterations: int, *, margin: float = 0.0) -> SimResult:
+    def run(
+        self,
+        w: int,
+        num_iterations: int,
+        *,
+        margin: float = 0.0,
+        churn=None,
+    ) -> SimResult:
+        """``churn`` (a :class:`~repro.latency.model.ChurnSchedule`) applies
+        the elastic-fleet semantics: liveness is sampled at each iteration's
+        assignment time, dead workers discard in-flight tasks (the heap event
+        is invalidated via a per-worker generation counter) and the wait uses
+        ``w_eff = min(w, #alive)``."""
         n = self.num_workers
         if not (1 <= w <= n):
             raise ValueError(f"w={w} not in 1..{n}")
         rng = self.cluster.rng if self.cluster is not None else None
         now = 0.0
-        # (finish_time, worker, iteration_of_task)
+        # (finish_time, worker, iteration_of_task, generation)
         heap: list = []
         busy_until = np.zeros(n)  # next idle time per worker
         queued_iter = -np.ones(n, dtype=np.int64)  # iteration idx of queued task
+        gen = np.zeros(n, dtype=np.int64)  # bumped to discard in-flight events
         iteration_times = np.zeros(num_iterations)
         fresh_counts = np.zeros(num_iterations, dtype=np.int64)
         fresh_mask_accum = np.zeros(n, dtype=np.int64)
@@ -87,44 +100,61 @@ class EventDrivenSimulator:
             ) * self.loads[i] * wk.slowdown
 
         for t in range(num_iterations):
+            if churn is None:
+                alive = None
+                w_eff = w
+            else:
+                alive = churn.alive_at(now)
+                for i in range(n):
+                    if not alive[i] and (busy_until[i] > now or queued_iter[i] >= 0):
+                        # dead at assignment: discard the in-flight task and
+                        # the queued one — its completion never happens
+                        gen[i] += 1
+                        busy_until[i] = now
+                        queued_iter[i] = -1
+                w_eff = min(w, int(alive.sum()))
             # assign a task for iteration t to every worker: idle workers start
             # immediately; busy workers get their length-1 queue overwritten.
             for i in range(n):
+                if alive is not None and not alive[i]:
+                    continue
                 if busy_until[i] <= now:
                     fin = now + sample_latency(i, now)
                     busy_until[i] = fin
-                    heapq.heappush(heap, (fin, i, t))
+                    heapq.heappush(heap, (fin, i, t, int(gen[i])))
                 else:
                     queued_iter[i] = t
             fresh = 0
             fresh_this_iter = np.zeros(n, dtype=bool)
             deadline = np.inf
             iter_start = now
-            while fresh < w or (heap and heap[0][0] <= deadline):
+            while fresh < w_eff or (heap and heap[0][0] <= deadline):
                 if not heap:
                     break
-                fin, i, task_iter = heapq.heappop(heap)
+                fin, i, task_iter, g = heapq.heappop(heap)
+                if g != gen[i]:
+                    continue  # discarded by a death event; must not touch `now`
                 if fin > deadline:
                     # margin expired: put the event back and stop collecting
-                    heapq.heappush(heap, (fin, i, task_iter))
+                    heapq.heappush(heap, (fin, i, task_iter, g))
                     break
                 now = fin
                 # worker i becomes idle; start its queued task if any
                 if queued_iter[i] >= 0:
                     nfin = now + sample_latency(i, now)
                     busy_until[i] = nfin
-                    heapq.heappush(heap, (nfin, i, int(queued_iter[i])))
+                    heapq.heappush(heap, (nfin, i, int(queued_iter[i]), int(gen[i])))
                     queued_iter[i] = -1
                 else:
                     busy_until[i] = now
                 if task_iter == t:
                     fresh += 1
                     fresh_this_iter[i] = True
-                    if fresh == w and margin > 0.0:
+                    if fresh == w_eff and margin > 0.0:
                         # paper §5.1: wait `margin` (e.g. 2%) longer than this
                         # iteration took so far, collecting stragglers.
                         deadline = now + margin * (now - iter_start)
-                    elif fresh == w:
+                    elif fresh == w_eff:
                         break
             iteration_times[t] = now
             fresh_counts[t] = fresh

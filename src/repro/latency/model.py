@@ -279,6 +279,152 @@ def clear_slowdowns(cluster: ClusterLatencyModel, worker_indices) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Elastic-fleet churn: time-varying slowdowns and worker death/join
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ChurnSchedule:
+    """Piecewise-constant fleet state over time: slowdowns and liveness.
+
+    ``times`` ([C], strictly increasing, all > 0) are the change boundaries,
+    shared across scenarios; row ``r`` of ``slowdown`` / ``alive``
+    ([C+1, N]) applies on ``[times[r-1], times[r])`` (row 0 before the
+    first boundary).  When a :class:`FleetTraces` carries a schedule, its
+    slowdown rows *replace* the static ``traces.slowdown`` field — the
+    row is looked up at each task's **start** time, the same query time
+    convention as the §3.2 burst factor.
+
+    Liveness is sampled once per iteration at assignment time: a worker
+    dead at the iteration's assign discards any in-flight task (no stale
+    completion, no cache write, no profiler sample, no latency
+    attribution), starts nothing, consumes no draws, and has its §5 cache
+    entries cleared; the wait-for-w order statistic uses
+    ``w_eff = min(w, #alive)``.  A revived or late-joining worker re-enters
+    idle with empty cache slots at its next assign.  Every row must keep at
+    least one worker alive.
+
+    A *trivial* schedule (``ChurnSchedule.static(traces.slowdown)``) gathers
+    the same float64 slowdowns through the same
+    :func:`comp_latency_expr`, so replay through the churn-aware paths is
+    bit-identical to the static paths (pinned in ``tests/test_churn.py``).
+    """
+
+    times: np.ndarray  # [C] float64, strictly increasing, > 0
+    slowdown: np.ndarray  # [C+1, N] float64
+    alive: np.ndarray  # [C+1, N] bool
+
+    def __post_init__(self):
+        self.times = np.asarray(self.times, dtype=np.float64).reshape(-1)
+        self.slowdown = np.asarray(self.slowdown, dtype=np.float64)
+        self.alive = np.asarray(self.alive, dtype=bool)
+        C = self.times.shape[0]
+        if self.slowdown.ndim != 2 or self.alive.shape != self.slowdown.shape:
+            raise ValueError(
+                "slowdown and alive must both be [C+1, N] with matching shapes"
+            )
+        if self.slowdown.shape[0] != C + 1:
+            raise ValueError(
+                f"{C} boundaries need {C + 1} state rows, "
+                f"got {self.slowdown.shape[0]}"
+            )
+        if C and (not np.all(np.diff(self.times) > 0) or self.times[0] <= 0.0):
+            raise ValueError("churn times must be strictly increasing and > 0")
+        if not np.all(np.isfinite(self.slowdown)) or np.any(self.slowdown <= 0):
+            raise ValueError("churn slowdowns must be finite and > 0")
+        if not np.all(self.alive.any(axis=1)):
+            raise ValueError("every churn row must keep at least one worker alive")
+
+    @property
+    def num_workers(self) -> int:
+        return self.slowdown.shape[1]
+
+    @classmethod
+    def static(cls, slowdown) -> "ChurnSchedule":
+        """The trivial all-alive schedule replaying a static slowdown field."""
+        sd = np.asarray(slowdown, dtype=np.float64).reshape(1, -1)
+        return cls(
+            times=np.zeros(0), slowdown=sd, alive=np.ones_like(sd, dtype=bool)
+        )
+
+    def row_at(self, t):
+        """Row index active at time(s) ``t`` (scalar or array)."""
+        return np.searchsorted(self.times, t, side="right")
+
+    def slowdown_at(self, start: np.ndarray) -> np.ndarray:
+        """Per-task slowdown at start times ``start`` ([S, N] -> [S, N])."""
+        rows = self.row_at(np.asarray(start, dtype=np.float64))
+        return self.slowdown[rows, np.arange(self.slowdown.shape[1])[None, :]]
+
+    def alive_at(self, t) -> np.ndarray:
+        """Liveness row(s) at time(s) ``t`` (scalar -> [N], [S] -> [S, N])."""
+        return self.alive[self.row_at(t)]
+
+    def boundary_before(self, row) -> np.ndarray:
+        """Time of the boundary that opened ``row`` (-inf for row 0).
+
+        This is the ``since`` cutoff the §6 profiler re-reads its window
+        from after a churn event — samples recorded under the previous
+        fleet state are excluded from the moments.
+        """
+        row = np.asarray(row)
+        padded = np.concatenate(([-np.inf], self.times))
+        return padded[row]
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowdownRemoval:
+    """Structured §7.2 timed event: clear some workers' slowdown at ``time``.
+
+    Callable on a :class:`ClusterLatencyModel` (the live-sampling path), and
+    convertible to a :class:`ChurnSchedule` row flip (the trace-replay
+    path) — which is what lets
+    :class:`~repro.cluster.simulator.TrainingSimulator` replay the paper's
+    artificial-slowdown scenario from pre-sampled traces instead of
+    refusing it.
+    """
+
+    time: float
+    workers: tuple  # 0-based worker indices
+
+    def __call__(self, cluster: "ClusterLatencyModel") -> None:
+        clear_slowdowns(cluster, self.workers)
+
+
+def churn_from_removals(
+    slowdown: np.ndarray, removals: Sequence[SlowdownRemoval]
+) -> ChurnSchedule:
+    """Build the churn schedule equivalent to applying ``removals`` to a
+    fleet with static per-worker ``slowdown`` (all workers alive)."""
+    sd = np.asarray(slowdown, dtype=np.float64)
+    events = sorted(removals, key=lambda e: e.time)
+    times = np.array([e.time for e in events], dtype=np.float64)
+    rows = [sd.copy()]
+    for ev in events:
+        nxt = rows[-1].copy()
+        nxt[list(ev.workers)] = 1.0
+        rows.append(nxt)
+    sd_rows = np.stack(rows)
+    return ChurnSchedule(
+        times=times, slowdown=sd_rows, alive=np.ones_like(sd_rows, dtype=bool)
+    )
+
+
+def paper_artificial_churn(
+    num_workers: int = 49, *, remove_at: float = 60.0, num_removed: int = 10
+) -> ChurnSchedule:
+    """The §7.2 artificial scenario as a churn schedule: worker ``i``
+    (1-based) slowed by ``1 + (i/N)*0.4``, the last ``num_removed`` workers'
+    slowdown removed at ``remove_at`` (paper: after one minute)."""
+    sd = 1.0 + (np.arange(1, num_workers + 1) / num_workers) * 0.4
+    removal = SlowdownRemoval(
+        time=remove_at,
+        workers=tuple(range(num_workers - num_removed, num_workers)),
+    )
+    return churn_from_removals(sd, [removal])
+
+
+# ---------------------------------------------------------------------------
 # Batched fleet sampling (scenario sweeps, §7)
 # ---------------------------------------------------------------------------
 
@@ -310,6 +456,10 @@ class FleetTraces:
     burst_end: np.ndarray  # [S, N, M]
     burst_factor: np.ndarray  # [S, N, M]
     seed: int = 0
+    #: optional elastic-fleet schedule; when set, its slowdown rows replace
+    #: the static ``slowdown`` field (looked up at task start time) and its
+    #: liveness rows drive the per-iteration worker mask in every engine
+    churn: ChurnSchedule | None = None
 
     @property
     def num_scenarios(self) -> int:
@@ -370,10 +520,15 @@ class FleetTraces:
         n_idx = np.arange(N)[None, :]
         kk = k
         factor = self.burst_factor_at(start)
+        slowdown = (
+            self.slowdown[None, :]
+            if self.churn is None
+            else self.churn.slowdown_at(start)
+        )
         comp = comp_latency_expr(
             self.comp_unit[s_idx, n_idx, kk],
             np.asarray(loads, dtype=np.float64),
-            self.slowdown[None, :],
+            slowdown,
             factor,
         )
         return self.comm[s_idx, n_idx, kk], comp
@@ -404,8 +559,12 @@ class FleetTraces:
                 f"(horizon {self.horizon}); sample a longer fleet"
             )
         factor = self._scalar_burst_factor(scenario, worker, start)
+        if self.churn is None:
+            slowdown = self.slowdown[worker]
+        else:
+            slowdown = self.churn.slowdown[int(self.churn.row_at(start)), worker]
         comp = comp_latency_expr(
-            self.comp_unit[scenario, worker, k], load, self.slowdown[worker], factor
+            self.comp_unit[scenario, worker, k], load, slowdown, factor
         )
         return self.comm[scenario, worker, k], comp
 
@@ -428,6 +587,20 @@ class FleetTraces:
             return comm + comp
 
         return provider
+
+    def with_churn(self, churn: ChurnSchedule | None) -> "FleetTraces":
+        """Copy of these traces carrying ``churn`` (None clears it).
+
+        The schedule's slowdown rows replace the static ``slowdown`` field
+        for every latency lookup, so a trivial schedule built via
+        ``ChurnSchedule.static(traces.slowdown)`` replays bit-identically.
+        """
+        if churn is not None and churn.num_workers != self.num_workers:
+            raise ValueError(
+                f"churn schedule has {churn.num_workers} workers "
+                f"but the traces have {self.num_workers}"
+            )
+        return dataclasses.replace(self, churn=churn)
 
 
 def sample_fleet(

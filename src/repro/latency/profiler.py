@@ -102,21 +102,34 @@ class MomentBuffer:
         self.comp[s, workers, titers] = compute
         self.valid[s, workers, titers] = True
 
-    def moments(self, now: np.ndarray, *, window: float | None = None):
+    def moments(
+        self,
+        now: np.ndarray,
+        *,
+        window: float | None = None,
+        since: np.ndarray | None = None,
+    ):
         """(e_comm, v_comm, e_comp, v_comp, counts) at per-scenario ``now``.
 
         Delegates to the shared jitted window-moments kernel; a worker
         with zero in-window samples reports count 0 (callers gate on it
-        like ``LatencyProfiler.moment_arrays`` returning None)."""
+        like ``LatencyProfiler.moment_arrays`` returning None).  ``since``
+        (per-scenario, optional) drops samples recorded before it — the
+        churn re-profiling cutoff (see
+        :func:`repro.lb.jit_optimizer.window_moments`)."""
         from jax.experimental import enable_x64
 
         from repro.lb.jit_optimizer import PROFILER_WINDOW, _window_moments_jitted
 
         fn = _window_moments_jitted(
-            float(PROFILER_WINDOW if window is None else window)
+            float(PROFILER_WINDOW if window is None else window),
+            with_since=since is not None,
         )
+        args = (self.t_rec, self.comm, self.comp, self.valid, np.asarray(now))
+        if since is not None:
+            args = args + (np.asarray(since),)
         with enable_x64():
-            out = fn(self.t_rec, self.comm, self.comp, self.valid, np.asarray(now))
+            out = fn(*args)
         e_comm, v_comm, e_comp, v_comp, cnt = (np.asarray(a) for a in out)
         return e_comm, v_comm, e_comp, v_comp, cnt
 

@@ -63,7 +63,7 @@ PROFILER_WINDOW = 10.0
 # ---------------------------------------------------------------------------
 
 
-def window_moments(t_rec, comm, comp, valid, now, window):
+def window_moments(t_rec, comm, comp, valid, now, window, since=None):
     """Moving-window mean/variance per worker (the §6.1 profiler view).
 
     ``t_rec``/``comm``/``comp``/``valid`` are ``[..., N, T]`` buffers
@@ -71,11 +71,18 @@ def window_moments(t_rec, comm, comp, valid, now, window):
     written when the task's completion is observed); ``now`` is ``[...]``
     per scenario.  A sample is in-window iff ``t_rec >= now - window`` —
     identical to the deque profiler's front eviction because per-worker
-    completion times are monotone in the task's iteration.  Returns
-    ``(e_comm, v_comm, e_comp, v_comp, counts)`` with the single-sample
-    variance floored to 1e-12 like ``LatencyProfiler.stats``.
+    completion times are monotone in the task's iteration.  ``since``
+    (``[...]`` per scenario, optional) additionally drops samples recorded
+    before it — the churn re-profiling cutoff: after a fleet change the
+    optimizer must not mix moments from the previous regime, so engines
+    pass the latest churn-boundary time.  ``since = -inf`` is the static
+    behaviour.  Returns ``(e_comm, v_comm, e_comp, v_comp, counts)`` with
+    the single-sample variance floored to 1e-12 like
+    ``LatencyProfiler.stats``.
     """
     cutoff = now[..., None, None] - window
+    if since is not None:
+        cutoff = jnp.maximum(cutoff, since[..., None, None])
     in_win = valid & (t_rec >= cutoff)
     cnt = jnp.sum(in_win, axis=-1)
     cnt_f = jnp.maximum(cnt, 1).astype(comm.dtype)
@@ -147,17 +154,24 @@ def _draw_what_if(key, e_y, v_y, e_z, v_z, K: int):
     return comm, comp
 
 
-def _what_if_replay(comm, comp, w: int, K: int, margin: float):
+def _what_if_replay(comm, comp, w: int, K: int, margin: float, alive=None):
     """Participation of each worker over K what-if §4.2 iterations.
 
     The same idle/busy + w-th order statistic + margin-deadline algebra as
     :func:`repro.experiments.sweep.replay_batch`, traced in jnp (no
-    bursts, unit loads — the what-if draws already carry the load)."""
+    bursts, unit loads — the what-if draws already carry the load).
+    ``alive`` ([S, N] bool, optional) is the churn liveness mask at the
+    optimizer call: dead workers' draws arrive pre-masked to +inf (see
+    :func:`estimate_h`) so their participation is 0, and the order
+    statistic waits for ``w_eff = min(w, #alive)`` of the living fleet —
+    the what-if mirror of the engines' churn algebra."""
     # deferred: repro.cluster.simulator imports repro.lb.optimizer, which
     # imports this module — a top-level import would be circular
     from repro.cluster.simulator import margin_deadline, task_finish_time
 
     S, N, _ = comm.shape
+    if alive is not None:
+        w_eff = jnp.minimum(w, jnp.sum(alive, axis=1)).astype(jnp.int64)
 
     def body(carry, _):
         free_at, iter_end, draw_idx, part = carry
@@ -166,7 +180,12 @@ def _what_if_replay(comm, comp, w: int, K: int, margin: float):
         comm_d = jnp.take_along_axis(comm, draw_idx[:, :, None], axis=2)[:, :, 0]
         comp_d = jnp.take_along_axis(comp, draw_idx[:, :, None], axis=2)[:, :, 0]
         finish = task_finish_time(start, comp_d, comm_d)
-        tau_w = jnp.sort(finish, axis=1)[:, w - 1]
+        if alive is None:
+            tau_w = jnp.sort(finish, axis=1)[:, w - 1]
+        else:
+            tau_w = jnp.take_along_axis(
+                jnp.sort(finish, axis=1), w_eff[:, None] - 1, axis=1
+            )[:, 0]
         if margin > 0.0:
             deadline = margin_deadline(tau_w, iter_end, margin)
         else:
@@ -195,16 +214,26 @@ def _what_if_replay(comm, comp, w: int, K: int, margin: float):
 
 def estimate_h(
     e_comm, v_comm, e_comp, v_comp, n_j, p_cur, p_new, *, w: int, margin: float,
-    key, K: int,
+    key, K: int, alive=None,
 ):
-    """h(p') for every scenario via linearised what-if trace replay."""
+    """h(p') for every scenario via linearised what-if trace replay.
+
+    With ``alive`` ([S, N] bool), dead workers' what-if comm draws are
+    masked to +inf before the replay: they never finish, contribute u = 0,
+    and the order statistic waits for ``w_eff`` of the living fleet.  The
+    denominator keeps the full dataset size n — a death lowers h (its data
+    really is uncovered), which is exactly the signal Algorithm 1 reacts
+    to.  An all-True mask is value-identical to ``alive=None``.
+    """
     e_y = jnp.maximum(e_comm, 1e-12)
     v_y = jnp.maximum(v_comm, 1e-18)
     ratio = p_cur / p_new
     e_z = jnp.maximum(e_comp * ratio, 1e-12)
     v_z = jnp.maximum(v_comp * ratio * ratio, 1e-18)
     comm, comp = _draw_what_if(key, e_y, v_y, e_z, v_z, K)
-    u = _what_if_replay(comm, comp, w, K, margin)
+    if alive is not None:
+        comm = jnp.where(alive[:, :, None], comm, jnp.inf)
+    u = _what_if_replay(comm, comp, w, K, margin, alive=alive)
     n_tot = jnp.sum(n_j, axis=1)
     return jnp.sum(u * n_j / (p_new * n_tot[:, None]), axis=1)
 
@@ -250,7 +279,7 @@ def algorithm1(
     p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active, *,
     ladder: tuple[int, ...], w: int, margin: float, key,
     K: int = SIM_ITERATIONS, h_tol: float = H_TOLERANCE,
-    max_rounds: int = MAX_ROUNDS,
+    max_rounds: int = MAX_ROUNDS, alive=None,
 ):
     """Equalize / restore-contribution / spend-slack (paper Algorithm 1).
 
@@ -260,6 +289,13 @@ def algorithm1(
     indices, ``p_new`` their float values, and ``last_h`` is h at the
     returned vector (the slack phase backs violating steps out together
     with their h, so the report always describes the returned p').
+
+    ``alive`` ([S, N] bool, optional) restricts the hill-climb to the
+    living fleet: dead workers are excluded from the equalize target and
+    the restore/slack argmax/argmin (±inf masks), their p is frozen at
+    ``p_cur``, and the what-if h treats them as never finishing.  An
+    all-True mask takes the same float path as ``alive=None``; passing
+    ``None`` keeps the traced jaxpr byte-identical to the static one.
     """
     S, N = p_cur.shape
     rows = jnp.arange(S)
@@ -268,8 +304,11 @@ def algorithm1(
     def h_of(p_new):
         return estimate_h(
             e_comm, v_comm, e_comp, v_comp, n_j, p_cur, p_new,
-            w=w, margin=margin, key=key, K=K,
+            w=w, margin=margin, key=key, K=K, alive=alive,
         )
+
+    def only_alive(x):  # mask for max/argmax reductions
+        return x if alive is None else jnp.where(alive, x, -jnp.inf)
 
     # h_min = h(p_0) where not yet established (NaN)
     unset = jnp.isnan(h_min) & active
@@ -280,7 +319,7 @@ def algorithm1(
 
     # --- equalize total latency against the slowest worker ---
     e_x = e_total(e_comm, e_comp, p_cur, p_cur)
-    slowest = jnp.argmax(e_x, axis=1)
+    slowest = jnp.argmax(only_alive(e_x), axis=1)
     target = (
         e_comm[rows, slowest]
         + e_comp[rows, slowest] * p_cur[rows, slowest] / p_cur[rows, slowest]
@@ -292,6 +331,9 @@ def algorithm1(
     cand = jnp.where(denom <= 0, ladder_value(eff, idx_cap), balanced)
     cand = jnp.clip(cand, 1.0, n_j)
     idx = snap_to_ladder(eff, idx_cap, cand)
+    if alive is not None:
+        # dead workers keep their current rung (their p is frozen)
+        idx = jnp.where(alive, idx, snap_to_ladder(eff, idx_cap, p_cur))
     h = h_of(ladder_value(eff, idx))
 
     # --- restore contribution: give the fastest workers more work ---
@@ -303,6 +345,8 @@ def algorithm1(
         idx, h, act, r = st
         e_now = e_total(e_comm, e_comp, p_cur, ladder_value(eff, idx))
         valid = idx > 0  # one rung down = strictly more work per task
+        if alive is not None:
+            valid = valid & alive
         order = jnp.argsort(e_now, axis=1, stable=True)
         valid_ord = jnp.take_along_axis(valid, order, axis=1)
         movable = valid_ord.any(axis=1)
@@ -325,7 +369,7 @@ def algorithm1(
     def slack_body(st):
         idx, h, act, r = st
         e_now = e_total(e_comm, e_comp, p_cur, ladder_value(eff, idx))
-        slowest = jnp.argmax(e_now, axis=1)
+        slowest = jnp.argmax(only_alive(e_now), axis=1)
         act = act & (idx[rows, slowest] < idx_cap[rows, slowest])
         prev_idx, prev_h = idx, h
         idx = idx.at[rows, slowest].add(jnp.where(act, 1, 0))
@@ -344,10 +388,24 @@ def algorithm1(
     return idx, ladder_value(eff, idx), h_min, h
 
 
-def should_publish(p_cur, p_new, e_comm, e_comp, threshold: float):
-    """[S] bool: Eq.-(7) objective improves by > threshold (paper §6.3)."""
-    cur = objective(e_total(e_comm, e_comp, p_cur, p_cur))
-    new = objective(e_total(e_comm, e_comp, p_cur, p_new))
+def should_publish(p_cur, p_new, e_comm, e_comp, threshold: float, alive=None):
+    """[S] bool: Eq.-(7) objective improves by > threshold (paper §6.3).
+
+    With ``alive``, the max/min latency ratio is taken over the living
+    fleet only — a dead worker's (frozen) expected latency must not gate
+    publication for the workers that can still act on it."""
+    ex_cur = e_total(e_comm, e_comp, p_cur, p_cur)
+    ex_new = e_total(e_comm, e_comp, p_cur, p_new)
+    if alive is not None:
+        hi = jnp.where(alive, ex_cur, -jnp.inf)
+        lo = jnp.where(alive, ex_cur, jnp.inf)
+        cur = hi.max(axis=-1) / jnp.maximum(lo.min(axis=-1), 1e-12)
+        hi = jnp.where(alive, ex_new, -jnp.inf)
+        lo = jnp.where(alive, ex_new, jnp.inf)
+        new = hi.max(axis=-1) / jnp.maximum(lo.min(axis=-1), 1e-12)
+    else:
+        cur = objective(ex_cur)
+        new = objective(ex_new)
     return new < cur * (1.0 - threshold)
 
 
@@ -356,22 +414,26 @@ def lb_update(
     ladder: tuple[int, ...], w: int, margin: float, key,
     K: int = SIM_ITERATIONS, h_tol: float = H_TOLERANCE,
     max_rounds: int = MAX_ROUNDS, threshold: float = IMPROVEMENT_THRESHOLD,
+    alive=None,
 ):
     """One §6 optimizer round: Algorithm 1 + the publication gate.
 
     Returns ``(p_new [S, N] int64, h_min [S], last_h [S], publish [S])``
     with ``h_min`` updated only for active rows and ``publish`` False for
-    inactive ones.
+    inactive ones.  ``alive`` applies the churn masking described on
+    :func:`algorithm1`; dead workers' published p equals their current p.
     """
     idx, p_new_f, h_min_out, last_h = algorithm1(
         p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active,
         ladder=ladder, w=w, margin=margin, key=key, K=K, h_tol=h_tol,
-        max_rounds=max_rounds,
+        max_rounds=max_rounds, alive=alive,
     )
     h_min_out = jnp.where(active, h_min_out, h_min)
-    pub = should_publish(p_cur, p_new_f, e_comm, e_comp, threshold) & active
+    pub = should_publish(p_cur, p_new_f, e_comm, e_comp, threshold, alive=alive) & active
     p_out = jnp.maximum(p_new_f, 1.0).astype(jnp.int64)
     p_out = jnp.where(active[:, None], p_out, p_cur.astype(jnp.int64))
+    if alive is not None:
+        p_out = jnp.where(alive, p_out, p_cur.astype(jnp.int64))
     return p_out, h_min_out, last_h, pub
 
 
@@ -427,21 +489,41 @@ def align_batch(n, p, p_new, k, needs):
 
 
 @functools.lru_cache(maxsize=64)
-def _lb_update_jitted(ladder, w, K, h_tol, max_rounds, threshold, margin):
-    def f(p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active, key):
-        return lb_update(
-            p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active,
-            ladder=ladder, w=w, margin=margin, key=key, K=K, h_tol=h_tol,
-            max_rounds=max_rounds, threshold=threshold,
-        )
+def _lb_update_jitted(ladder, w, K, h_tol, max_rounds, threshold, margin,
+                      with_alive=False):
+    if with_alive:
+
+        def f(p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active, key,
+              alive):
+            return lb_update(
+                p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active,
+                ladder=ladder, w=w, margin=margin, key=key, K=K, h_tol=h_tol,
+                max_rounds=max_rounds, threshold=threshold, alive=alive,
+            )
+
+    else:
+
+        def f(p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active, key):
+            return lb_update(
+                p_cur, e_comm, v_comm, e_comp, v_comp, n_j, h_min, active,
+                ladder=ladder, w=w, margin=margin, key=key, K=K, h_tol=h_tol,
+                max_rounds=max_rounds, threshold=threshold,
+            )
 
     return jax.jit(f)
 
 
 @functools.lru_cache(maxsize=8)
-def _window_moments_jitted(window):
-    def f(t_rec, comm, comp, valid, now):
-        return window_moments(t_rec, comm, comp, valid, now, window)
+def _window_moments_jitted(window, with_since=False):
+    if with_since:
+
+        def f(t_rec, comm, comp, valid, now, since):
+            return window_moments(t_rec, comm, comp, valid, now, window, since)
+
+    else:
+
+        def f(t_rec, comm, comp, valid, now):
+            return window_moments(t_rec, comm, comp, valid, now, window)
 
     return jax.jit(f)
 

@@ -156,13 +156,17 @@ class LoadBalanceOptimizer:
         inputs: OptimizerInputs,
         h_min: np.ndarray | None = None,
         active: np.ndarray | None = None,
+        alive: np.ndarray | None = None,
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Run Algorithm 1 + the §6.3 publish gate for S scenarios at once.
 
         ``p`` is ``[S, N]`` int, ``inputs`` holds ``[S, N]`` arrays,
         ``h_min`` the per-scenario contribution floor carried across calls
         (NaN = not yet established), and ``active`` masks which scenarios
-        actually balance this round (inactive rows pass through).  Returns
+        actually balance this round (inactive rows pass through).
+        ``alive`` ([S, N] bool, optional) is the churn liveness mask: dead
+        workers are excluded from the hill-climb and their p frozen (see
+        :func:`repro.lb.jit_optimizer.algorithm1`).  Returns
         ``(p_new [S, N] int64, h_min [S], last_h [S], publish [S])``.
         """
         p = np.asarray(p, dtype=np.int64)
@@ -180,9 +184,10 @@ class LoadBalanceOptimizer:
             int(self.max_rounds),
             float(self.improvement_threshold),
             float(inputs.margin),
+            with_alive=alive is not None,
         )
         with enable_x64():
-            p_new, h_min_out, last_h, publish = fn(
+            args = (
                 jnp.asarray(p, jnp.float64),
                 jnp.asarray(inputs.e_comm, jnp.float64),
                 jnp.asarray(inputs.v_comm, jnp.float64),
@@ -193,6 +198,9 @@ class LoadBalanceOptimizer:
                 jnp.asarray(active, bool),
                 self._key(),
             )
+            if alive is not None:
+                args = args + (jnp.asarray(alive, bool),)
+            p_new, h_min_out, last_h, publish = fn(*args)
         return (
             np.asarray(p_new, np.int64),
             np.asarray(h_min_out, np.float64),

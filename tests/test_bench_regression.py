@@ -134,6 +134,19 @@ def make_convergence_payload():
             "lb_scan_faster_than_host": True,
             "ordering": {"dsag_lb_fastest_to_gap": 1.0},
         },
+        "churn": {
+            "bitexact_scan_vs_host": True,
+            "methods": {
+                "dsag": {"median_time_to_gap": 0.2},
+                "sag": {"median_time_to_gap": 0.35},
+                "coded": {"median_time_to_gap": 0.4},
+            },
+            "ordering": {
+                "ordering_dsag_sag_coded": 1.0,
+                "sag_over_dsag": 1.75,
+                "coded_over_dsag": 2.0,
+            },
+        },
     }
 
 
@@ -190,6 +203,61 @@ def test_lb_scan_wall_clock_flip_only_warns():
     assert failures == []
     assert any("lb_scan_faster_than_host" in w for w in warnings)
     assert any("speedup_scan_over_host" in w for w in warnings)
+
+
+def test_churn_bitexactness_loss_fails():
+    fresh = make_convergence_payload()
+    fresh["churn"]["bitexact_scan_vs_host"] = False
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("churn" in f and "bit-exact" in f for f in failures)
+
+
+def test_churn_ordering_flip_fails():
+    fresh = make_convergence_payload()
+    # sag overtakes dsag once workers start dying
+    fresh["churn"]["methods"]["sag"]["median_time_to_gap"] = 0.15
+    fresh["churn"]["ordering"]["ordering_dsag_sag_coded"] = 0.0
+    fresh["churn"]["ordering"]["sag_over_dsag"] = 0.75
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("churn" in f and "ranking flipped" in f for f in failures)
+    assert any(
+        "churn" in f and "ordering_dsag_sag_coded" in f for f in failures
+    )
+
+
+def test_churn_speedup_drift_only_warns():
+    fresh = make_convergence_payload()
+    fresh["churn"]["ordering"]["sag_over_dsag"] = 2.1  # +20%
+    failures, warnings = compare_convergence(make_convergence_payload(), fresh)
+    assert failures == []
+    assert any("churn" in w and "sag_over_dsag" in w for w in warnings)
+
+
+def test_churn_column_rerun_refuses_foreign_recipe():
+    from benchmarks.bench_regression import GridMismatch, run_churn_column
+
+    with pytest.raises(GridMismatch, match="not reproducible"):
+        run_churn_column({"problem": "something_else"})
+    with pytest.raises(GridMismatch, match="unknown regime"):
+        run_churn_column({"regime": "made_up_regime"})
+
+
+def test_committed_churn_column_recipe_is_complete():
+    """The committed artifact's churn column must carry the full recipe the
+    gate rerun needs (every CHURN_RECIPE key), so a rerun reconstructs the
+    identical schedule rather than silently defaulting."""
+    import json
+    from pathlib import Path
+
+    from benchmarks.bench_regression import CHURN_RECIPE
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_convergence.json"
+    committed = json.loads(path.read_text())
+    assert "churn" in committed
+    col = committed["churn"]
+    assert set(CHURN_RECIPE) <= set(col["recipe"])
+    assert col["bitexact_scan_vs_host"] is True
+    assert col["ordering"]["ordering_dsag_sag_coded"] == 1.0
 
 
 def test_rerun_convergence_refuses_missing_recipe():

@@ -1,0 +1,561 @@
+"""Elastic-fleet churn: cross-engine pins, §7.2 replay, and properties.
+
+The tentpole contract: a :class:`~repro.latency.model.ChurnSchedule` on the
+traces (time-varying slowdown rows + a per-iteration liveness mask) runs
+**bit-for-bit identically** through all three engines — the scalar
+:class:`~repro.cluster.simulator.TrainingSimulator`, the batched host
+convergence loop, and the fused scan — under worker death, late join,
+latency bursts, and the reactive §6 load balancer.  This file pins that
+chain (death-only, join-only, death+join+burst, LB under churn with both
+the dense-universe and tiled caches, and the sharded scan), the repaired
+§7.2 artificial-slowdown trace replay (structured
+:class:`~repro.latency.model.SlowdownRemoval` timed events now fold into a
+churn schedule instead of being refused), and the churn invariants as
+hypothesis properties (dead workers contribute nothing, revived workers
+re-enter empty, cleared caches stay disjoint within the active-slot
+capacity bound, and the all-alive schedule is bit-identical to the static
+path).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.simulator import (
+    MethodConfig,
+    TraceLatencySource,
+    TrainingSimulator,
+)
+from repro.core.gradient_cache import (
+    BatchedGradientCache,
+    GradientCache,
+    active_slot_capacity,
+    build_slot_universe,
+)
+from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+from repro.experiments.convergence import run_convergence_batch
+from repro.experiments.engine import EngineConfig
+from repro.experiments.fused import prepare_scan_inputs, run_convergence_scan
+from repro.experiments.sweep import replay_batch
+from repro.latency.model import (
+    ChurnSchedule,
+    SlowdownRemoval,
+    churn_from_removals,
+    make_heterogeneous_cluster,
+    make_paper_artificial_cluster,
+    paper_artificial_churn,
+    sample_fleet,
+)
+
+N_WORKERS, N_SCEN, HORIZON = 6, 3, 30
+T_ITERS = 24
+
+
+@pytest.fixture(scope="module")
+def logreg_small():
+    X, y = make_higgs_like(240, seed=0)
+    return LogisticRegressionProblem(X=X, y=y)
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return make_heterogeneous_cluster(
+        N_WORKERS, seed=3, burst_rate=0.0, comp_range=(1.1e-3, 2.5e-3)
+    )
+
+
+@pytest.fixture(scope="module")
+def traces(cluster):
+    return sample_fleet(cluster, N_SCEN, HORIZON, seed=11)
+
+
+@pytest.fixture(scope="module")
+def bursty_traces(cluster):
+    return sample_fleet(
+        cluster,
+        N_SCEN,
+        HORIZON,
+        seed=11,
+        burst_rate=3.0,
+        burst_factor_mean=3.0,
+        burst_duration_mean=5e-3,
+    )
+
+
+def death_only_churn(traces):
+    """Worker 4 dies at t=0.02 and never returns."""
+    sd = np.asarray(traces.slowdown)
+    alive0 = np.ones(traces.num_workers, bool)
+    alive1 = alive0.copy()
+    alive1[4] = False
+    return ChurnSchedule(
+        times=np.array([0.02]),
+        slowdown=np.stack([sd, sd]),
+        alive=np.stack([alive0, alive1]),
+    )
+
+
+def join_only_churn(traces):
+    """Worker 2 is absent from the start and joins at t=0.03."""
+    sd = np.asarray(traces.slowdown)
+    alive0 = np.ones(traces.num_workers, bool)
+    alive0[2] = False
+    alive1 = np.ones(traces.num_workers, bool)
+    return ChurnSchedule(
+        times=np.array([0.03]),
+        slowdown=np.stack([sd, sd]),
+        alive=np.stack([alive0, alive1]),
+    )
+
+
+def death_join_drift_churn(traces):
+    """Worker 1 dies then revives while worker 4 dies; slowdowns drift."""
+    n = traces.num_workers
+    sd0 = np.asarray(traces.slowdown)
+    sd1 = sd0 * np.linspace(1.0, 1.5, n)
+    alive0 = np.ones(n, bool)
+    alive1 = alive0.copy()
+    alive1[1] = False
+    alive2 = np.ones(n, bool)
+    alive2[4] = False
+    return ChurnSchedule(
+        times=np.array([0.02, 0.06]),
+        slowdown=np.stack([sd0, sd1, sd0]),
+        alive=np.stack([alive0, alive1, alive2]),
+    )
+
+
+def assert_results_equal(a, b):
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.suboptimality, b.suboptimality)
+    np.testing.assert_array_equal(a.fresh_counts, b.fresh_counts)
+    np.testing.assert_array_equal(a.per_worker_latency, b.per_worker_latency)
+    np.testing.assert_array_equal(a.evictions, b.evictions)
+    np.testing.assert_array_equal(a.rejected_stale, b.rejected_stale)
+    assert a.repartition_events == b.repartition_events
+
+
+def assert_three_engines_agree(
+    problem, cluster, churned, cfg, num_iterations=T_ITERS, slot_budget=None
+):
+    """scalar == host == scan, every RunHistory field, every scenario."""
+    host = run_convergence_batch(
+        problem, churned, cfg, num_iterations, eval_every=2, seed=0,
+        engine=EngineConfig(kind="host"),
+    )
+    eng = EngineConfig(kind="scan", slot_budget=slot_budget)
+    scan = run_convergence_scan(
+        problem, churned, cfg, num_iterations, eval_every=2, seed=0, engine=eng
+    )
+    assert_results_equal(scan, host)
+    for s in range(churned.num_scenarios):
+        sim = TrainingSimulator(
+            problem, cluster, cfg, eval_every=2, seed=0,
+            latency_source=TraceLatencySource(churned, s),
+        )
+        h = sim.run(num_iterations)
+        hb = host.history(s)
+        np.testing.assert_array_equal(h.times, hb.times)
+        np.testing.assert_array_equal(h.suboptimality, hb.suboptimality)
+        np.testing.assert_array_equal(h.fresh_counts, hb.fresh_counts)
+        np.testing.assert_array_equal(
+            h.per_worker_latency, hb.per_worker_latency
+        )
+        assert h.repartition_events == hb.repartition_events
+        assert h.evictions == hb.evictions
+        assert h.rejected_stale == hb.rejected_stale
+    return host
+
+
+class TestCrossEngineChurn:
+    """scalar == host == scan under fleet churn, bit for bit."""
+
+    def test_death_only(self, logreg_small, cluster, traces):
+        churned = traces.with_churn(death_only_churn(traces))
+        cfg = MethodConfig(name="dsag", w=4, eta=0.25, subpartitions=2)
+        host = assert_three_engines_agree(logreg_small, cluster, churned, cfg)
+        # vacuity guard: the death must actually bite (later iterations can
+        # never collect more fresh results than living workers)
+        post = host.times[:, :-1] >= 0.02
+        assert post.any()
+        assert (host.fresh_counts[:, 1:][post] <= N_WORKERS - 1).all()
+
+    def test_join_only(self, logreg_small, cluster, traces):
+        churned = traces.with_churn(join_only_churn(traces))
+        cfg = MethodConfig(name="sag", w=N_WORKERS, eta=0.25, subpartitions=2)
+        host = assert_three_engines_agree(logreg_small, cluster, churned, cfg)
+        # before the join at most N-1 workers can be fresh; afterwards the
+        # full fleet must show up at least once (the joiner participates)
+        assert (host.fresh_counts[:, 0] <= N_WORKERS - 1).all()
+        assert (host.fresh_counts.max(axis=1) == N_WORKERS).all()
+
+    def test_death_join_and_bursts(self, logreg_small, cluster, bursty_traces):
+        churned = bursty_traces.with_churn(death_join_drift_churn(bursty_traces))
+        cfg = MethodConfig(name="dsag", w=4, eta=0.25, subpartitions=2)
+        assert_three_engines_agree(logreg_small, cluster, churned, cfg)
+
+    def test_lb_under_churn_universe_cache(
+        self, logreg_small, cluster, bursty_traces
+    ):
+        churned = bursty_traces.with_churn(death_join_drift_churn(bursty_traces))
+        cfg = MethodConfig(
+            name="dsag", w=4, eta=0.25, subpartitions=2, load_balance=True,
+            lb_interval=0.01, lb_startup_delay=0.005,
+        )
+        spec, _, _ = prepare_scan_inputs(
+            logreg_small, churned, cfg, T_ITERS, seed=0
+        )
+        assert spec.cache_mode == "universe" and spec.has_churn
+        assert_three_engines_agree(logreg_small, cluster, churned, cfg)
+
+    def test_lb_under_churn_tiled_cache(
+        self, logreg_small, cluster, bursty_traces
+    ):
+        churned = bursty_traces.with_churn(death_join_drift_churn(bursty_traces))
+        cfg = MethodConfig(
+            name="dsag", w=4, eta=0.25, subpartitions=2, load_balance=True,
+            lb_interval=0.01, lb_startup_delay=0.005,
+        )
+        spec, _, _ = prepare_scan_inputs(
+            logreg_small, churned, cfg, T_ITERS, seed=0, slot_budget=50
+        )
+        assert spec.cache_mode == "tiled" and spec.has_churn
+        assert_three_engines_agree(
+            logreg_small, cluster, churned, cfg, slot_budget=50
+        )
+
+    def test_all_alive_schedule_matches_the_static_path(
+        self, logreg_small, traces
+    ):
+        """Churn machinery engaged but nothing changes: bit-identical to the
+        churn-free engines (the sort+gather tau and the per-start slowdown
+        row lookups select the same floats)."""
+        sd = np.asarray(traces.slowdown)
+        churn = ChurnSchedule(
+            times=np.array([0.02, 0.05]),
+            slowdown=np.stack([sd, sd, sd]),
+            alive=np.ones((3, traces.num_workers), bool),
+        )
+        cfg = MethodConfig(name="dsag", w=4, eta=0.25, subpartitions=2)
+        for kind, runner in [
+            ("host", run_convergence_batch),
+            ("scan", run_convergence_scan),
+        ]:
+            eng = EngineConfig(kind=kind)
+            plain = runner(
+                logreg_small, traces, cfg, T_ITERS, eval_every=2, seed=0,
+                engine=eng,
+            )
+            churned = runner(
+                logreg_small, traces.with_churn(churn), cfg, T_ITERS,
+                eval_every=2, seed=0, engine=eng,
+            )
+            assert_results_equal(plain, churned)
+
+
+def needs_devices(n):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs >= {n} devices (CI re-runs with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+    )
+
+
+class TestShardedChurn:
+    """The churn operands are replicated; shards reproduce the plain bits."""
+
+    def test_one_device_mesh_is_bitexact(self, logreg_small, bursty_traces):
+        churned = bursty_traces.with_churn(death_join_drift_churn(bursty_traces))
+        cfg = MethodConfig(name="dsag", w=4, eta=0.25, subpartitions=2)
+        plain = run_convergence_scan(
+            logreg_small, churned, cfg, T_ITERS, seed=0,
+            engine=EngineConfig(kind="scan"),
+        )
+        sharded = run_convergence_scan(
+            logreg_small, churned, cfg, T_ITERS, seed=0,
+            engine=EngineConfig(kind="scan", num_devices=1),
+        )
+        assert_results_equal(plain, sharded)
+
+    @needs_devices(4)
+    def test_four_devices_lb_churn_with_remainder(self, logreg_small, cluster):
+        """S=5 over D=4 (S % D != 0): edge padding + per-shard dynamic trip
+        counts (cache clears, event ranks, LB rounds) under churn."""
+        traces5 = sample_fleet(
+            cluster, 5, HORIZON, seed=11,
+            burst_rate=3.0, burst_factor_mean=3.0, burst_duration_mean=5e-3,
+        )
+        churned = traces5.with_churn(death_join_drift_churn(traces5))
+        cfg = MethodConfig(
+            name="dsag", w=4, eta=0.25, subpartitions=2, load_balance=True,
+            lb_interval=0.01, lb_startup_delay=0.005,
+        )
+        plain = run_convergence_scan(
+            logreg_small, churned, cfg, T_ITERS, seed=0,
+            engine=EngineConfig(kind="scan"),
+        )
+        sharded = run_convergence_scan(
+            logreg_small, churned, cfg, T_ITERS, seed=0,
+            engine=EngineConfig(kind="scan", num_devices=4),
+        )
+        assert_results_equal(plain, sharded)
+
+
+class TestPaperSlowdownReplay:
+    """§7.2: the artificial-slowdown scenario replays instead of refusing."""
+
+    N = 8
+    REMOVE_AT = 0.04
+    T = 40
+
+    def _setup(self, problem):
+        c_task = problem.compute_cost(1, max(problem.num_samples // self.N, 1))
+        cluster = make_paper_artificial_cluster(
+            num_workers=self.N, load_unit=c_task, seed=1
+        )
+        traces = sample_fleet(cluster, N_SCEN, self.T, seed=7)
+        return cluster, traces
+
+    def test_slowdown_removal_replays_through_all_three_engines(
+        self, logreg_small
+    ):
+        cluster, traces = self._setup(logreg_small)
+        removal = SlowdownRemoval(
+            time=self.REMOVE_AT, workers=tuple(range(self.N - 4, self.N))
+        )
+        cfg = MethodConfig(name="sag", w=self.N, eta=0.25, subpartitions=2)
+        # the scalar path folds the structured timed event into a churn
+        # schedule on its trace source (this used to raise ValueError)
+        churned = traces.with_churn(
+            churn_from_removals(traces.slowdown, [removal])
+        )
+        host = run_convergence_batch(
+            logreg_small, churned, cfg, self.T, eval_every=2, seed=0,
+            engine=EngineConfig(kind="host"),
+        )
+        scan = run_convergence_scan(
+            logreg_small, churned, cfg, self.T, eval_every=2, seed=0
+        )
+        assert_results_equal(scan, host)
+        for s in range(N_SCEN):
+            sim = TrainingSimulator(
+                logreg_small, cluster, cfg, eval_every=2, seed=0,
+                latency_source=TraceLatencySource(traces, s),
+                timed_events=[(self.REMOVE_AT, removal)],
+            )
+            h = sim.run(self.T)
+            hb = host.history(s)
+            np.testing.assert_array_equal(h.times, hb.times)
+            np.testing.assert_array_equal(h.suboptimality, hb.suboptimality)
+            np.testing.assert_array_equal(h.fresh_counts, hb.fresh_counts)
+
+    def test_recovery_ordering_after_removal(self, logreg_small):
+        """The paper's §7.2 signature: once the last workers' artificial
+        slowdown is removed, iterations get faster (the fleet recovers)."""
+        _, traces = self._setup(logreg_small)
+        churned = traces.with_churn(
+            churn_from_removals(
+                traces.slowdown,
+                [SlowdownRemoval(
+                    time=self.REMOVE_AT,
+                    workers=tuple(range(self.N - 4, self.N)),
+                )],
+            )
+        )
+        cfg = MethodConfig(name="sag", w=self.N, eta=0.25, subpartitions=2)
+        host = run_convergence_batch(
+            logreg_small, churned, cfg, self.T, eval_every=2, seed=0,
+            engine=EngineConfig(kind="host"),
+        )
+        durations = np.diff(host.times, axis=1, prepend=0.0)
+        pre = durations[:, 1:][host.times[:, 1:] < self.REMOVE_AT]
+        post = durations[:, 1:][host.times[:, :-1] >= self.REMOVE_AT]
+        assert pre.size and post.size
+        assert post.mean() < pre.mean()
+
+    def test_opaque_callables_are_still_refused(self, logreg_small):
+        cluster, traces = self._setup(logreg_small)
+        with pytest.raises(ValueError, match="timed_events"):
+            TrainingSimulator(
+                logreg_small, cluster,
+                MethodConfig(name="dsag", w=4, subpartitions=2),
+                timed_events=[(1.0, lambda c: None)],
+                latency_source=TraceLatencySource(traces, 0),
+            )
+
+    def test_paper_artificial_churn_is_the_folded_schedule(self):
+        churn = paper_artificial_churn(
+            num_workers=self.N, remove_at=self.REMOVE_AT, num_removed=4
+        )
+        assert churn.times.tolist() == [self.REMOVE_AT]
+        np.testing.assert_allclose(
+            churn.slowdown[0], 1.0 + (np.arange(1, self.N + 1) / self.N) * 0.4
+        )
+        assert (churn.slowdown[1][-4:] == 1.0).all()
+        np.testing.assert_allclose(
+            churn.slowdown[1][: self.N - 4], churn.slowdown[0][: self.N - 4]
+        )
+        assert churn.alive.all()
+
+
+class TestChurnScheduleValidation:
+    def test_rejects_unordered_times_and_dead_fleets(self):
+        sd = np.ones((3, 4))
+        ok = np.ones((3, 4), bool)
+        with pytest.raises(ValueError, match="strictly increasing"):
+            ChurnSchedule(times=np.array([0.3, 0.2]), slowdown=sd, alive=ok)
+        dead = ok.copy()
+        dead[1] = False
+        with pytest.raises(ValueError, match="at least one worker alive"):
+            ChurnSchedule(times=np.array([0.1, 0.2]), slowdown=sd, alive=dead)
+        with pytest.raises(ValueError, match="state rows"):
+            ChurnSchedule(times=np.array([0.1]), slowdown=sd, alive=ok)
+
+    def test_row_lookup_conventions(self):
+        sd = np.ones((3, 2))
+        churn = ChurnSchedule(
+            times=np.array([1.0, 2.0]), slowdown=sd, alive=np.ones((3, 2), bool)
+        )
+        assert churn.row_at(0.0) == 0
+        assert churn.row_at(1.0) == 1  # boundary belongs to the new row
+        np.testing.assert_array_equal(churn.row_at(np.array([0.5, 2.5])), [0, 2])
+        b = churn.boundary_before(np.array([0, 1, 2]))
+        assert b[0] == -np.inf and b[1] == 1.0 and b[2] == 2.0
+
+
+class TestChurnProperties:
+    """Hypothesis invariants of the churn semantics."""
+
+    @given(
+        seed=st.integers(0, 10_000),
+        n=st.integers(2, 8),
+        cuts=st.integers(1, 3),
+        w_frac=st.floats(0.3, 1.0),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_all_alive_schedule_is_bit_identical_to_static(
+        self, seed, n, cuts, w_frac
+    ):
+        cl = make_heterogeneous_cluster(n, seed=seed % 5, burst_rate=0.0)
+        traces = sample_fleet(cl, 2, 12, seed=seed)
+        rng = np.random.default_rng(seed)
+        times = np.sort(rng.uniform(1e-4, 0.05, size=cuts))
+        times = np.unique(times)
+        churn = ChurnSchedule(
+            times=times,
+            slowdown=np.repeat(
+                np.asarray(traces.slowdown)[None, :], times.size + 1, axis=0
+            ),
+            alive=np.ones((times.size + 1, n), bool),
+        )
+        w = max(1, int(round(w_frac * n)))
+        a = replay_batch(traces, w, 12)
+        b = replay_batch(traces.with_churn(churn), w, 12)
+        np.testing.assert_array_equal(a.iteration_times, b.iteration_times)
+        np.testing.assert_array_equal(a.fresh_counts, b.fresh_counts)
+        np.testing.assert_array_equal(a.participation, b.participation)
+
+    @given(
+        seed=st.integers(0, 10_000),
+        n=st.integers(3, 8),
+        data=st.data(),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_dead_workers_contribute_no_finishes_or_draws(
+        self, seed, n, data
+    ):
+        """After a worker's death boundary it never finishes a task: its
+        task records are NaN and its participation stops growing."""
+        cl = make_heterogeneous_cluster(n, seed=seed % 5, burst_rate=0.0)
+        traces = sample_fleet(cl, 2, 16, seed=seed)
+        dead_worker = data.draw(st.integers(0, n - 1), label="dead_worker")
+        t_die = data.draw(st.floats(1e-3, 0.04), label="t_die")
+        alive0 = np.ones(n, bool)
+        alive1 = alive0.copy()
+        alive1[dead_worker] = False
+        sd = np.asarray(traces.slowdown)
+        churn = ChurnSchedule(
+            times=np.array([t_die]),
+            slowdown=np.stack([sd, sd]),
+            alive=np.stack([alive0, alive1]),
+        )
+        res = replay_batch(
+            traces.with_churn(churn), max(1, n // 2), 16, record_tasks=True
+        )
+        dead_iters = res.task_assigned >= t_die  # [S, T]
+        assert np.isnan(res.task_finish[:, :, dead_worker][dead_iters]).all()
+        assert np.isnan(res.task_start[:, :, dead_worker][dead_iters]).all()
+
+    @given(seed=st.integers(0, 10_000), data=st.data())
+    @settings(max_examples=15, deadline=None)
+    def test_clear_range_is_exact_and_idempotent(self, seed, data):
+        """Clearing a dead worker's range removes exactly its coverage and
+        running-sum contribution; clearing again is a no-op; a revived
+        worker re-inserts into an empty range."""
+        rng = np.random.default_rng(seed)
+        n_samples = 120
+        n_workers = 4
+        per = n_samples // n_workers
+        cache = GradientCache(n_samples, np.zeros(3))
+        # one disjoint entry per worker's base range
+        for i in range(n_workers):
+            cache.insert(
+                i * per + 1, (i + 1) * per, 0, rng.normal(size=3)
+            )
+        cache.check_invariants()
+        victim = data.draw(st.integers(0, n_workers - 1), label="victim")
+        lo, hi = victim * per + 1, (victim + 1) * per
+        cov_before = cache.coverage
+        removed = cache.clear_range(lo, hi)
+        assert removed == 1
+        cache.check_invariants()
+        assert cache.coverage == pytest.approx(cov_before - per / n_samples)
+        assert not any(e.overlaps(lo, hi) for e in cache.entries())
+        assert cache.clear_range(lo, hi) == 0  # idempotent
+        # revival: the range accepts a fresh insert with a clean slate
+        v = rng.normal(size=3)
+        assert cache.insert(lo, hi, 5, v)
+        cache.check_invariants()
+
+    @given(seed=st.integers(0, 10_000), n_ops=st.integers(5, 40))
+    @settings(max_examples=10, deadline=None)
+    def test_batched_cache_stays_disjoint_under_insert_clear_interleaving(
+        self, seed, n_ops
+    ):
+        """Random §5 traffic interleaved with death clears keeps every
+        scenario's active set disjoint with consistent coverage/sums, and
+        each worker's active entries within the tiled capacity bound."""
+        rng = np.random.default_rng(seed)
+        n_samples, n_workers, S = 96, 3, 2
+        per = n_samples // n_workers
+        ladder = (1, 2, 4)
+        base_start = [i * per + 1 for i in range(n_workers)]
+        base_stop = [(i + 1) * per for i in range(n_workers)]
+        universe = build_slot_universe(base_start, base_stop, ladder)
+        cap = active_slot_capacity(universe)
+        cache = BatchedGradientCache(S, n_samples, np.zeros(2))
+        for it in range(n_ops):
+            s = int(rng.integers(S))
+            i = int(rng.integers(n_workers))
+            if rng.random() < 0.25:
+                cache.clear_range(s, base_start[i], base_stop[i])
+            else:
+                p = int(rng.choice(ladder))
+                k = int(rng.integers(1, p + 1))
+                nl = per
+                lo = base_start[i] + (k - 1) * nl // p
+                hi = base_start[i] + k * nl // p - 1
+                cache.insert(s, lo, hi, it, rng.normal(size=2))
+            cache.check_invariants()
+            for s2 in range(S):
+                for j in range(n_workers):
+                    active_j = sum(
+                        1
+                        for slot, (a, _stop) in enumerate(cache._intervals)
+                        if cache._iters[slot, s2] >= 0
+                        and base_start[j] <= a <= base_stop[j]
+                    )
+                    assert active_j <= cap[j]

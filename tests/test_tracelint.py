@@ -285,6 +285,212 @@ class TestTL005CondCapture:
 
 
 # ---------------------------------------------------------------------------
+# churn — the elastic-fleet scan body idioms, one mutation per rule
+# ---------------------------------------------------------------------------
+
+
+def _churn_latency_chain(times, sd_rows, unit, cost, factor, start, comm):
+    """The churn slowdown path: per-start row lookup feeding the §3 product."""
+    row = jnp.searchsorted(times, start, side="right")
+    comp = fused.guarded_comp_latency(unit, cost, sd_rows[row], factor)
+    from repro.cluster.simulator import task_finish_time
+
+    return task_finish_time(start, comp, comm)
+
+
+def _churn_latency_probe() -> EntryProbe:
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        batches = []
+        for seed in (0, 1, 2, 3):
+            rng = np.random.default_rng(seed)
+            times = jnp.asarray(np.sort(rng.uniform(0.1, 3.0, 2)), jnp.float64)
+            sd_rows = jnp.asarray(rng.uniform(1.0, 1.5, (3, 64)), jnp.float64)
+            rest = tuple(
+                jnp.asarray(rng.uniform(0.1, 3.0, size=64), dtype=jnp.float64)
+                for _ in range(5)
+            )
+            batches.append((times, sd_rows) + rest)
+    return EntryProbe(
+        name="synthetic_churn_latency",
+        description="",
+        latency_probe=(_churn_latency_chain, batches),
+    )
+
+
+def _churn_clear_probe(values_in_fori_carry: bool) -> EntryProbe:
+    """The death-clear loop shape: per-entry subtraction from running sums.
+
+    The production idiom (``fused._clear_dead_dense``) keeps the values
+    table OUT of the fori carry — the loop reads it from the enclosing
+    scan carry at loop-invariant positions, so in-place aliasing of the
+    scatter-written tables survives.  ``values_in_fori_carry=True`` is
+    the mutation: threading the table through the clear loop's carry
+    (written by the zero-out scatter AND read by the subtraction) forces
+    a pre-write copy of the whole table per trip.
+    """
+    S, E, D = 2, 8, 16
+
+    def body(carry, x):
+        values, sums = carry
+
+        if values_in_fori_carry:
+
+            def clear_body(e, val_su):
+                vals, su = val_su
+                su = su - vals[:, e % E]
+                vals = vals.at[:, e % E].set(jnp.zeros((S, D), jnp.float32))
+                return vals, su
+
+            values, sums = jax.lax.fori_loop(0, 3, clear_body, (values, sums))
+        else:
+
+            def clear_body(e, su):
+                return su - values[:, e % E]
+
+            sums = jax.lax.fori_loop(0, 3, clear_body, sums)
+            values = values.at[:, 0].set(jnp.zeros((S, D), jnp.float32) + x)
+        return (values, sums), sums[0, 0]
+
+    init = (
+        jnp.zeros((S, E, D), jnp.float32),
+        jnp.zeros((S, D), jnp.float32),
+    )
+    jaxpr = jax.make_jaxpr(
+        lambda c, xs: jax.lax.scan(body, c, xs)
+    )(init, jnp.arange(4, dtype=jnp.float32))
+    return EntryProbe(name="synthetic_churn_clear", description="", jaxpr=jaxpr)
+
+
+def _churn_tau_probe(masked: bool) -> EntryProbe:
+    """The liveness-masked w-th order statistic over a padded worker axis.
+
+    ``masked=False`` drops the ``alive & (iota < width)`` select before
+    the reduction — dead/pad workers' finish times silently enter tau.
+    """
+    pad_n = 16
+
+    def tau(finish, width):
+        if masked:
+            lane = jnp.arange(pad_n)[None, :]
+            finish = jnp.where(lane < width[:, None], finish, jnp.inf)
+        return jnp.min(finish, axis=1)
+
+    jaxpr = jax.make_jaxpr(tau)(
+        jnp.zeros((3, pad_n), jnp.float32),
+        jnp.asarray([4, 6, 5], jnp.int32),
+    )
+    return EntryProbe(
+        name="synthetic_churn_tau",
+        description="",
+        jaxpr=jaxpr,
+        padded_axis_sizes=(pad_n,),
+    )
+
+
+def _churn_boundary_probe(explicit_dtype: bool) -> EntryProbe:
+    """The reactive-LB carry: ``lb_since`` starts at the -inf boundary.
+
+    A python-float fill leaves the carry weakly typed — the first
+    ``where(changed, boundary, lb_since)`` against it could re-promote.
+    """
+    S = 2
+
+    def body(c, x):
+        row, since = c
+        return (row + 1, jnp.maximum(since, x)), since.sum()
+
+    if explicit_dtype:
+        since0 = jnp.full((S,), -jnp.inf, dtype=jnp.float32)
+    else:
+        since0 = jnp.full((S,), -np.inf)
+    init = (jnp.zeros((S,), jnp.int32), since0)
+    jaxpr = jax.make_jaxpr(
+        lambda c, xs: jax.lax.scan(body, c, xs)
+    )(init, jnp.arange(3, dtype=jnp.float32))
+    return EntryProbe(
+        name="synthetic_churn_boundary", description="", jaxpr=jaxpr
+    )
+
+
+def _churn_cond_clear_probe(branchless: bool) -> EntryProbe:
+    """Per-entry clear decisions must be branchless masked arithmetic.
+
+    A ``lax.cond`` on ``clear[e]`` inside the clear loop captures the
+    values table in both branches — TL005's copy-amplification shape.
+    """
+    values = jnp.zeros((64, 64), jnp.float32)  # 16 KiB: at the threshold
+    clear = jnp.asarray([True, False, True], bool)
+
+    def clear_body(e, su):
+        if branchless:
+            return su + jnp.where(clear[e % 3], values[0, 0], 0.0)
+        return jax.lax.cond(
+            clear[e % 3],
+            lambda: su + values[0, 0],
+            lambda: su - values[0, 0],
+        )
+
+    def body(c, x):
+        c = jax.lax.fori_loop(0, 3, clear_body, c)
+        return c, c
+
+    jaxpr = jax.make_jaxpr(
+        lambda c, xs: jax.lax.scan(body, c, xs)
+    )(jnp.float32(0.0), jnp.arange(4, dtype=jnp.float32))
+    return EntryProbe(
+        name="synthetic_churn_cond",
+        description="",
+        jaxpr=jaxpr,
+        cond_depth_threshold=1,
+    )
+
+
+class TestChurnScanIdioms:
+    def test_production_churn_entry_is_clean_under_every_rule(self):
+        entry = lint_entries.ENTRIES["fused_logreg_churn"]()
+        assert lint_rules.check_carry_copy(entry) == []
+        assert lint_rules.check_dtype_leak(entry) == []
+        assert lint_rules.check_cond_capture(entry) == []
+        assert lint_rules.check_pad_variant_reduce(entry) == []
+
+    def test_tl001_churn_row_lookup_keeps_the_seam(self, monkeypatch):
+        assert lint_rules.check_fma_seam(_churn_latency_probe()) == []
+        monkeypatch.setattr(
+            fused,
+            "guarded_comp_latency",
+            lambda unit, cost, slowdown, factor: comp_latency_expr(
+                unit, cost, slowdown, factor
+            ),
+        )
+        findings = lint_rules.check_fma_seam(_churn_latency_probe())
+        assert codes(findings) == ["TL001"]
+
+    def test_tl002_values_threaded_through_the_clear_loop_fires(self):
+        assert lint_rules.check_carry_copy(_churn_clear_probe(False)) == []
+        findings = lint_rules.check_carry_copy(_churn_clear_probe(True))
+        assert codes(findings) == ["TL002"]
+        assert "read inside its loop" in findings[0].message
+
+    def test_tl003_unmasked_tau_over_padded_workers_fires(self):
+        assert lint_rules.check_pad_variant_reduce(_churn_tau_probe(True)) == []
+        findings = lint_rules.check_pad_variant_reduce(_churn_tau_probe(False))
+        assert codes(findings) == ["TL003"]
+
+    def test_tl004_weak_lb_since_carry_fires(self):
+        assert lint_rules.check_dtype_leak(_churn_boundary_probe(True)) == []
+        findings = lint_rules.check_dtype_leak(_churn_boundary_probe(False))
+        assert codes(findings) == ["TL004"]
+        assert "weakly typed" in findings[0].message
+
+    def test_tl005_cond_on_clear_mask_fires(self):
+        assert lint_rules.check_cond_capture(_churn_cond_clear_probe(True)) == []
+        findings = lint_rules.check_cond_capture(_churn_cond_clear_probe(False))
+        assert codes(findings) == ["TL005"]
+
+
+# ---------------------------------------------------------------------------
 # baseline layer
 # ---------------------------------------------------------------------------
 
