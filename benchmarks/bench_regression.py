@@ -10,9 +10,13 @@ semantic change to an engine or the latency model.  The gate:
   the convergence grid's time-to-gap ranking or
   ``dsag_fastest_to_gap`` / ``ordering_dsag_sag_coded`` verdicts, the
   ``lb_scan`` column's DSAG-with-LB verdict, the §6 scan-vs-host
-  bit-exactness, or the ``churn`` column's elastic-fleet pins (scan-vs-
+  bit-exactness, the ``churn`` column's elastic-fleet pins (scan-vs-
   host bit-exactness under worker death/rejoin and the dsag < sag <
-  coded ordering surviving churn);
+  coded ordering surviving churn), or the ``kernel_backend`` column's
+  per-backend pins (Pallas-vs-XLA bit-exactness on the artifact's
+  platform, per-backend trajectory digests, per-backend method
+  rankings; cross-platform the Pallas-vs-XLA diff is gated by a
+  relative tolerance instead);
 * **warn** (exit 0) when speedup ratios drift by more than 15% — both
   the deterministic DSAG-over-baseline ratios and the wall-clock
   ``lb_scan`` scan-vs-host speedup (machine-dependent by nature, so a
@@ -245,6 +249,12 @@ def compare_convergence(committed: dict, fresh: dict) -> tuple[list[str], list[s
         ch_failures, ch_warnings = compare_churn_column(old_ch, new_ch)
         failures.extend(ch_failures)
         warnings.extend(ch_warnings)
+    old_kb = committed.get("kernel_backend")
+    new_kb = fresh.get("kernel_backend")
+    if old_kb is not None and new_kb is not None:
+        kb_failures, kb_warnings = compare_kernel_backend_column(old_kb, new_kb)
+        failures.extend(kb_failures)
+        warnings.extend(kb_warnings)
     return failures, warnings
 
 
@@ -551,6 +561,242 @@ def compare_churn_column(committed: dict, fresh: dict) -> tuple[list[str], list[
     return failures, warnings
 
 
+#: cross-backend tolerance on the Pallas-vs-XLA suboptimality trajectories.
+#: On one platform the comparison must be *bit-exact* (CPU CI runs the
+#: Pallas twins in interpret mode against the same jitted arithmetic); the
+#: relative tolerance only applies when the artifact and the rerun disagree
+#: on platform, where a real Pallas compile may round differently.
+KERNEL_BACKEND_REL_TOL = 1e-3
+
+#: every parameter of the kernel_backend column's run — stored inside the
+#: column itself so the gate rerun reproduces it without guessing
+KERNEL_BACKEND_RECIPE = {
+    "seed": 0,
+    "n_scenarios": 3,
+    "num_iterations": 30,
+    "eval_every": 5,
+    "n_workers": 8,
+    "subpartitions": 3,
+    "regime": "heavy_bursts",
+    "logreg": {"num_samples": 1024, "w": 6, "eta": 0.25,
+               "methods": ["dsag", "sag", "coded"]},
+    "pca": {"n_rows": 512, "n_cols": 64, "k": 4, "w": 6, "eta": 0.9,
+            "methods": ["dsag", "sag"]},
+}
+
+
+def _trajectory_digest(res) -> str:
+    """Short sha256 over a result's deterministic trajectory arrays.
+
+    The artifact stores digests instead of the arrays themselves, so the
+    gate rerun can check "bit-exact within a backend" (same platform, same
+    backend, same bits) without committing megabytes of trajectories.
+    """
+    import hashlib
+
+    import numpy as np
+
+    h = hashlib.sha256()
+    for arr in (res.times, res.suboptimality, res.fresh_counts):
+        h.update(np.ascontiguousarray(np.asarray(arr)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def run_kernel_backend_column(recipe: dict | None = None) -> dict:
+    """Pin ``kernel_backend="pallas"`` against ``"xla"`` on both problems.
+
+    Runs the recipe's logreg and PCA method grids through the fused scan
+    twice — once per kernel backend — on identical fleets (common random
+    numbers).  Fail-able outputs: same-platform Pallas-vs-XLA
+    bit-exactness across every result field, per-backend trajectory
+    digests (a rerun on the artifact's platform must reproduce each
+    backend's bits exactly), and the per-backend method rankings by median
+    final suboptimality.  Cross-platform, the digest check is skipped and
+    the Pallas-vs-XLA diff is gated by :data:`KERNEL_BACKEND_REL_TOL`
+    instead.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.problems import (
+        LogisticRegressionProblem,
+        PCAProblem,
+        make_genomics_like_matrix,
+        make_higgs_like,
+    )
+    from repro.experiments import (
+        EngineConfig,
+        default_convergence_methods,
+        run_convergence_batch,
+    )
+    from repro.experiments.grid import DEFAULT_REGIMES
+    from repro.latency.model import make_heterogeneous_cluster, sample_fleet
+
+    r = dict(KERNEL_BACKEND_RECIPE)
+    if recipe:
+        r.update(recipe)
+    regimes = {reg.name: reg for reg in DEFAULT_REGIMES}
+    if r["regime"] not in regimes:
+        raise GridMismatch(
+            f"unknown regime {r['regime']!r} in kernel_backend recipe"
+        )
+    regime = regimes[r["regime"]]
+    lr, pc = r["logreg"], r["pca"]
+    X, y = make_higgs_like(lr["num_samples"], seed=r["seed"])
+    problems = {
+        "logreg": (LogisticRegressionProblem(X=X, y=y), lr),
+        "pca": (
+            PCAProblem(
+                X=make_genomics_like_matrix(
+                    pc["n_rows"], pc["n_cols"], seed=r["seed"]
+                ),
+                k=pc["k"],
+            ),
+            pc,
+        ),
+    }
+    N, sp, T = r["n_workers"], r["subpartitions"], r["num_iterations"]
+    bitexact = True
+    max_rel = 0.0
+    cols: dict[str, dict] = {}
+    for pname, (prob, pr) in problems.items():
+        c_task = prob.compute_cost(1, max(prob.num_samples // (N * sp), 1))
+        cluster = make_heterogeneous_cluster(
+            N, seed=r["seed"], burst_rate=0.0, load_unit=c_task
+        )
+        traces = sample_fleet(
+            cluster,
+            r["n_scenarios"],
+            T,
+            burst_rate=regime.rate,
+            burst_factor_mean=regime.factor_mean,
+            burst_duration_mean=regime.duration_mean,
+            seed=r["seed"] + 1,
+        )
+        methods: dict[str, dict] = {}
+        for name in pr["methods"]:
+            cfg = default_convergence_methods(
+                N, w=pr["w"], eta=pr["eta"], subpartitions=sp
+            )[name]
+            runs = {}
+            for backend in ("xla", "pallas"):
+                runs[backend] = run_convergence_batch(
+                    prob, traces, cfg, T,
+                    eval_every=r["eval_every"], seed=r["seed"],
+                    engine=EngineConfig(kind="scan", kernel_backend=backend),
+                )
+            xla, pal = runs["xla"], runs["pallas"]
+            bitexact = bitexact and bool(
+                np.array_equal(xla.times, pal.times)
+                and np.array_equal(
+                    xla.suboptimality, pal.suboptimality, equal_nan=True
+                )
+                and np.array_equal(xla.fresh_counts, pal.fresh_counts)
+                and np.array_equal(
+                    xla.per_worker_latency, pal.per_worker_latency,
+                    equal_nan=True,
+                )
+                and xla.repartition_events == pal.repartition_events
+                and np.array_equal(xla.evictions, pal.evictions)
+                and np.array_equal(xla.rejected_stale, pal.rejected_stale)
+            )
+            a = np.asarray(xla.suboptimality)
+            b = np.asarray(pal.suboptimality)
+            fa, fb = np.isfinite(a), np.isfinite(b)
+            if not np.array_equal(fa, fb):
+                max_rel = float("inf")
+            elif fa.any():
+                rel = np.abs(a[fa] - b[fa]) / np.maximum(np.abs(a[fa]), 1e-12)
+                max_rel = max(max_rel, float(np.max(rel)))
+            entry = {}
+            for backend, res in runs.items():
+                entry[f"median_final_subopt_{backend}"] = float(
+                    np.median(np.asarray(res.suboptimality)[:, -1])
+                )
+                entry[f"digest_{backend}"] = _trajectory_digest(res)
+            methods[name] = entry
+        rankings = {}
+        for backend in ("xla", "pallas"):
+            col = f"median_final_subopt_{backend}"
+            rankings[backend] = sorted(
+                methods, key=lambda m, c=col: (methods[m][c], m)
+            )
+        cols[pname] = {
+            "methods": methods,
+            "ranking_xla": rankings["xla"],
+            "ranking_pallas": rankings["pallas"],
+        }
+    return {
+        "recipe": r,
+        "platform": jax.default_backend(),
+        "bitexact_pallas_vs_xla": bitexact,
+        "max_rel_diff_pallas_vs_xla": max_rel,
+        "problems": cols,
+    }
+
+
+def compare_kernel_backend_column(
+    committed: dict, fresh: dict
+) -> tuple[list[str], list[str]]:
+    """Diff the ``kernel_backend`` columns; returns (failures, warnings)."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    same_platform = committed.get("platform") == fresh.get("platform")
+    if not fresh.get("bitexact_pallas_vs_xla", False):
+        rel = fresh.get("max_rel_diff_pallas_vs_xla")
+        if fresh.get("platform") == "cpu":
+            failures.append(
+                "kernel_backend: pallas (interpret) no longer bit-exact vs "
+                "xla on cpu"
+            )
+        elif rel is None or rel > KERNEL_BACKEND_REL_TOL:
+            failures.append(
+                f"kernel_backend: pallas vs xla max relative diff {rel} "
+                f"exceeds tolerance {KERNEL_BACKEND_REL_TOL}"
+            )
+        else:
+            warnings.append(
+                f"kernel_backend: pallas vs xla not bit-exact on "
+                f"{fresh.get('platform')} (max rel diff {rel:.1e}, within "
+                "cross-backend tolerance)"
+            )
+    for pname, old_p in committed.get("problems", {}).items():
+        new_p = fresh.get("problems", {}).get(pname)
+        if new_p is None:
+            failures.append(
+                f"kernel_backend: problem column {pname!r} missing from rerun"
+            )
+            continue
+        for backend in ("xla", "pallas"):
+            ork = old_p.get(f"ranking_{backend}")
+            nrk = new_p.get(f"ranking_{backend}")
+            if ork != nrk:
+                failures.append(
+                    f"kernel_backend: {pname} {backend} final-suboptimality "
+                    f"ranking flipped {ork} -> {nrk}"
+                )
+            for m, om in old_p.get("methods", {}).items():
+                nm = new_p.get("methods", {}).get(m, {})
+                if same_platform and om.get(f"digest_{backend}") != nm.get(
+                    f"digest_{backend}"
+                ):
+                    failures.append(
+                        f"kernel_backend: {pname}/{m} {backend} trajectory "
+                        "digest changed (no longer bit-exact within backend)"
+                    )
+                ov = om.get(f"median_final_subopt_{backend}")
+                nv = nm.get(f"median_final_subopt_{backend}")
+                if ov and nv and ov > 0:
+                    drift = abs(nv / ov - 1.0)
+                    if drift > SPEEDUP_DRIFT_TOLERANCE:
+                        warnings.append(
+                            f"kernel_backend: {pname}/{m} {backend} "
+                            f"median_final_subopt drifted {drift:.0%} "
+                            f"({ov:.3g} -> {nv:.3g})"
+                        )
+    return failures, warnings
+
+
 def run_pca_grid_sharded_column(
     *,
     n_scenarios: int = 40,
@@ -742,6 +988,10 @@ def rerun_convergence(committed: dict) -> dict:
         )
     if "churn" in committed:
         payload["churn"] = run_churn_column(committed["churn"].get("recipe"))
+    if "kernel_backend" in committed:
+        payload["kernel_backend"] = run_kernel_backend_column(
+            committed["kernel_backend"].get("recipe")
+        )
     return payload
 
 
@@ -789,6 +1039,8 @@ def main(argv: list[str]) -> int:
                 scope += " + pca_grid_sharded column"
             if "churn" in committed:
                 scope += " + churn column"
+            if "kernel_backend" in committed:
+                scope += " + kernel_backend column"
         else:
             fresh = rerun_grid(committed)
             failures, warnings = compare_sweep(committed, fresh)

@@ -267,7 +267,9 @@ def fig10_12_convergence_sweep() -> None:
     paper-scale PCA column (n=50k genomics-like matrix, the paper's actual
     workload size) and the pca_grid_sharded column (10x that scenario grid
     through the shard_map scenario mesh, bit-exact vs the single-device
-    scan); emits the BENCH_convergence.json artifact."""
+    scan) and the kernel_backend column (both method grids under
+    kernel_backend="xla" and "pallas", bit-exact with per-backend
+    digests); emits the BENCH_convergence.json artifact."""
     from repro.experiments import (
         convergence_payload,
         default_convergence_methods,
@@ -351,6 +353,13 @@ def fig10_12_convergence_sweep() -> None:
 
     churn_payload = run_churn_column()
 
+    # kernel_backend column: the per-backend pinning tier — the logreg and
+    # PCA method grids through the fused scan under both kernel backends,
+    # Pallas (interpret on CPU) bit-exact vs XLA with per-backend digests
+    from benchmarks.bench_regression import run_kernel_backend_column
+
+    kernel_backend_payload = run_kernel_backend_column()
+
     payload = write_bench_convergence(
         out, "BENCH_convergence.json", gap=gap,
         scalar_seconds=extrapolated,
@@ -370,6 +379,7 @@ def fig10_12_convergence_sweep() -> None:
             "pca_grid_sharded": sharded_payload,
             "lb_scan": lb_payload,
             "churn": churn_payload,
+            "kernel_backend": kernel_backend_payload,
             # everything the regression gate needs to re-execute this grid
             # (benchmarks/bench_regression.py rerun_convergence)
             "recipe": {

@@ -84,6 +84,11 @@ def main() -> None:
     ap.add_argument("--slot-budget", type=int, default=None,
                     help="override the fused engine's §6 slot budget "
                     "(default repro.experiments.fused.LB_MAX_SLOTS)")
+    ap.add_argument("--kernel-backend", choices=("xla", "pallas"),
+                    default="xla",
+                    help="route the fused scan's §3 block-subgradient and "
+                    "§5 grid-cache hot paths through the Pallas kernel "
+                    "twins (interpret mode on CPU; bit-exact vs xla)")
     ap.add_argument("--load-balance", action="store_true",
                     help="run DSAG with the §6 load balancer in the loop "
                     "(runs inside the fused scan; slot universes above the "
@@ -103,6 +108,7 @@ def main() -> None:
         num_devices=args.devices,
         slot_budget=args.slot_budget,
         eval_every=args.eval_every,
+        kernel_backend=args.kernel_backend,
     )
 
     if args.paper_scale:
@@ -147,6 +153,7 @@ def main() -> None:
         f"{out.num_iterations} iterations in {out.engine_seconds:.2f}s "
         f"({args.engine} engine"
         + (f", {args.devices}-device grid" if args.devices else "")
+        + (", pallas kernels" if args.kernel_backend == "pallas" else "")
         + ")"
     )
 

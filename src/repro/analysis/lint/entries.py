@@ -108,12 +108,15 @@ def _probe_churn_traces():
     )
 
 
-def _fused_probe(problem, config, *, slot_budget=None, traces=None) -> EntryProbe:
+def _fused_probe(
+    problem, config, *, slot_budget=None, traces=None, kernel_backend="xla"
+) -> EntryProbe:
     """Trace the production scan body with production-built operands."""
     if traces is None:
         traces = _probe_traces()
     spec, kernels, scan_args = fused.prepare_scan_inputs(
-        problem, traces, config, _PROBE_ITERS, slot_budget=slot_budget
+        problem, traces, config, _PROBE_ITERS, slot_budget=slot_budget,
+        kernel_backend=kernel_backend,
     )
     fn = functools.partial(fused._run_scan, kernels, spec)
     with enable_x64():
@@ -203,6 +206,30 @@ def _build_fused_pca_grid() -> EntryProbe:
     probe = _fused_probe(_probe_pca(), cfg)
     probe.name = "fused_pca_grid"
     probe.description = "fused scan body, PCA, grid §5 cache"
+    return probe
+
+
+def _build_fused_logreg_grid_pallas() -> EntryProbe:
+    """The Pallas-backed scan body: the structural walkers recurse into
+    ``pallas_call`` kernel jaxprs, so TL002-TL005 audit the §3
+    ``block_sub`` and §5 ``cache_events`` kernels in their production
+    surroundings (interpret mode traces identically to compiled)."""
+    cfg = MethodConfig(name="dsag", w=3, subpartitions=2)
+    probe = _fused_probe(_probe_logreg(), cfg, kernel_backend="pallas")
+    probe.name = "fused_logreg_grid_pallas"
+    probe.description = (
+        "fused scan body, logreg, grid §5 cache, Pallas kernel backend"
+    )
+    return probe
+
+
+def _build_fused_pca_grid_pallas() -> EntryProbe:
+    cfg = MethodConfig(name="dsag", w=3, subpartitions=2)
+    probe = _fused_probe(_probe_pca(), cfg, kernel_backend="pallas")
+    probe.name = "fused_pca_grid_pallas"
+    probe.description = (
+        "fused scan body, PCA, grid §5 cache, Pallas kernel backend"
+    )
     return probe
 
 
@@ -327,6 +354,8 @@ ENTRIES: dict[str, Callable[[], EntryProbe]] = {
     "fused_logreg_tiled": _build_fused_logreg_tiled,
     "fused_logreg_churn": _build_fused_logreg_churn,
     "fused_pca_grid": _build_fused_pca_grid,
+    "fused_logreg_grid_pallas": _build_fused_logreg_grid_pallas,
+    "fused_pca_grid_pallas": _build_fused_pca_grid_pallas,
     "kernels_logreg": _build_kernels_logreg,
     "kernels_pca": _build_kernels_pca,
     "lb_update": _build_lb_update,

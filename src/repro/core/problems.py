@@ -41,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.kernels import block_sub
+
 
 class FiniteSumProblem:
     """Interface shared by the coordinator/cluster simulator.
@@ -202,6 +204,10 @@ class FusedKernels:
     suboptimality: Callable  # [S, ...] -> [S]
     project: Callable  # [S, ...] -> [S, ...]
     regularizer_grad: Callable  # [S, ...] -> [S, ...]
+    # Pallas twin of sub_blocks — (Vb, starts, widths, pad_width, interpret)
+    # with both trailing args static; None when the problem has no Pallas
+    # kernels (the engine's kernel-backend capability check reports it)
+    sub_blocks_pallas: Callable | None = None
 
     def __post_init__(self):
         self.sub_blocks_jit = jax.jit(self.sub_blocks, static_argnums=3)
@@ -340,6 +346,15 @@ class PCAProblem(FiniteSumProblem):
             xg = xg * mask[:, :, None]
             return (-(jnp.swapaxes(xg, 1, 2) @ (xg @ Vb)))[:g]
 
+        def sub_blocks_pallas(Vb, starts, widths, pad_width: int, interpret: bool):
+            # same _pad_pow2 batching as the XLA form, then one Pallas
+            # program per task evaluating the identical expression (see
+            # kernels/block_sub.py for the bit-exactness contract)
+            Vb, starts, widths, g = _pad_pow2(Vb, starts, widths)
+            return block_sub.pca_block_sub(
+                Xj, Vb, starts, widths, pad_width, interpret=interpret
+            )[:g]
+
         def explained_one(V):
             xv = X64 @ V.astype(jnp.float64)
             return jnp.sum(xv * xv)
@@ -369,6 +384,7 @@ class PCAProblem(FiniteSumProblem):
             suboptimality=suboptimality,
             project=project,
             regularizer_grad=lambda V_stack: V_stack,  # ∇ 1/2||V||_F^2
+            sub_blocks_pallas=sub_blocks_pallas,
         )
         self._explained_jit = jax.jit(lambda Vs: jax.lax.map(explained_one, Vs))
         return self._kernels
@@ -470,6 +486,12 @@ class LogisticRegressionProblem(FiniteSumProblem):
             s = jax.nn.sigmoid(-z)
             return (-jnp.sum(xg * (yg * s)[:, :, None], axis=1) / n)[:g]
 
+        def sub_blocks_pallas(Vb, starts, widths, pad_width: int, interpret: bool):
+            Vb, starts, widths, g = _pad_pow2(Vb, starts, widths)
+            return block_sub.logreg_block_sub(
+                Xj, yj, Vb, starts, widths, pad_width, interpret=interpret
+            )[:g]
+
         def objective_one(V):
             V64 = V.astype(jnp.float64)
             z = y64 * (X64 @ V64)
@@ -498,6 +520,7 @@ class LogisticRegressionProblem(FiniteSumProblem):
             suboptimality=suboptimality,
             project=lambda V_stack: V_stack,  # G = identity
             regularizer_grad=lambda V_stack: lam * V_stack,
+            sub_blocks_pallas=sub_blocks_pallas,
         )
         return self._kernels
 

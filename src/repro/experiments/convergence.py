@@ -53,7 +53,13 @@ from repro.cluster.simulator import (
 )
 from repro.core.gradient_cache import BatchedGradientCache, scenario_ranks
 from repro.core.problems import FiniteSumProblem
-from repro.experiments.engine import EngineConfig, as_engine_config
+from repro.experiments.engine import (
+    CAP_PALLAS_HOST,
+    EngineCapability,
+    EngineCapabilityError,
+    EngineConfig,
+    as_engine_config,
+)
 from repro.latency.model import ClusterLatencyModel, FleetTraces, sample_fleet
 from repro.latency.profiler import MomentBuffer
 from repro.lb.optimizer import LoadBalanceOptimizer
@@ -162,6 +168,21 @@ def run_convergence_batch(
             problem, config, traces.num_workers, slot_budget=eng.slot_budget
         )
         kind = "scan" if cap.supported else "host"
+    if kind == "host" and eng.kernel_backend == "pallas":
+        # the host loop drives the problem's numpy wrappers — there is no
+        # Pallas path to take, so honoring the request is impossible
+        raise EngineCapabilityError(
+            EngineCapability(
+                supported=False,
+                code=CAP_PALLAS_HOST,
+                detail=(
+                    "kernel_backend='pallas' requires the fused scan "
+                    "engine; this config resolved to kind='host' "
+                    "(pass EngineConfig(kind='scan') or drop the Pallas "
+                    "backend)"
+                ),
+            )
+        )
     if kind == "scan":
         from repro.experiments.fused import run_convergence_scan
 

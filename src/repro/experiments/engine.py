@@ -35,8 +35,18 @@ CAP_TILED = "slot-universe-tiled"
 #: even the tiled cache's resident active-slot set exceeds the budget —
 #: the one genuinely unsupported fused-scan case (route to the host engine)
 CAP_ACTIVE_SET = "active-slots-exceed-budget"
+#: kernel_backend="pallas" requested but the problem publishes no Pallas
+#: kernels (FusedKernels.sub_blocks_pallas is None)
+CAP_PALLAS_UNAVAILABLE = "pallas-kernels-unavailable"
+#: kernel_backend="pallas" requested for a problem whose in-flight value
+#: dtype the Pallas kernels don't cover (only float32 is validated)
+CAP_PALLAS_DTYPE = "pallas-unsupported-dtype"
+#: kernel_backend="pallas" requested together with the host engine, which
+#: drives the problem's numpy wrappers and never takes the Pallas path
+CAP_PALLAS_HOST = "pallas-requires-scan-engine"
 
 _KINDS = ("auto", "scan", "host")
+_KERNEL_BACKENDS = ("xla", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +73,13 @@ class EngineConfig:
     tiled active-slot cache instead of falling back to the host engine.
 
     ``eval_every`` is the suboptimality evaluation cadence (iterations).
+
+    ``kernel_backend`` selects how the fused scan evaluates its two hot
+    paths (the §3 block-subgradient gather and the §5 grid-cache event
+    application): ``"xla"`` — the jnp forms (default), ``"pallas"`` — the
+    ``repro.kernels`` Pallas twins (``interpret=True`` on CPU so CI
+    exercises the path everywhere; compiled on TPU).  Results are pinned
+    bit-exact across backends on the same platform.
     """
 
     kind: str = "auto"
@@ -70,11 +87,17 @@ class EngineConfig:
     mesh: Any | None = None  # a 1-D jax.sharding.Mesh over the batch axis
     slot_budget: int | None = None
     eval_every: int = 1
+    kernel_backend: str = "xla"
 
     def __post_init__(self):
         if self.kind not in _KINDS:
             raise ValueError(
                 f"unknown engine kind {self.kind!r}; expected one of {_KINDS}"
+            )
+        if self.kernel_backend not in _KERNEL_BACKENDS:
+            raise ValueError(
+                f"unknown kernel_backend {self.kernel_backend!r}; expected "
+                f"one of {_KERNEL_BACKENDS}"
             )
         if self.num_devices is not None and self.num_devices < 1:
             raise ValueError("num_devices must be >= 1")

@@ -100,12 +100,15 @@ from repro.core.problems import FiniteSumProblem, FusedKernels, width_bucket
 from repro.experiments.engine import (
     CAP_ACTIVE_SET,
     CAP_OK,
+    CAP_PALLAS_DTYPE,
+    CAP_PALLAS_UNAVAILABLE,
     CAP_TILED,
     EngineCapability,
     EngineCapabilityError,
     EngineConfig,
     as_engine_config,
 )
+from repro.kernels.cache_events import grid_cache_update
 from repro.latency.model import FleetTraces, comp_latency_expr
 from repro.lb import jit_optimizer as jlb
 from repro.lb.partitioner import p_start, p_stop
@@ -172,6 +175,13 @@ class _StaticSpec:
     # slowdown rows + a per-iteration liveness mask.  False compiles the
     # exact pre-churn body — the churn operands are then unused.
     has_churn: bool = False
+    # hot-path kernel backend: "xla" (jnp forms) or "pallas" (the
+    # repro.kernels twins).  kernel_interpret is resolved eagerly by
+    # prepare_scan_inputs — never read jax.default_backend() at trace
+    # time (a stale-cache hazard; see kernels/ops.py) — and is part of
+    # this hashable spec, hence of every jit key.
+    kernel_backend: str = "xla"
+    kernel_interpret: bool = True
 
 
 def _possible_widths(n_local: int, p: int, full: bool) -> set:
@@ -190,6 +200,8 @@ def _static_spec(
     tiled: bool = False,
     active_cap: int = 0,
     has_churn: bool = False,
+    kernel_backend: str = "xla",
+    kernel_interpret: bool = True,
 ) -> _StaticSpec:
     n = problem.num_samples
     N = num_workers
@@ -255,12 +267,29 @@ def _static_spec(
         lb_margin=float(cfg.margin),
         lb_p0=int(cfg.subpartitions),
         has_churn=bool(has_churn),
+        kernel_backend=kernel_backend,
+        kernel_interpret=bool(kernel_interpret),
     )
 
 
 def _bcast(mask, value_ndim: int):
     """Reshape a mask so it broadcasts over trailing value dimensions."""
     return mask.reshape(mask.shape + (1,) * value_ndim)
+
+
+def _sub_blocks_for(kernels: FusedKernels, spec: _StaticSpec):
+    """The §3 block-subgradient callable for the spec's kernel backend.
+
+    ``"pallas"`` binds the problem's Pallas twin with the spec's static
+    interpret flag (capability-checked by :func:`kernel_backend_capability`
+    before any spec with it is built); both return the same
+    ``(Vb, starts, widths, pad_width) -> [G, ...]`` signature.
+    """
+    if spec.kernel_backend == "pallas":
+        pallas_fn = kernels.sub_blocks_pallas
+        assert pallas_fn is not None, "capability check admitted a None twin"
+        return functools.partial(pallas_fn, interpret=spec.kernel_interpret)
+    return kernels.sub_blocks
 
 
 def _subgradients(kernels: FusedKernels, spec: _StaticSpec, V, lo, hi):
@@ -281,8 +310,9 @@ def _subgradients(kernels: FusedKernels, spec: _StaticSpec, V, lo, hi):
     w_f = widths.reshape(-1)
     out = None
     prev = 0
+    sub_blocks = _sub_blocks_for(kernels, spec)
     for b in spec.buckets:
-        block = kernels.sub_blocks(Vb, lo_f, w_f, b).reshape(
+        block = sub_blocks(Vb, lo_f, w_f, b).reshape(
             (S, N) + kernels.value_shape
         )
         if b == n:
@@ -353,6 +383,61 @@ def _apply_cache_events(
     )
     return dict(
         sums=sums, values=values, iters=iters, covered=covered, rejected=rejected
+    )
+
+
+def _apply_cache_events_pallas(
+    spec: _StaticSpec,
+    slot_width,
+    cache_state,
+    ev_valid,
+    ev_time,
+    ev_slot,
+    ev_tag,
+    ev_vals,
+):
+    """The §5 grid-cache update through the fused Pallas kernel.
+
+    Ranking and pre-gathering stay in XLA (the stable argsort +
+    ``take_along_axis`` moves :func:`_apply_cache_events` performs inside
+    its loop, hoisted out — pure data movement, bit-identical operands);
+    the rank walk itself runs as ``kernels/cache_events.grid_cache_update``,
+    one program per scenario, fusing the value-table scatter and the
+    running-sum update into a single pass.  Value dimensions are flattened
+    to one feature axis for the kernel and reshaped back (a bitwise no-op).
+    """
+    st = cache_state
+    S, E_ev = ev_time.shape
+    E = spec.num_slots
+    vdim = st["values"].ndim - 2
+    vshape = st["values"].shape[2:]
+    F = int(np.prod(vshape)) if vdim else 1
+    order = jnp.argsort(jnp.where(ev_valid, ev_time, jnp.inf), axis=1, stable=True)
+    valid_r = jnp.take_along_axis(ev_valid, order, axis=1)
+    slot_r = jnp.clip(jnp.take_along_axis(ev_slot, order, axis=1), 0, E - 1)
+    tag_r = jnp.take_along_axis(ev_tag, order, axis=1)
+    vals_r = jnp.take_along_axis(
+        ev_vals, order.reshape(order.shape + (1,) * vdim), axis=1
+    ).astype(jnp.float64)
+    sums, values, iters, covered, rejected = grid_cache_update(
+        valid_r,
+        slot_r,
+        tag_r,
+        vals_r.reshape(S, E_ev, F),
+        st["sums"].reshape(S, F),
+        st["values"].reshape(S, E, F),
+        st["iters"],
+        st["covered"],
+        st["rejected"],
+        slot_width,
+        interpret=spec.kernel_interpret,
+    )
+    return dict(
+        sums=sums.reshape(st["sums"].shape),
+        values=values.reshape(st["values"].shape),
+        iters=iters,
+        covered=covered,
+        rejected=rejected,
     )
 
 
@@ -1067,6 +1152,13 @@ def _run_scan(
                     spec, slot_width, slot_starts, slot_stops, ev_worker,
                     cache_state, ev_valid, ev_time, ev_slot, ev_tag, ev_vals,
                 )
+            elif spec.kernel_backend == "pallas":
+                # grid cache only: the §6 universe/tiled walks stay XLA
+                # (their eviction logic has no Pallas twin yet — ROADMAP)
+                cache_state = _apply_cache_events_pallas(
+                    spec, slot_width, cache_state, ev_valid, ev_time, ev_slot,
+                    ev_tag, ev_vals,
+                )
             else:
                 cache_state = _apply_cache_events(
                     spec, slot_width, cache_state, ev_valid, ev_time, ev_slot,
@@ -1079,7 +1171,7 @@ def _run_scan(
         elif spec.name == "coded":
             slot_cur = None
             # idealized MDS bound: exact gradient at full-range width
-            g = kernels.sub_blocks(
+            g = _sub_blocks_for(kernels, spec)(
                 V,
                 jnp.ones((S,), jnp.int64),
                 jnp.full((S,), n, jnp.int64),
@@ -1458,6 +1550,49 @@ def scan_unsupported_reason(
     return None if cap.supported else cap.detail
 
 
+def kernel_backend_capability(
+    problem: FiniteSumProblem, kernel_backend: str = "xla"
+) -> EngineCapability:
+    """Whether the fused scan can route this problem's hot paths to Pallas.
+
+    ``"xla"`` is always supported.  ``"pallas"`` requires the problem to
+    publish Pallas twins (``FusedKernels.sub_blocks_pallas``) and a
+    float32 in-flight value dtype (the only dtype the kernels are
+    validated for — see ``kernels/block_sub.py``).  Reported codes:
+    :data:`~repro.experiments.engine.CAP_PALLAS_UNAVAILABLE`,
+    :data:`~repro.experiments.engine.CAP_PALLAS_DTYPE`.
+    """
+    if kernel_backend != "pallas":
+        return EngineCapability(
+            supported=True, code=CAP_OK, detail="xla kernel backend"
+        )
+    kernels = problem.fused_kernels()
+    if kernels.sub_blocks_pallas is None:
+        return EngineCapability(
+            supported=False,
+            code=CAP_PALLAS_UNAVAILABLE,
+            detail=(
+                f"kernel_backend='pallas' requested but "
+                f"{type(problem).__name__} publishes no Pallas kernels "
+                f"(FusedKernels.sub_blocks_pallas is None); use "
+                f"kernel_backend='xla'"
+            ),
+        )
+    if np.dtype(kernels.value_dtype) != np.float32:
+        return EngineCapability(
+            supported=False,
+            code=CAP_PALLAS_DTYPE,
+            detail=(
+                f"kernel_backend='pallas' supports float32 in-flight "
+                f"values only; {type(problem).__name__} declares "
+                f"{np.dtype(kernels.value_dtype).name}"
+            ),
+        )
+    return EngineCapability(
+        supported=True, code=CAP_OK, detail="pallas kernel backend available"
+    )
+
+
 def prepare_scan_inputs(
     problem: FiniteSumProblem,
     traces: FleetTraces,
@@ -1469,6 +1604,7 @@ def prepare_scan_inputs(
     seed: int = 0,
     slot_budget: int | None = None,
     pad: int = 0,
+    kernel_backend: str = "xla",
 ):
     """Static spec + kernels + the full ``_run_scan`` operand tuple.
 
@@ -1487,6 +1623,13 @@ def prepare_scan_inputs(
     )
     if not cap.supported:
         raise EngineCapabilityError(cap)
+    kcap = kernel_backend_capability(problem, kernel_backend)
+    if not kcap.supported:
+        raise EngineCapabilityError(kcap)
+    # resolve the interpret decision NOW, outside any trace: reading
+    # jax.default_backend() inside a jitted wrapper bakes a stale value
+    # into the cached executable (the kernels/ops.py bug class)
+    kernel_interpret = jax.default_backend() == "cpu"
     tiled = cap.code == CAP_TILED
     S = traces.num_scenarios
     T = num_iterations
@@ -1520,6 +1663,8 @@ def prepare_scan_inputs(
         tiled=tiled,
         active_cap=active_cap,
         has_churn=traces.churn is not None,
+        kernel_backend=kernel_backend,
+        kernel_interpret=kernel_interpret,
     )
     kernels = problem.fused_kernels()
     V0 = np.repeat(problem.init(seed)[None], S, axis=0)
@@ -1606,9 +1751,9 @@ def run_convergence_scan(
 
     Bit-exact against the host engine and the scalar simulator on the same
     traces (see module docstring), §6 load-balanced configs included.
-    ``engine`` supplies the scenario mesh (``mesh`` / ``num_devices``) and
-    the slot budget; its ``kind`` is ignored here — this *is* the scan
-    engine.  Raises :class:`~repro.experiments.engine.EngineCapabilityError`
+    ``engine`` supplies the scenario mesh (``mesh`` / ``num_devices``),
+    the slot budget, and the ``kernel_backend``; its ``kind`` is ignored
+    here — this *is* the scan engine.  Raises :class:`~repro.experiments.engine.EngineCapabilityError`
     for the one unsupported case (see :func:`scan_capability`)."""
     from repro.experiments.convergence import ConvergenceBatchResult
 
@@ -1634,6 +1779,7 @@ def run_convergence_scan(
         seed=seed,
         slot_budget=eng.slot_budget,
         pad=pad,
+        kernel_backend=eng.kernel_backend,
     )
     with enable_x64():
         outs = _scan_jit_for(kernels, mesh)(kernels, spec, *scan_args)

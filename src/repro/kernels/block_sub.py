@@ -1,0 +1,169 @@
+"""Pallas kernels for the §3 width-bucketed block-subgradient gather.
+
+These back ``FusedKernels.sub_blocks`` when the fused engine runs with
+``EngineConfig(kernel_backend="pallas")``: one kernel dispatch per pow2
+``width_bucket``, grid ``(G,)`` over the task batch, streaming each
+task's row window of the data matrix through VMEM once (the
+``gram_matvec.py`` accumulator pattern, minus the cross-block scratch —
+a §3 block fits one program).
+
+Bit-exactness contract (the reason these twins exist at all): the fused
+engine's scan == host == scalar pins rest on every engine evaluating a
+given width at the same static ``width_bucket`` pad with the same float
+expressions.  So each program computes the *literally identical* jnp
+expression as the XLA path at the identical ``[1, pad, d]`` shape — in
+interpret mode that traces to the same CPU XLA ops, and the repo's
+pinned batch-invariance of ``sub_blocks`` closes the loop to the
+``[G, pad, d]`` batched form.  Two consequences:
+
+* the XLA path's clip-gather ``X[clip(start-1+arange(pad), 0, n-1)]``
+  is replaced by a *contiguous* window load: within-width rows never
+  clip (``stop <= n``) and rows past the width are mask-zeroed, so a
+  clamped window offset plus a roll moves the same bits into place
+  (``off = min(start-1, n-pad)``, roll left by ``start-1-off``);
+* the mask is a real ``iota < width`` comparison inside the kernel, so
+  the tracelint TL003 mask-evidence walk (which recurses into
+  ``pallas_call`` jaxprs) sees the same discipline as the XLA form.
+
+On TPU the window load from ``ANY``-space would be an explicit DMA;
+interpret mode (the only validated deployment — see ARCHITECTURE.md)
+lowers ``pl.load`` directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _window_table(starts, widths, n: int, pad_width: int):
+    """[G, 3] int32 (offset, shift, width) scalar-prefetch table.
+
+    ``offset`` is the clamped contiguous window start, ``shift`` how far
+    the roll must move row 0 back into place (0 whenever the window fits
+    without clamping; at most ``pad_width - width`` otherwise, so rolled
+    rows always land in the masked tail).
+    """
+    starts_m1 = (starts - 1).astype(jnp.int32)
+    off = jnp.minimum(starts_m1, jnp.int32(n - pad_width))
+    shift = starts_m1 - off
+    return jnp.stack([off, shift, widths.astype(jnp.int32)], axis=1)
+
+
+def _masked_window(tab_ref, x_ref, pad_width: int, dtype):
+    """Load one task's ``[1, pad, d]`` row window plus its ``[1, pad]`` mask."""
+    g = pl.program_id(0)
+    off = tab_ref[g, 0]
+    shift = tab_ref[g, 1]
+    width = tab_ref[g, 2]
+    win = pl.load(x_ref, (pl.dslice(off, pad_width), slice(None)))
+    xg = jnp.roll(win, -shift, axis=0)[None]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (1, pad_width), 1) < width
+    ).astype(dtype)
+    return xg, mask, shift
+
+
+def _pca_kernel(tab_ref, x_ref, v_ref, o_ref, *, pad_width: int):
+    xg, mask, _ = _masked_window(tab_ref, x_ref, pad_width, x_ref.dtype)
+    xg = xg * mask[:, :, None]
+    # identical expression to problems.PCAProblem.sub_blocks at [1, pad, d]
+    o_ref[...] = -(jnp.swapaxes(xg, 1, 2) @ (xg @ v_ref[...]))
+
+
+def _logreg_kernel(tab_ref, x_ref, y_ref, v_ref, o_ref, *, pad_width: int, n: int):
+    xg, mask, shift = _masked_window(tab_ref, x_ref, pad_width, y_ref.dtype)
+    g = pl.program_id(0)
+    off = tab_ref[g, 0]
+    yw = pl.load(y_ref, (pl.dslice(off, pad_width),))
+    yg = jnp.roll(yw, -shift, axis=0)[None] * mask
+    # identical reduce-based expression to LogisticRegressionProblem.sub_blocks
+    z = yg * jnp.sum(xg * v_ref[...][:, None, :], axis=2)
+    s = jax.nn.sigmoid(-z)
+    o_ref[...] = -jnp.sum(xg * (yg * s)[:, :, None], axis=1) / n
+
+
+def _check_pad(n: int, pad_width: int):
+    if not 1 <= pad_width <= n:
+        raise ValueError(
+            f"pad_width must satisfy 1 <= pad_width <= num_samples "
+            f"({pad_width} vs n={n}); width_bucket never exceeds n, so this "
+            f"is a caller bug"
+        )
+
+
+def pca_block_sub(
+    X: jnp.ndarray,  # [n, d] data matrix (stays in ANY/HBM space)
+    Vb: jnp.ndarray,  # [G, d, k] per-task iterates
+    starts: jnp.ndarray,  # [G] 1-indexed interval starts
+    widths: jnp.ndarray,  # [G] interval widths (rows past each are masked)
+    pad_width: int,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """§3 PCA block subgradients ``-X_b^T (X_b V)`` at a static gather width.
+
+    Pallas twin of ``PCAProblem.sub_blocks``'s body (pre-``_pad_pow2``):
+    returns ``[G, d, k]`` with row ``g`` bit-identical to the XLA form.
+    """
+    n, d = X.shape
+    G, d2, k = Vb.shape
+    assert d == d2, (X.shape, Vb.shape)
+    _check_pad(n, pad_width)
+    tab = _window_table(starts, widths, n, pad_width)
+    return pl.pallas_call(
+        functools.partial(_pca_kernel, pad_width=pad_width),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(G,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((1, d, k), lambda g, tab: (g, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d, k), lambda g, tab: (g, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((G, d, k), Vb.dtype),
+        interpret=interpret,
+    )(tab, X, Vb)
+
+
+def logreg_block_sub(
+    X: jnp.ndarray,  # [n, d]
+    y: jnp.ndarray,  # [n] labels in {-1, +1}
+    Vb: jnp.ndarray,  # [G, d]
+    starts: jnp.ndarray,  # [G]
+    widths: jnp.ndarray,  # [G]
+    pad_width: int,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """§3 logistic-regression block subgradients at a static gather width.
+
+    Pallas twin of ``LogisticRegressionProblem.sub_blocks``'s body
+    (pre-``_pad_pow2``), keeping its reduce-based (batch-invariant) form:
+    returns ``[G, d]`` with row ``g`` bit-identical to the XLA form.
+    """
+    n, d = X.shape
+    G, d2 = Vb.shape
+    assert d == d2 and y.shape == (n,), (X.shape, y.shape, Vb.shape)
+    _check_pad(n, pad_width)
+    tab = _window_table(starts, widths, n, pad_width)
+    return pl.pallas_call(
+        functools.partial(_logreg_kernel, pad_width=pad_width, n=n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(G,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((1, d), lambda g, tab: (g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda g, tab: (g, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((G, d), Vb.dtype),
+        interpret=interpret,
+    )(tab, X, y, Vb)

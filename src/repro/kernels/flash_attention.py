@@ -25,10 +25,14 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, block_q, block_k
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, block_q, block_k, true_sq, true_sk,
 ):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
+    # bottom-right alignment: query row q attends keys <= q + (sk - sq),
+    # matching ref.flash_attention_ref for sq != sk (decode-style shapes)
+    offs = true_sk - true_sq
 
     @pl.when(ki == 0)
     def _init():
@@ -38,8 +42,11 @@ def _flash_kernel(
 
     run = True
     if causal:
-        # kv block strictly above the q block's diagonal contributes nothing
-        run = ki * block_k <= (qi + 1) * block_q - 1
+        # kv blocks strictly above the (aligned) diagonal or made entirely
+        # of zero-padded tail keys contribute nothing
+        run = (ki * block_k <= (qi + 1) * block_q - 1 + offs) & (
+            ki * block_k < true_sk
+        )
 
     @pl.when(run)
     def _body():
@@ -50,7 +57,9 @@ def _flash_kernel(
         if causal:
             qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
             kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-            s = jnp.where(kpos <= qpos, s, NEG_INF)
+            # the kpos < true_sk bound excludes zero-padded tail keys, which
+            # the diagonal alone only masks when sq == sk
+            s = jnp.where((kpos <= qpos + offs) & (kpos < true_sk), s, NEG_INF)
         m_prev = m_ref[...]  # [bq, 1]
         m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -76,14 +85,23 @@ def flash_attention(
     block_k: int = 128,
     scale: float | None = None,
     interpret: bool = False,
+    true_sq: int | None = None,
+    true_sk: int | None = None,
 ) -> jnp.ndarray:
+    """``true_sq`` / ``true_sk`` are the pre-padding sequence lengths; the
+    causal mask aligns bottom-right to them and excludes padded tail keys.
+    They default to the padded lengths (top-left mask over the full
+    buffers — the pre-fix behavior, correct only when no key padding)."""
     bh, sq, d = q.shape
     sk = k.shape[1]
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    true_sq = sq if true_sq is None else true_sq
+    true_sk = sk if true_sk is None else true_sk
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     grid = (bh, sq // block_q, sk // block_k)
     kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, block_q=block_q, block_k=block_k
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, true_sq=true_sq, true_sk=true_sk,
     )
     return pl.pallas_call(
         kernel,

@@ -4,6 +4,16 @@ On CPU (this container) the kernels run in ``interpret=True`` mode for
 correctness validation; on TPU they compile natively.  Wrappers handle
 padding to hardware-aligned tiles and expose the same signatures as the
 ``ref.py`` oracles.
+
+The public entry points are plain functions that resolve the
+``interpret=None`` default *eagerly* (``jax.default_backend()`` is a
+process-level lookup — reading it at trace time inside a jitted wrapper
+bakes the decision into the cached executable, which goes stale when the
+default backend changes) and only then enter an inner jit with the
+resolved bool as a static argument, so every interpret decision is part
+of the jit key.  Degenerate shapes (empty group axes, zero rows) return
+through the ``ref.py`` oracles instead of launching zero-size grids,
+whose output buffers Pallas never writes.
 """
 
 from __future__ import annotations
@@ -28,6 +38,17 @@ def _round_up(x: int, m: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _gram_matvec_jit(x, v, *, block_rows: int, interpret: bool):
+    n, d = x.shape
+    _, k = v.shape
+    n_pad = _round_up(n, block_rows)
+    k_pad = _round_up(k, 128)
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, k_pad - k)))
+    out = gram_matvec(xp, vp, block_rows=block_rows, interpret=interpret)
+    return out[:, :k]
+
+
 def gram_matvec_op(
     x: jnp.ndarray,
     v: jnp.ndarray,
@@ -39,15 +60,25 @@ def gram_matvec_op(
     interpret = _interpret_default() if interpret is None else interpret
     n, d = x.shape
     _, k = v.shape
-    n_pad = _round_up(n, block_rows)
-    k_pad = _round_up(k, 128)
-    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, k_pad - k)))
-    out = gram_matvec(xp, vp, block_rows=block_rows, interpret=interpret)
-    return out[:, :k]
+    if n == 0 or d == 0 or k == 0:
+        # a zero-size dimension would make the row grid empty (the output
+        # buffer is never written) or produce degenerate tiles; the oracle
+        # is exact here (an empty contraction is all zeros)
+        return ref.gram_matvec_ref(x, v)
+    return _gram_matvec_jit(x, v, block_rows=block_rows, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _dsag_cache_update_jit(g, c, h, mask, *, block: int, interpret: bool):
+    p, n = g.shape
+    n_pad = _round_up(n, block)
+    gp = jnp.pad(g, ((0, 0), (0, n_pad - n)))
+    cp = jnp.pad(c, ((0, 0), (0, n_pad - n)))
+    hp = jnp.pad(h, ((0, n_pad - n),))
+    new_c, new_h = dsag_cache_update(gp, cp, hp, mask, block=block, interpret=interpret)
+    return new_c[:, :n], new_h[:n]
+
+
 def dsag_cache_update_op(
     g: jnp.ndarray,
     c: jnp.ndarray,
@@ -60,17 +91,43 @@ def dsag_cache_update_op(
     """Fused masked DSAG cache update over flattened [p, n] slots."""
     interpret = _interpret_default() if interpret is None else interpret
     p, n = g.shape
-    n_pad = _round_up(n, block)
-    gp = jnp.pad(g, ((0, 0), (0, n_pad - n)))
-    cp = jnp.pad(c, ((0, 0), (0, n_pad - n)))
-    hp = jnp.pad(h, ((0, n_pad - n),))
-    new_c, new_h = dsag_cache_update(gp, cp, hp, mask, block=block, interpret=interpret)
-    return new_c[:, :n], new_h[:n]
+    if p == 0 or n == 0:
+        # p == 0 makes the inner grid dim zero — the h accumulator scratch
+        # is never initialized or flushed, so new_h would be garbage; the
+        # oracle's empty sum (h + 0) is the exact semantics
+        return ref.dsag_update_ref(g, c, h, mask)
+    return _dsag_cache_update_jit(g, c, h, mask, block=block, interpret=interpret)
 
 
 @functools.partial(
     jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
 )
+def _flash_attention_jit(q, k, v, *, causal, block_q, block_k, interpret):
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    d_pad = _round_up(d, 128)
+    sq_pad = _round_up(sq, block_q)
+    sk_pad = _round_up(sk, block_k)
+
+    def pad(t, s_pad):
+        return jnp.pad(
+            t, ((0, 0), (0, 0), (0, s_pad - t.shape[2]), (0, d_pad - d))
+        ).reshape(b * h, s_pad, d_pad)
+
+    qp, kp, vp = pad(q, sq_pad), pad(k, sk_pad), pad(v, sk_pad)
+    out = flash_attention(
+        qp, kp, vp, causal=causal, block_q=block_q, block_k=block_k,
+        scale=1.0 / (d ** 0.5),  # true head_dim, not the padded one
+        interpret=interpret,
+        # true sequence lengths: the causal mask is bottom-right aligned to
+        # them and padded tail keys are excluded explicitly, so sq != sk and
+        # unaligned sk are handled (not silently mis-masked)
+        true_sq=sq,
+        true_sk=sk,
+    )
+    return out.reshape(b, h, sq_pad, d_pad)[:, :, :sq, :d]
+
+
 def flash_attention_op(
     q: jnp.ndarray,  # [b, h, sq, d]
     k: jnp.ndarray,
@@ -83,28 +140,25 @@ def flash_attention_op(
 ) -> jnp.ndarray:
     """Flash attention over [b, h, s, d]; pads head_dim to 128 lanes."""
     interpret = _interpret_default() if interpret is None else interpret
-    b, h, sq, d = q.shape
+    sq = q.shape[2]
     sk = k.shape[2]
-    d_pad = _round_up(d, 128)
-    sq_pad = _round_up(sq, block_q)
-    sk_pad = _round_up(sk, block_k)
-
-    def pad(t, s_pad):
-        return jnp.pad(
-            t, ((0, 0), (0, 0), (0, s_pad - t.shape[2]), (0, d_pad - d))
-        ).reshape(b * h, s_pad, d_pad)
-
     if not causal and sk % block_k != 0:
         # zero-padded keys would enter a non-causal softmax; callers must
-        # align sk (the causal mask already excludes tail pads when sq == sk)
+        # align sk (the causal path masks them via the true-length bound)
         raise ValueError(f"non-causal flash requires sk % block_k == 0, got {sk}")
-    qp, kp, vp = pad(q, sq_pad), pad(k, sk_pad), pad(v, sk_pad)
-    out = flash_attention(
-        qp, kp, vp, causal=causal, block_q=block_q, block_k=block_k,
-        scale=1.0 / (d ** 0.5),  # true head_dim, not the padded one
+    if causal and sq > sk:
+        # bottom-right alignment gives the leading sq - sk query rows zero
+        # attendable keys — a softmax over the empty set; reject instead of
+        # returning the ref oracle's arbitrary uniform-weight fallback
+        raise ValueError(
+            f"causal flash requires sq <= sk (bottom-right alignment), "
+            f"got sq={sq} > sk={sk}"
+        )
+    return _flash_attention_jit(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
         interpret=interpret,
     )
-    return out.reshape(b, h, sq_pad, d_pad)[:, :, :sq, :d]
+
 
 # Re-exported oracles so tests/benchmarks import one module.
 gram_matvec_ref = ref.gram_matvec_ref

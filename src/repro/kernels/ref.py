@@ -30,6 +30,74 @@ def dsag_update_ref(
     return new_c.astype(c.dtype), new_h
 
 
+def block_sub_pca_ref(x, Vb, starts, widths, pad_width: int):
+    """§3 PCA block subgradients, clip-gather jnp form (block_sub twin).
+
+    x: [n, d], Vb: [G, d, k], starts/widths: [G] -> [G, d, k].  The same
+    expression ``PCAProblem.sub_blocks`` evaluates (pre-batch-padding).
+    """
+    n = x.shape[0]
+    idx = jnp.clip(starts[:, None] - 1 + jnp.arange(pad_width)[None, :], 0, n - 1)
+    xg = x[idx]  # [G, pad, d]
+    mask = (jnp.arange(pad_width)[None, :] < widths[:, None]).astype(x.dtype)
+    xg = xg * mask[:, :, None]
+    return -(jnp.swapaxes(xg, 1, 2) @ (xg @ Vb))
+
+
+def block_sub_logreg_ref(x, y, Vb, starts, widths, pad_width: int):
+    """§3 logreg block subgradients, clip-gather jnp form (block_sub twin).
+
+    x: [n, d], y: [n], Vb: [G, d] -> [G, d].  The reduce-based
+    (batch-invariant) expression ``LogisticRegressionProblem.sub_blocks``
+    evaluates (pre-batch-padding).
+    """
+    n = x.shape[0]
+    idx = jnp.clip(starts[:, None] - 1 + jnp.arange(pad_width)[None, :], 0, n - 1)
+    xg = x[idx]  # [G, pad, d]
+    yg = y[idx] * (jnp.arange(pad_width)[None, :] < widths[:, None]).astype(y.dtype)
+    z = yg * jnp.sum(xg * Vb[:, None, :], axis=2)
+    s = jax.nn.sigmoid(-z)
+    return -jnp.sum(xg * (yg * s)[:, :, None], axis=1) / n
+
+
+def grid_cache_update_ref(
+    valid_r, slot_r, tag_r, vals_r, sums, values, iters, covered, rejected,
+    slot_width,
+):
+    """§5 grid-cache rank walk, pure-jnp form (cache_events twin).
+
+    Rank-ordered ``[S, R]`` event tables applied to ``[S, E, F]`` cache
+    state via the masked-scatter ``fori_loop`` the fused engine's XLA
+    path uses; returns ``(sums, values, iters, covered, rejected)``.
+    """
+    S, R = valid_r.shape
+    s_idx = jnp.arange(S)
+
+    def rank_body(j, state):
+        sums, values, iters, covered, rejected = state
+        valid = valid_r[:, j]
+        slot = slot_r[:, j]
+        tag = tag_r[:, j]
+        v = vals_r[:, j]
+        cur_it = iters[s_idx, slot]
+        active = cur_it >= 0
+        dom = active & (cur_it >= tag)
+        acc = valid & ~dom
+        rej = valid & dom
+        old = values[s_idx, slot]
+        delta = v - jnp.where(active[:, None], old, 0.0)
+        sums = jnp.where(acc[:, None], sums + delta, sums)
+        values = values.at[s_idx, slot].set(jnp.where(acc[:, None], v, old))
+        iters = iters.at[s_idx, slot].set(jnp.where(acc, tag, cur_it))
+        covered = covered + jnp.where(acc & ~active, slot_width[slot], 0)
+        rejected = rejected + rej.astype(rejected.dtype)
+        return sums, values, iters, covered, rejected
+
+    return jax.lax.fori_loop(
+        0, R, rank_body, (sums, values, iters, covered, rejected)
+    )
+
+
 def flash_attention_ref(
     q: jnp.ndarray,  # [b, h, sq, d]
     k: jnp.ndarray,  # [b, h, sk, d]

@@ -147,6 +147,31 @@ def make_convergence_payload():
                 "coded_over_dsag": 2.0,
             },
         },
+        "kernel_backend": {
+            "platform": "cpu",
+            "bitexact_pallas_vs_xla": True,
+            "max_rel_diff_pallas_vs_xla": 0.0,
+            "problems": {
+                "logreg": {
+                    "methods": {
+                        "dsag": {
+                            "median_final_subopt_xla": 0.1,
+                            "median_final_subopt_pallas": 0.1,
+                            "digest_xla": "aa11",
+                            "digest_pallas": "aa11",
+                        },
+                        "sag": {
+                            "median_final_subopt_xla": 0.2,
+                            "median_final_subopt_pallas": 0.2,
+                            "digest_xla": "bb22",
+                            "digest_pallas": "bb22",
+                        },
+                    },
+                    "ranking_xla": ["dsag", "sag"],
+                    "ranking_pallas": ["dsag", "sag"],
+                },
+            },
+        },
     }
 
 
@@ -258,6 +283,97 @@ def test_committed_churn_column_recipe_is_complete():
     assert set(CHURN_RECIPE) <= set(col["recipe"])
     assert col["bitexact_scan_vs_host"] is True
     assert col["ordering"]["ordering_dsag_sag_coded"] == 1.0
+
+
+def test_kernel_backend_bitexactness_loss_on_cpu_fails():
+    fresh = make_convergence_payload()
+    fresh["kernel_backend"]["bitexact_pallas_vs_xla"] = False
+    fresh["kernel_backend"]["max_rel_diff_pallas_vs_xla"] = 1e-7
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("kernel_backend" in f and "bit-exact" in f for f in failures)
+
+
+def test_kernel_backend_cross_platform_diff_is_tolerance_gated():
+    """On a non-cpu platform (real Pallas compile) a sub-tolerance
+    Pallas-vs-XLA diff warns; above tolerance it fails."""
+    fresh = make_convergence_payload()
+    kb = fresh["kernel_backend"]
+    kb["platform"] = "tpu"
+    kb["bitexact_pallas_vs_xla"] = False
+    kb["max_rel_diff_pallas_vs_xla"] = 1e-6
+    failures, warnings = compare_convergence(make_convergence_payload(), fresh)
+    assert failures == []
+    assert any("within" in w and "tolerance" in w for w in warnings)
+    kb["max_rel_diff_pallas_vs_xla"] = 0.5
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("exceeds tolerance" in f for f in failures)
+
+
+def test_kernel_backend_digest_change_fails_same_platform_only():
+    fresh = make_convergence_payload()
+    meth = fresh["kernel_backend"]["problems"]["logreg"]["methods"]
+    meth["dsag"]["digest_pallas"] = "deadbeef"
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any("digest changed" in f for f in failures)
+    # a rerun on a different platform cannot reproduce the bits: skipped
+    fresh["kernel_backend"]["platform"] = "tpu"
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert not any("digest changed" in f for f in failures)
+
+
+def test_kernel_backend_ranking_flip_fails():
+    fresh = make_convergence_payload()
+    fresh["kernel_backend"]["problems"]["logreg"]["ranking_pallas"] = [
+        "sag", "dsag",
+    ]
+    failures, _ = compare_convergence(make_convergence_payload(), fresh)
+    assert any(
+        "kernel_backend" in f and "ranking flipped" in f for f in failures
+    )
+
+
+def test_kernel_backend_subopt_drift_only_warns():
+    fresh = make_convergence_payload()
+    meth = fresh["kernel_backend"]["problems"]["logreg"]["methods"]
+    meth["sag"]["median_final_subopt_xla"] = 0.24  # +20%
+    # keep the digest consistent with "same bits" being violated elsewhere:
+    # drift alone (e.g. cross-platform rerun) must not fail
+    fresh["kernel_backend"]["platform"] = "tpu"
+    failures, warnings = compare_convergence(make_convergence_payload(), fresh)
+    assert failures == []
+    assert any("median_final_subopt" in w for w in warnings)
+
+
+def test_kernel_backend_column_rerun_refuses_unknown_regime():
+    from benchmarks.bench_regression import (
+        GridMismatch,
+        run_kernel_backend_column,
+    )
+
+    with pytest.raises(GridMismatch, match="unknown regime"):
+        run_kernel_backend_column({"regime": "made_up_regime"})
+
+
+def test_committed_kernel_backend_column_is_complete():
+    """The committed artifact's kernel_backend column must carry its full
+    recipe, per-backend digests for every method, and the bit-exact pin."""
+    import json
+    from pathlib import Path
+
+    from benchmarks.bench_regression import KERNEL_BACKEND_RECIPE
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_convergence.json"
+    committed = json.loads(path.read_text())
+    assert "kernel_backend" in committed
+    col = committed["kernel_backend"]
+    assert set(KERNEL_BACKEND_RECIPE) <= set(col["recipe"])
+    assert col["bitexact_pallas_vs_xla"] is True
+    assert col["max_rel_diff_pallas_vs_xla"] == 0.0
+    assert set(col["problems"]) == {"logreg", "pca"}
+    for pname, pcol in col["problems"].items():
+        for m, entry in pcol["methods"].items():
+            assert entry["digest_xla"] == entry["digest_pallas"], (pname, m)
+        assert pcol["ranking_xla"] == pcol["ranking_pallas"]
 
 
 def test_rerun_convergence_refuses_missing_recipe():
