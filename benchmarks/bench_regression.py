@@ -16,7 +16,11 @@ semantic change to an engine or the latency model.  The gate:
   per-backend pins (Pallas-vs-XLA bit-exactness on the artifact's
   platform, per-backend trajectory digests, per-backend method
   rankings; cross-platform the Pallas-vs-XLA diff is gated by a
-  relative tolerance instead);
+  relative tolerance instead), or the ``live_validation`` column's
+  sim-to-live pins (the *live* trainer's (mask, flush, evict) streams
+  must match the scalar simulator bit-for-bit on the shared trace, and
+  the measured wall-clock dsag-before-sag time-to-gap ordering under
+  injected stragglers must survive);
 * **warn** (exit 0) when speedup ratios drift by more than 15% — both
   the deterministic DSAG-over-baseline ratios and the wall-clock
   ``lb_scan`` scan-vs-host speedup (machine-dependent by nature, so a
@@ -255,6 +259,12 @@ def compare_convergence(committed: dict, fresh: dict) -> tuple[list[str], list[s
         kb_failures, kb_warnings = compare_kernel_backend_column(old_kb, new_kb)
         failures.extend(kb_failures)
         warnings.extend(kb_warnings)
+    old_lv = committed.get("live_validation")
+    new_lv = fresh.get("live_validation")
+    if old_lv is not None and new_lv is not None:
+        lv_failures, lv_warnings = compare_live_validation_column(old_lv, new_lv)
+        failures.extend(lv_failures)
+        warnings.extend(lv_warnings)
     return failures, warnings
 
 
@@ -557,6 +567,218 @@ def compare_churn_column(committed: dict, fresh: dict) -> tuple[list[str], list[
                 warnings.append(
                     f"churn: {key} drifted {drift:.0%} "
                     f"({old_o[key]:.2f} -> {new_o[key]:.2f})"
+                )
+    return failures, warnings
+
+
+#: every parameter of the live_validation column's run — stored inside the
+#: column itself so the gate rerun reproduces it without guessing.  margin
+#: is 0 so dsag and sag share masks (identical collection windows) and the
+#: comparison isolates the §5 stale-acceptance semantics; the §5.1 margin
+#: rule is pinned separately by the test suite.
+LIVE_VALIDATION_RECIPE = {
+    "problem": "logreg_higgs",
+    "num_samples": 512,
+    "n_workers": 8,
+    "w": 6,
+    "eta": 0.25,
+    "margin": 0.0,
+    "n_scenarios": 2,
+    "scenario": 0,
+    "num_iterations": 80,
+    "eval_every": 5,
+    "regime": "heavy_bursts",
+    "seed": 0,
+    "gap": 0.05,
+    #: real seconds slept per unit of virtual straggler time — large enough
+    #: that the dsag/sag collection-time difference dominates step compute
+    "time_scale": 25.0,
+}
+
+
+def run_live_validation_column(recipe: dict | None = None) -> dict:
+    """Run the *live* trainer under injected stragglers; validate it against
+    the scalar convergence engine on the same trace.
+
+    The sim-to-live gap, closed twice over:
+
+    * **streams**: the trainer's Tier-2 controller must log exactly the
+      (mask, flush, evict) step inputs the scalar simulator records for
+      the shared ``FleetTraces`` scenario (the cross-layer pin — fails the
+      gate if the live control plane drifts from §5/§6.3 semantics);
+    * **wall clock**: ``time_scale`` turns virtual straggler waits into
+      real sleeps, so the measured wall time-to-gap per method must
+      reproduce the simulator's *predicted* time-to-gap (drift warns) and
+      the paper's dsag-before-sag ordering must survive on real hardware
+      (a flip fails).
+    """
+    import numpy as np
+
+    from repro.cluster.simulator import MethodConfig
+    from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+    from repro.experiments.grid import DEFAULT_REGIMES
+    from repro.ft.validation import pin_streams
+    from repro.latency.model import make_heterogeneous_cluster, sample_fleet
+    from repro.launch.paper_jobs import paper_train_config
+    from repro.launch.train import Trainer, TrainerOptions
+
+    r = dict(LIVE_VALIDATION_RECIPE)
+    if recipe:
+        r.update(recipe)
+    if r["problem"] != "logreg_higgs":
+        raise GridMismatch(
+            f"live_validation recipe problem {r['problem']!r} is not "
+            "reproducible here"
+        )
+    regimes = {reg.name: reg for reg in DEFAULT_REGIMES}
+    if r["regime"] not in regimes:
+        raise GridMismatch(
+            f"unknown regime {r['regime']!r} in live_validation recipe"
+        )
+    regime = regimes[r["regime"]]
+    X, y = make_higgs_like(r["num_samples"], seed=r["seed"])
+    prob = LogisticRegressionProblem(X=X, y=y)
+    N, T = r["n_workers"], r["num_iterations"]
+    c_task = prob.compute_cost(1, max(prob.num_samples // N, 1))
+    cluster = make_heterogeneous_cluster(
+        N, seed=r["seed"] + 3, burst_rate=0.0, load_unit=c_task
+    )
+    traces = sample_fleet(
+        cluster,
+        r["n_scenarios"],
+        4 * T,
+        burst_rate=regime.rate,
+        burst_factor_mean=regime.factor_mean,
+        burst_duration_mean=regime.duration_mean,
+        seed=r["seed"] + 7,
+    )
+    methods: dict[str, dict] = {}
+    for name in ("dsag", "sag"):
+        cfg = MethodConfig(
+            name=name, w=r["w"], eta=r["eta"], margin=r["margin"],
+            subpartitions=1,
+        )
+        ctrl, sim, hist = pin_streams(
+            prob, cluster, traces, r["scenario"], cfg, T, seed=r["seed"]
+        )
+        tc = dataclasses.replace(
+            paper_train_config(r["eta"]), dsag_margin=r["margin"]
+        )
+        opts = TrainerOptions(
+            arch="logreg",
+            steps=T,
+            samples=r["num_samples"],
+            num_groups=N,
+            dsag_w=r["w"],
+            method=name,
+            traces=traces,
+            scenario=r["scenario"],
+            train_config=tc,
+            simulate_stragglers=False,
+            # the detector must not perturb the pin: persistent stragglers
+            # are the *subject* here, not failures
+            failure_max_misses=10**6,
+            time_scale=r["time_scale"],
+            eval_every=r["eval_every"],
+            log_every=10**6,
+            seed=r["seed"],
+        )
+        live = Trainer(opts).run()
+        streams_match = bool(
+            ctrl == sim
+            and np.array_equal(np.stack(live["mask_stream"]), sim.mask)
+            and np.array_equal(np.stack(live["flush_stream"]), sim.flush)
+            and np.array_equal(np.stack(live["evict_stream"]), sim.evict)
+        )
+        virtual_ttg = hist.time_to_gap(r["gap"])
+        measured = next(
+            (wall for (_s, wall, _v, g) in live["eval"] if g <= r["gap"]), None
+        )
+        methods[name] = {
+            "streams_match_simulator": streams_match,
+            "virtual_time_to_gap": (
+                float(virtual_ttg) if np.isfinite(virtual_ttg) else None
+            ),
+            "predicted_time_to_gap_s": (
+                float(virtual_ttg * r["time_scale"])
+                if np.isfinite(virtual_ttg)
+                else None
+            ),
+            "measured_wall_to_gap_s": (
+                float(measured) if measured is not None else None
+            ),
+            "final_gap_live": float(live["eval"][-1][3]),
+            "wall_seconds": float(live["wall_seconds"][0]),
+        }
+    d, s = methods["dsag"], methods["sag"]
+    ordering: dict = {"gap": r["gap"]}
+    if (
+        d["virtual_time_to_gap"] is not None
+        and s["virtual_time_to_gap"] is not None
+    ):
+        ordering["predicted_dsag_faster_than_sag"] = float(
+            d["virtual_time_to_gap"] <= s["virtual_time_to_gap"]
+        )
+    if (
+        d["measured_wall_to_gap_s"] is not None
+        and s["measured_wall_to_gap_s"] is not None
+    ):
+        ordering["live_dsag_faster_than_sag"] = float(
+            d["measured_wall_to_gap_s"] < s["measured_wall_to_gap_s"]
+        )
+        ordering["sag_over_dsag_wall"] = (
+            s["measured_wall_to_gap_s"] / d["measured_wall_to_gap_s"]
+        )
+    for name, m in methods.items():
+        if m["predicted_time_to_gap_s"] and m["measured_wall_to_gap_s"]:
+            m["measured_over_predicted"] = (
+                m["measured_wall_to_gap_s"] / m["predicted_time_to_gap_s"]
+            )
+    return {"recipe": r, "methods": methods, "ordering": ordering}
+
+
+def compare_live_validation_column(
+    committed: dict, fresh: dict
+) -> tuple[list[str], list[str]]:
+    """Diff the ``live_validation`` columns; returns (failures, warnings)."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    for name, m in fresh.get("methods", {}).items():
+        if not m.get("streams_match_simulator", False):
+            failures.append(
+                f"live_validation: {name} live trainer streams no longer "
+                "match the scalar simulator (sim-to-live pin broken)"
+            )
+        if m.get("measured_wall_to_gap_s") is None:
+            failures.append(
+                f"live_validation: live {name} run never reached the gap"
+            )
+    old_o, new_o = committed.get("ordering", {}), fresh.get("ordering", {})
+    # the deterministic (virtual) ordering and the measured wall-clock
+    # ordering must both survive — the latter is the paper's actual claim
+    for verdict in ("predicted_dsag_faster_than_sag", "live_dsag_faster_than_sag"):
+        if old_o.get(verdict) != new_o.get(verdict):
+            failures.append(
+                f"live_validation: {verdict} flipped "
+                f"{old_o.get(verdict)} -> {new_o.get(verdict)}"
+            )
+    os_, ns_ = old_o.get("sag_over_dsag_wall"), new_o.get("sag_over_dsag_wall")
+    if os_ and ns_ and os_ > 0:
+        drift = abs(ns_ / os_ - 1.0)
+        if drift > SPEEDUP_DRIFT_TOLERANCE:
+            warnings.append(
+                f"live_validation: sag_over_dsag_wall drifted {drift:.0%} "
+                f"({os_:.2f} -> {ns_:.2f}) (wall clock)"
+            )
+    for name, m in fresh.get("methods", {}).items():
+        om = committed.get("methods", {}).get(name, {})
+        ov, nv = om.get("measured_over_predicted"), m.get("measured_over_predicted")
+        if ov and nv and ov > 0:
+            drift = abs(nv / ov - 1.0)
+            if drift > SPEEDUP_DRIFT_TOLERANCE:
+                warnings.append(
+                    f"live_validation: {name} measured_over_predicted drifted "
+                    f"{drift:.0%} ({ov:.2f} -> {nv:.2f}) (wall clock)"
                 )
     return failures, warnings
 
@@ -992,6 +1214,10 @@ def rerun_convergence(committed: dict) -> dict:
         payload["kernel_backend"] = run_kernel_backend_column(
             committed["kernel_backend"].get("recipe")
         )
+    if "live_validation" in committed:
+        payload["live_validation"] = run_live_validation_column(
+            committed["live_validation"].get("recipe")
+        )
     return payload
 
 
@@ -1041,6 +1267,8 @@ def main(argv: list[str]) -> int:
                 scope += " + churn column"
             if "kernel_backend" in committed:
                 scope += " + kernel_backend column"
+            if "live_validation" in committed:
+                scope += " + live_validation column"
         else:
             fresh = rerun_grid(committed)
             failures, warnings = compare_sweep(committed, fresh)

@@ -269,7 +269,10 @@ def fig10_12_convergence_sweep() -> None:
     through the shard_map scenario mesh, bit-exact vs the single-device
     scan) and the kernel_backend column (both method grids under
     kernel_backend="xla" and "pallas", bit-exact with per-backend
-    digests); emits the BENCH_convergence.json artifact."""
+    digests) and the live_validation column (a real CPU logreg job
+    through the live trainer under injected stragglers, stream-pinned
+    and wall-clock-validated against the scalar simulator); emits the
+    BENCH_convergence.json artifact."""
     from repro.experiments import (
         convergence_payload,
         default_convergence_methods,
@@ -360,6 +363,15 @@ def fig10_12_convergence_sweep() -> None:
 
     kernel_backend_payload = run_kernel_backend_column()
 
+    # live_validation column: the sim-to-live gap — a real CPU logreg job
+    # through launch/train.py under injected stragglers, its (mask, flush,
+    # evict) streams pinned bit-for-bit against the scalar simulator on
+    # the same trace, and its measured wall-clock time-to-gap per method
+    # validated against the simulator's prediction
+    from benchmarks.bench_regression import run_live_validation_column
+
+    live_validation_payload = run_live_validation_column()
+
     payload = write_bench_convergence(
         out, "BENCH_convergence.json", gap=gap,
         scalar_seconds=extrapolated,
@@ -380,6 +392,7 @@ def fig10_12_convergence_sweep() -> None:
             "lb_scan": lb_payload,
             "churn": churn_payload,
             "kernel_backend": kernel_backend_payload,
+            "live_validation": live_validation_payload,
             # everything the regression gate needs to re-execute this grid
             # (benchmarks/bench_regression.py rerun_convergence)
             "recipe": {
@@ -427,6 +440,16 @@ def fig10_12_convergence_sweep() -> None:
         f"device_scaling={sharded_payload['device_scaling']:.2f};"
         f"sag_over_dsag={so['sag_over_dsag']:.2f};"
         f"ordering_dsag_sag_coded={bool(so['ordering_dsag_sag_coded'])}",
+    )
+    lv = live_validation_payload
+    lvo = lv["ordering"]
+    record(
+        "fig10_12_live_validation",
+        lv["methods"]["dsag"]["wall_seconds"] * 1e6,
+        f"streams_match={all(m['streams_match_simulator'] for m in lv['methods'].values())};"
+        f"live_dsag_faster_than_sag={bool(lvo.get('live_dsag_faster_than_sag', 0))};"
+        f"sag_over_dsag_wall={lvo.get('sag_over_dsag_wall', float('nan')):.2f};"
+        f"dsag_measured_over_predicted={lv['methods']['dsag'].get('measured_over_predicted', float('nan')):.2f}",
     )
     record(
         "fig10_12_lb_scan",

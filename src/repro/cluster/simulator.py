@@ -212,6 +212,16 @@ class RunHistory:
     repartition_events: list[float]  # sim times at which a new p was published
     evictions: int = 0
     rejected_stale: int = 0
+    #: [T, N] bool coordinator decision streams — the Tier-2 pin surface.
+    #: mask: worker delivered a fresh (titer == t) result within iteration
+    #: t's collection window; flush: a stale result was accepted into the
+    #: gradient cache; evict: a death cleared the worker's cache entry.
+    #: These are the exact step inputs the live ``dsag_update`` would see,
+    #: asserted equal to ``DeadlineController.step_inputs`` streams by
+    #: ``tests/test_live_validation.py``.
+    mask_stream: np.ndarray | None = None
+    flush_stream: np.ndarray | None = None
+    evict_stream: np.ndarray | None = None
 
     def time_to_gap(self, gap: float) -> float:
         """First sim time at which suboptimality <= gap (inf if never)."""
@@ -398,6 +408,9 @@ class TrainingSimulator:
         subopt = np.full(num_iterations, np.nan)
         fresh_counts = np.zeros(num_iterations, dtype=np.int64)
         lat_matrix = np.full((num_iterations, N), np.nan)
+        mask_stream = np.zeros((num_iterations, N), dtype=bool)
+        flush_stream = np.zeros((num_iterations, N), dtype=bool)
+        evict_stream = np.zeros((num_iterations, N), dtype=bool)
         repartition_events: list[float] = []
         event_ptr = 0
         current_p = np.full(N, cfg.subpartitions, dtype=np.int64)
@@ -436,7 +449,11 @@ class TrainingSimulator:
                             # canonical clear order: worker index ascending ==
                             # interval-start ascending (base ranges are
                             # disjoint and worker-ordered); idempotent
-                            cache.clear_range(wk.sub.base_start, wk.sub.base_stop)
+                            removed = cache.clear_range(
+                                wk.sub.base_start, wk.sub.base_stop
+                            )
+                            if removed:
+                                evict_stream[t, i] = True
                 w_eff = min(w_wait, int(alive.sum()))
 
             task = _Task(iteration=t, iterate=V, assigned_at=now)
@@ -501,10 +518,13 @@ class TrainingSimulator:
                 is_fresh = titer == t
                 if cfg.uses_cache:
                     if is_fresh or cfg.accepts_stale:
-                        cache.insert(interval[0], interval[1], titer, value)
+                        inserted = cache.insert(interval[0], interval[1], titer, value)
+                        if inserted and not is_fresh:
+                            flush_stream[t, widx] = True  # §5 stale flush
                 elif is_fresh:  # gd / sgd / coded take fresh results only
                     fresh_values.append((interval, value))
                 if is_fresh:
+                    mask_stream[t, widx] = True
                     fresh += 1
                     if fresh == w_eff:
                         if cfg.uses_margin and cfg.margin > 0:
@@ -563,6 +583,9 @@ class TrainingSimulator:
             repartition_events=repartition_events,
             evictions=cache.evictions if cache else 0,
             rejected_stale=cache.rejected_stale if cache else 0,
+            mask_stream=mask_stream,
+            flush_stream=flush_stream,
+            evict_stream=evict_stream,
         )
 
     def _run_load_balancer(

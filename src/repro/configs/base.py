@@ -118,7 +118,7 @@ class TrainConfig:
     dsag: bool = True
     dsag_groups: str = "dp"  # dp | pod | zero | none  (partition granularity)
     dsag_num_groups: int = 4  # group count for the "zero" layout
-    dsag_cache_dtype: str = "bfloat16"  # bfloat16 | int8
+    dsag_cache_dtype: str = "bfloat16"  # bfloat16 | int8 | float32
     dsag_cache_layout: str = "group"  # group (P over dp axes) | zero (dims over all)
     dsag_cache_placement: str = "device"  # device | host (host is TPU-only)
     dsag_margin: float = 0.02

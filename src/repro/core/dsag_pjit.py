@@ -97,7 +97,10 @@ def _cache_like(param_abstract, gs: GroupSpec, dtype: str):
                 scale=jnp.zeros(shape[:-1] + (nblocks,), jnp.bfloat16),
                 block=block,
             )
-        return jnp.zeros(shape, jnp.bfloat16)
+        # float32 slots: the live paper-problem path (launch/paper_jobs.py)
+        # validates its trajectory against the fp64/fp32 simulator engines,
+        # where bf16 cache rounding would swamp the comparison tolerance
+        return jnp.zeros(shape, jnp.float32 if dtype == "float32" else jnp.bfloat16)
 
     return jax.tree.map(leaf, param_abstract)
 
@@ -117,7 +120,7 @@ def _store(x: jnp.ndarray, like) -> Any:
     """Encode a [P, ...] fp32 tensor into the cache representation."""
     if isinstance(like, Quantized):
         return quantize(x, block=like.block)
-    return x.astype(jnp.bfloat16)
+    return x.astype(like.dtype)
 
 
 def _load(c) -> jnp.ndarray:
@@ -198,6 +201,9 @@ def dsag_update(dsag, group_grads, mask, flush, evict=None):
     # after a fresh arrival nothing is in flight; after flush the current
     # step's (masked-out) gradient is in flight again
     new_pending_valid = jnp.where(mask, False, new_pending_valid)
+    # an evicted (failed) group's in-flight gradient died with it: a flush
+    # after the group rejoins must not reinsert pre-failure state into H
+    new_pending_valid = jnp.logical_and(new_pending_valid, ~evict)
 
     xi = jnp.clip(new_filled.astype(jnp.float32).mean(), 1e-6, 1.0)
     h_hat = jax.tree.map(lambda h: h / (xi * p), new_h)
@@ -222,11 +228,15 @@ def make_train_step(
     gs: GroupSpec,
     mesh: Mesh | None = None,
     param_specs: Any | None = None,
+    project_fn: Callable[[Any], Any] | None = None,
 ):
     """Build ``step(state, batch, mask, flush) -> (state, metrics)``.
 
     ``loss_fn(params, batch)`` is the per-group mean loss; ``batch`` arrives
-    with a leading group dim [P, ...] on every leaf."""
+    with a leading group dim [P, ...] on every leaf.  ``project_fn``, when
+    given, re-projects the updated parameters onto the feasible set after
+    the optimizer step (the paper's PCA orthonormalization — projected
+    subgradient descent, problems.py ``project``)."""
     opt = make_optimizer(tc)
 
     def constrain_grads(grads):
@@ -289,6 +299,8 @@ def make_train_step(
 
         updates, new_opt = opt.update(h_hat, state["opt"], params)
         new_params = apply_updates(params, updates)
+        if project_fn is not None:
+            new_params = project_fn(new_params)
         new_state = {
             "params": new_params,
             "opt": new_opt,

@@ -1,5 +1,27 @@
 """Fault tolerance: failure detection, deadline-mask selection, elastic rescale."""
 
-from repro.ft.runtime import DeadlineController, FailureDetector, elastic_remap_groups
+from repro.ft.runtime import (
+    DeadlineController,
+    FailureDetector,
+    StepInputs,
+    elastic_remap_groups,
+)
+from repro.ft.validation import (
+    ControlStreams,
+    controller_streams,
+    group_loads,
+    pin_streams,
+    trace_latency_fn,
+)
 
-__all__ = ["DeadlineController", "FailureDetector", "elastic_remap_groups"]
+__all__ = [
+    "ControlStreams",
+    "DeadlineController",
+    "FailureDetector",
+    "StepInputs",
+    "controller_streams",
+    "elastic_remap_groups",
+    "group_loads",
+    "pin_streams",
+    "trace_latency_fn",
+]

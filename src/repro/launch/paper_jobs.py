@@ -1,0 +1,148 @@
+"""Paper problems (§2/§7) packaged for the live two-tier trainer.
+
+``launch/train.py`` drives the compiled Tier-1 ``dsag_update`` through a
+``loss_fn(params, batch)`` with a leading group dim; this module adapts
+:class:`~repro.core.problems.LogisticRegressionProblem` and
+:class:`~repro.core.problems.PCAProblem` to that interface so a real CPU
+logreg/PCA job can run through the *live* system and be validated against
+the convergence engines (the ``live_validation`` BENCH column).
+
+Group g owns the paper's partition ``[p_start(n, G, g+1), p_stop(...)]``
+and its per-group loss is scaled so that the mean over groups equals the
+full objective:
+
+    logreg:  L_g(V) = G/n · Σ_{i∈g} log(1 + e^{-y_i x_i·V}) + λ/2 ‖V‖²
+    pca:     L_g(V) = -G/2 · ‖X_g V‖²_F + 1/2 ‖V‖²_F
+
+so each group gradient is ``G·(block subgradient) + (regularizer grad)``
+— exactly G times the scalar simulator's cached task value plus the
+regularizer, making the Tier-1 estimate Ĥ = H/(ξG) track the simulator's
+``cache.sum/ξ + regularizer_grad`` (up to regularizer staleness on
+non-fresh entries and float-accumulation order).  PCA additionally
+re-projects onto the Stiefel manifold after each optimizer step
+(``project_fn``), matching the paper's projected subgradient method.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core.problems import (
+    FiniteSumProblem,
+    LogisticRegressionProblem,
+    PCAProblem,
+    make_genomics_like_matrix,
+    make_higgs_like,
+)
+from repro.lb.partitioner import p_start, p_stop
+
+PAPER_ARCHES = ("logreg", "pca")
+
+
+def paper_train_config(eta: float, *, dsag: bool = True) -> TrainConfig:
+    """The TrainConfig under which the live step is plain ``V - η·Ĥ``.
+
+    The model zoo's defaults (momentum, weight decay, grad clipping,
+    bf16 cache) are all *off* so the Tier-1 update matches the
+    simulator's iterate rule exactly.
+    """
+    return TrainConfig(
+        dsag=dsag,
+        optimizer="sgd",
+        learning_rate=eta,
+        beta1=0.0,  # make_optimizer maps beta1 -> sgd momentum
+        weight_decay=0.0,
+        grad_clip=0.0,
+        dsag_cache_dtype="float32",
+    )
+
+
+@dataclasses.dataclass
+class PaperJob:
+    """One paper problem wired for ``launch/train.py``.
+
+    ``num_groups`` must divide ``num_samples`` (equal partitions — the
+    regime of the live trainer and of the paper's §7 experiments).
+    """
+
+    problem: FiniteSumProblem
+    num_groups: int
+    name: str  # logreg | pca
+
+    def __post_init__(self):
+        n = self.problem.num_samples
+        G = self.num_groups
+        if n % G:
+            raise ValueError(f"{n} samples not divisible by {G} groups")
+        bounds = [(p_start(n, G, i), p_stop(n, G, i)) for i in range(1, G + 1)]
+        # 1-based inclusive -> numpy slices; equal widths by divisibility
+        self._X = jnp.asarray(
+            np.stack([np.asarray(self.problem.X)[s - 1 : e] for s, e in bounds])
+        )
+        if self.name == "logreg":
+            self._y = jnp.asarray(
+                np.stack([np.asarray(self.problem.y)[s - 1 : e] for s, e in bounds])
+            )
+        self.loads = np.array(
+            [self.problem.compute_cost(s, e) for s, e in bounds], dtype=np.float64
+        )
+
+    # -- the live trainer's model interface --------------------------------
+    def init_params(self, seed: int) -> jnp.ndarray:
+        return jnp.asarray(self.problem.init(seed), dtype=jnp.float32)
+
+    def loss_fn(self, params, batch) -> jnp.ndarray:
+        """Per-group loss (vmapped over the leading group dim by Tier 1)."""
+        n = self.problem.num_samples
+        G = self.num_groups
+        if self.name == "logreg":
+            z = batch["y"] * jnp.sum(batch["X"] * params[None, :], axis=1)
+            data = (G / n) * jnp.sum(jnp.logaddexp(0.0, -z))
+            lam = self.problem.lam
+            return data + 0.5 * lam * jnp.sum(params * params)
+        xv = batch["X"] @ params  # [m, k]
+        return -0.5 * G * jnp.sum(xv * xv) + 0.5 * jnp.sum(params * params)
+
+    def project_fn(self, params):
+        """Stiefel re-projection after the optimizer step (PCA only)."""
+        if self.name != "pca":
+            return params
+        q, r = jnp.linalg.qr(params)
+        diag = jnp.diagonal(r, axis1=-2, axis2=-1)
+        return q * jnp.sign(diag)[..., None, :]
+
+    def batch_iterator(self) -> Iterator[dict[str, Any]]:
+        """Full-partition batches: every step re-evaluates group g on its
+        whole sample range, like the simulator's subpartitions=1 workers."""
+        batch = {"X": self._X}
+        if self.name == "logreg":
+            batch["y"] = self._y
+        while True:
+            yield batch
+
+    def suboptimality(self, params) -> float:
+        return self.problem.suboptimality(np.asarray(params, dtype=np.float64))
+
+
+def make_paper_job(
+    arch: str, num_groups: int, *, samples: int = 1024, seed: int = 0
+) -> PaperJob:
+    """Build the CPU-scale live job for ``--arch logreg`` / ``--arch pca``."""
+    if arch == "logreg":
+        X, y = make_higgs_like(samples, seed=seed)
+        return PaperJob(
+            problem=LogisticRegressionProblem(X=X, y=y),
+            num_groups=num_groups,
+            name="logreg",
+        )
+    if arch == "pca":
+        X = make_genomics_like_matrix(samples, 64, seed=seed)
+        return PaperJob(
+            problem=PCAProblem(X=X), num_groups=num_groups, name="pca"
+        )
+    raise ValueError(f"unknown paper arch {arch!r}; expected one of {PAPER_ARCHES}")

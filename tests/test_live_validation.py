@@ -1,0 +1,218 @@
+"""The sim-to-live cross-layer pin.
+
+For one shared ``FleetTraces`` scenario, the Tier-2
+:class:`~repro.ft.runtime.DeadlineController` must produce the *same*
+(mask, flush, evict) step-input streams as the scalar
+:class:`~repro.cluster.simulator.TrainingSimulator` — bit-for-bit, at
+identical virtual times.  If these drift, the live trainer is running
+different §5/§5.1/§6.3 semantics than the engines every other test pins.
+
+Also covers the flush/evict/rejoin interplay in the compiled Tier-1
+``dsag_update``: an evicted group that rejoins and then receives a flush
+must not reinsert its pre-failure pending gradient into H.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import MethodConfig
+from repro.configs import TrainConfig
+from repro.core.dsag_pjit import GroupSpec, dsag_update, init_dsag_state
+from repro.core.problems import LogisticRegressionProblem, make_higgs_like
+from repro.ft.validation import controller_streams, group_loads, pin_streams
+from repro.latency.model import (
+    ChurnSchedule,
+    make_heterogeneous_cluster,
+    sample_fleet,
+)
+
+N = 8
+STEPS = 30
+
+
+@pytest.fixture(scope="module")
+def setup():
+    X, y = make_higgs_like(512, seed=0)
+    prob = LogisticRegressionProblem(X=X, y=y)
+    c_task = prob.compute_cost(1, max(prob.num_samples // N, 1))
+    cluster = make_heterogeneous_cluster(N, seed=3, burst_rate=0.0, load_unit=c_task)
+    traces = sample_fleet(cluster, 2, 800, seed=7)
+    return prob, cluster, traces
+
+
+def method(name, margin=0.02):
+    return MethodConfig(name=name, w=6, eta=0.25, margin=margin, subpartitions=1)
+
+
+class TestControllerSimulatorPin:
+    @pytest.mark.parametrize("name,margin", [("dsag", 0.02), ("dsag", 0.0), ("sag", 0.02)])
+    def test_streams_match_bit_exactly(self, setup, name, margin):
+        prob, cluster, traces = setup
+        for scenario in range(traces.num_scenarios):
+            ctrl, sim, hist = pin_streams(
+                prob, cluster, traces, scenario, method(name, margin), STEPS
+            )
+            assert ctrl == sim, ctrl.mismatch_summary(sim)
+            # identical event machines -> identical virtual step times
+            np.testing.assert_array_equal(ctrl.times, sim.times)
+
+    def test_dsag_streams_contain_real_straggling(self, setup):
+        """The pin is vacuous if nothing ever misses: with w=6 of 8, two
+        groups per step are outside the wait set, so misses and flushes
+        must actually occur in the trace."""
+        prob, cluster, traces = setup
+        ctrl, sim, hist = pin_streams(prob, cluster, traces, 0, method("dsag"), STEPS)
+        assert not ctrl.mask.all(), "every group always fresh: no straggling"
+        assert ctrl.flush.any(), "no stale arrivals: margin rule untested"
+
+    def test_streams_match_under_churn(self, setup):
+        """Worker death (evict) and rejoin replay identically through the
+        controller's generation-bump machinery."""
+        prob, cluster, traces0 = setup
+        base = controller_streams(
+            traces0, 0, w=6, num_iterations=STEPS, loads=group_loads(prob, N)
+        )
+        # kill workers 2 and 5 a third of the way in; rejoin 2 later
+        t_die = float(base.times[STEPS // 3])
+        t_rejoin = float(base.times[2 * STEPS // 3])
+        alive = np.ones((3, N), dtype=bool)
+        alive[1, [2, 5]] = False
+        alive[2, 5] = False
+        churn = ChurnSchedule(
+            times=np.array([t_die, t_rejoin]),
+            slowdown=np.tile(traces0.slowdown, (3, 1)),
+            alive=alive,
+        )
+        traces = sample_fleet(
+            make_heterogeneous_cluster(
+                N,
+                seed=3,
+                burst_rate=0.0,
+                load_unit=prob.compute_cost(1, max(prob.num_samples // N, 1)),
+            ),
+            2,
+            800,
+            seed=7,
+        ).with_churn(churn)
+        for name in ("dsag", "sag"):
+            ctrl, sim, hist = pin_streams(
+                prob, cluster, traces, 0, method(name), STEPS
+            )
+            assert ctrl == sim, ctrl.mismatch_summary(sim)
+            np.testing.assert_array_equal(ctrl.times, sim.times)
+            assert ctrl.evict.sum() == 2  # both deaths cleared a cache slot
+
+    def test_live_trainer_observes_the_pinned_streams(self, setup):
+        """End to end: launch/train.py on a paper problem, replaying the
+        same trace, logs exactly the simulator's (mask, flush, evict)."""
+        from repro.launch.paper_jobs import paper_train_config
+        from repro.launch.train import Trainer, TrainerOptions
+
+        prob, cluster, traces = setup
+        cfg = method("dsag")
+        ctrl, sim, hist = pin_streams(prob, cluster, traces, 1, cfg, 20)
+        opts = TrainerOptions(
+            arch="logreg",
+            steps=20,
+            samples=512,
+            num_groups=N,
+            dsag_w=6,
+            method="dsag",
+            traces=traces,
+            scenario=1,
+            train_config=paper_train_config(0.25),
+            simulate_stragglers=False,
+            failure_max_misses=10_000,  # detector must not perturb the pin
+            log_every=100,
+        )
+        live = Trainer(opts).run()
+        np.testing.assert_array_equal(np.stack(live["mask_stream"]), sim.mask[:20])
+        np.testing.assert_array_equal(np.stack(live["flush_stream"]), sim.flush[:20])
+        np.testing.assert_array_equal(np.stack(live["evict_stream"]), sim.evict[:20])
+        # and the live loss actually went down while straggled
+        assert live["loss"][-1] < live["loss"][0]
+
+
+class TestFlushEvictRejoinInterplay:
+    """Tier-1 ``dsag_update`` through a fail -> rejoin -> flush sequence."""
+
+    def _setup(self, P=4, d=6):
+        gs = GroupSpec(P, ())
+        tc = TrainConfig(dsag=True, dsag_cache_dtype="float32")
+        dsag = init_dsag_state(jnp.zeros((d,), jnp.float32), gs, tc)
+        rng = np.random.default_rng(0)
+        grads = [
+            jnp.asarray(rng.normal(size=(P, d)).astype(np.float32)) for _ in range(5)
+        ]
+        return dsag, grads, P
+
+    @staticmethod
+    def _check_h_invariant(dsag):
+        np.testing.assert_allclose(
+            np.asarray(dsag["h"]),
+            np.asarray(dsag["cache"]).astype(np.float32).sum(axis=0),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+    def test_rejoin_flush_does_not_reinsert_prefailure_pending(self):
+        dsag, g, P = self._setup()
+        ones = jnp.ones(P, bool)
+        zeros = jnp.zeros(P, bool)
+        e0 = jnp.array([True, False, False, False])
+        m_no0 = jnp.array([False, True, True, True])
+
+        # step 1: all fresh — cache filled, xi = 1
+        dsag, _, xi = dsag_update(dsag, g[0], ones, zeros)
+        assert float(xi) == 1.0
+        self._check_h_invariant(dsag)
+
+        # step 2: group 0 misses; its gradient g[1][0] parks in pending
+        dsag, _, xi = dsag_update(dsag, g[1], m_no0, zeros)
+        assert bool(dsag["pending_valid"][0])
+        assert float(xi) == 1.0  # stale cache entry still counts (§5)
+        self._check_h_invariant(dsag)
+
+        # step 3: group 0 fails -> evicted.  Its cache entry leaves H, its
+        # in-flight pending gradient died with the group.
+        dsag, _, xi = dsag_update(dsag, g[2], m_no0, zeros, evict=e0)
+        assert not bool(dsag["filled"][0])
+        assert not bool(dsag["pending_valid"][0])  # the satellite-4 fix
+        np.testing.assert_array_equal(np.asarray(dsag["cache"])[0], 0.0)
+        assert float(xi) == pytest.approx(0.75)
+        self._check_h_invariant(dsag)
+        h_after_evict = np.asarray(dsag["h"]).copy()
+
+        # step 4: group 0 rejoined; a (spurious) flush arrives before any
+        # fresh result.  Pre-fix this reinserted g[1][0] into H.
+        flush0 = jnp.array([True, False, False, False])
+        dsag, _, xi = dsag_update(dsag, g[3], m_no0, flush0)
+        assert float(xi) == pytest.approx(0.75)  # nothing arrived for group 0
+        np.testing.assert_array_equal(np.asarray(dsag["cache"])[0], 0.0)
+        # H unchanged for group 0's slice: only groups 1..3 updated it
+        self._check_h_invariant(dsag)
+        assert not np.allclose(np.asarray(dsag["h"]), h_after_evict)  # others moved
+
+        # step 5: a real fresh result refills the slot; coverage recovers
+        dsag, _, xi = dsag_update(dsag, g[4], ones, zeros)
+        assert float(xi) == 1.0
+        assert bool(dsag["filled"][0])
+        self._check_h_invariant(dsag)
+
+    def test_evict_clears_pending_even_with_simultaneous_flush(self):
+        """Tier-2 race: eviction and a flush bit in the same step — the
+        eviction wins (mask/flush are zeroed for evicted groups and the
+        pending slot is invalidated)."""
+        dsag, g, P = self._setup()
+        ones = jnp.ones(P, bool)
+        zeros = jnp.zeros(P, bool)
+        dsag, _, _ = dsag_update(dsag, g[0], ones, zeros)
+        m_no0 = jnp.array([False, True, True, True])
+        dsag, _, _ = dsag_update(dsag, g[1], m_no0, zeros)
+        both0 = jnp.array([True, False, False, False])
+        dsag, _, xi = dsag_update(dsag, g[2], m_no0, both0, evict=both0)
+        np.testing.assert_array_equal(np.asarray(dsag["cache"])[0], 0.0)
+        assert not bool(dsag["pending_valid"][0])
+        assert float(xi) == pytest.approx(0.75)
+        self._check_h_invariant(dsag)
